@@ -1,0 +1,49 @@
+"""Shared benchmark scaffolding: the paper's 50-node MLR test bed."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology
+from repro.data import classification_dataset, node_partitioned_batches
+from repro.models import vision_small
+
+N_NODES = 50
+N_FEATURES = 784          # MNIST-shaped
+N_CLASSES = 10
+N_TRAIN = 10_000
+BATCH_PER_NODE = 16
+
+
+def make_mlr_testbed(seed: int = 0, n_train: int = N_TRAIN):
+    """Paper §5 setup: ER(50, 0.35) graph + MLR on MNIST-shaped data."""
+    topo = topology.erdos_renyi(N_NODES, 0.35, seed=seed)
+    (x_tr, y_tr), (x_te, y_te) = classification_dataset(
+        N_FEATURES, N_CLASSES, n_train, 2000, seed=seed)
+    params0 = vision_small.mlr_init(jax.random.PRNGKey(seed))
+    params_stack = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (N_NODES,) + p.shape), params0)
+    grad_fn = vision_small.make_stacked_grad_fn(vision_small.mlr_apply)
+    eval_fn = vision_small.make_eval_fn(vision_small.mlr_apply,
+                                        jnp.asarray(x_te), jnp.asarray(y_te))
+    batches = node_partitioned_batches(x_tr, y_tr, N_NODES, BATCH_PER_NODE,
+                                       seed=seed)
+    m_local = n_train // N_NODES
+    return topo, params_stack, grad_fn, eval_fn, batches, m_local
+
+
+def timeit_us(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

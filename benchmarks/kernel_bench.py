@@ -1,0 +1,66 @@
+"""Kernel micro-benchmarks (CPU interpret mode vs XLA reference).
+
+Wall time on this container is NOT TPU-indicative (interpret mode runs
+the kernel body in Python); the derived column reports the structural
+quantities that matter for the TPU roofline: bytes moved per call and
+the fusion factor (HBM passes saved vs the unfused op chain).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels.flash_attn.ops import flash_attention
+from repro.kernels.sdm_update import ref as sdm_ref
+from repro.kernels.sdm_update.sdm_update import LANE, sdm_update_pallas
+
+
+def run():
+    # sdm_update: 7 input + 3 output tensors, one pass each = 10 tensor
+    # touches fused; the unfused chain touches ~22 (clip r/w, noise add,
+    # mixing axpy chain, mask, scale, 3 state updates).
+    rows = 64
+    rng = np.random.default_rng(0)
+    shape = (rows, LANE)
+    f = lambda: jnp.asarray(rng.normal(size=shape), jnp.float32)
+    bits = lambda: jnp.asarray(rng.integers(0, 2**32, size=shape,
+                                            dtype=np.uint32))
+    ops = (f(), f(), f(), f(), bits(), bits(), bits())
+    kw = dict(p=0.25, theta=0.4, gamma=0.05, sigma=0.7, clip_c=1.5,
+              self_w=1.0 / 3.0)
+
+    us_ref = common.timeit_us(
+        jax.jit(lambda *a: sdm_ref.sdm_update_ref(*a, **kw)), *ops, iters=50)
+    bytes_moved = 10 * rows * LANE * 4
+    common.emit("sdm_update_xla_ref", us_ref,
+                f"bytes/call={bytes_moved};fused_tensor_touches=10_vs_22")
+    us_k = common.timeit_us(
+        lambda *a: sdm_update_pallas(*a, block_rows=32, interpret=True, **kw),
+        *ops, iters=3)
+    common.emit("sdm_update_pallas_interpret", us_k,
+                "interpret-mode;correctness-path-only")
+
+    # flash attention: streaming (block_q x block_k) tiles vs dense scores.
+    b, s, h, dh = 1, 256, 4, 64
+    q = f2 = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    us_ref = common.timeit_us(
+        jax.jit(lambda q, k, v: flash_attention(q, k, v, use_kernel=False)),
+        q, k, v, iters=50)
+    dense_bytes = b * h * s * s * 4
+    flash_vmem = 128 * 128 * 4
+    common.emit("flash_attn_xla_ref", us_ref,
+                f"dense_scores_bytes={dense_bytes};"
+                f"flash_tile_bytes={flash_vmem}")
+    us_k = common.timeit_us(
+        lambda q, k, v: flash_attention(q, k, v, use_kernel=True,
+                                        interpret=True), q, k, v, iters=2)
+    common.emit("flash_attn_pallas_interpret", us_k,
+                "interpret-mode;correctness-path-only")
+
+
+if __name__ == "__main__":
+    run()

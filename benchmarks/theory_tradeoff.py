@@ -1,0 +1,54 @@
+"""Theory benchmarks: Theorem 4's O(m^4) budget scaling (2 orders above the
+O(m^2) prior art), Proposition 5's 1/p^2 gap for the reversed design, and
+Lemma 1's four-term bound evaluated on the experimental topology.
+"""
+from __future__ import annotations
+
+import math
+
+from benchmarks import common
+from repro.core import privacy, theory, topology
+
+
+def run():
+    topo = topology.erdos_renyi(50, 0.35, seed=0)
+
+    # Theorem 4: T_max(m) ~ m^4.
+    ms = [100, 200, 400, 800]
+    ts = [privacy.max_iterations(G=5.0, m=m, p=0.2, eps=1.0) for m in ms]
+    ratios = [ts[i + 1] / ts[i] for i in range(len(ts) - 1)]
+    assert all(abs(r - 16.0) < 0.5 for r in ratios), ratios
+
+    # Proposition 5: reversed design pays 1/p^2.
+    gaps = []
+    for p in (0.1, 0.2, 0.5):
+        params = privacy.PrivacyParams(G=5.0, m=500, tau=1 / 500, p=p,
+                                       sigma=2.0)
+        sdm = privacy.epsilon_sdm(params, 1000, 0.5) - 0.25
+        alt = privacy.epsilon_alternative(params, 1000, 0.5) - 0.25
+        gaps.append(alt / sdm)
+        assert abs(alt / sdm - 1.0 / p ** 2) < 1e-6
+
+    # Lemma 1 terms at the experimental operating point.
+    x = theory.BoundInputs(
+        n=50, m=200, d=7850, p=0.2,
+        theta=min(0.55, 0.9 * theory.theta_upper_bound(
+            0.2, topo.lambda_n, 0.05, 1.0)),
+        gamma=0.05, beta=topo.beta, lambda_n=topo.lambda_n, sigma=1.0)
+    terms = theory.lemma1_terms(x, T=10_000)
+    dominant = max(terms, key=terms.get)
+
+    # Corollary 3's rate decreases in T.
+    r1, r2 = theory.corollary3_rate(50, 10_000), theory.corollary3_rate(50, 100_000)
+    assert r2 < r1
+
+    derived = (f"m4_ratios={[round(r, 2) for r in ratios]};"
+               f"p2_gaps={[round(g, 1) for g in gaps]};"
+               f"lemma1_dominant={dominant};"
+               f"terms=" + ",".join(f"{k}:{v:.3e}" for k, v in terms.items()))
+    common.emit("theory_tradeoff", 0.0, derived)
+    return terms
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,84 @@
+"""End-to-end driver: train a ~100M-param transformer with SDM-DSGD.
+
+A gemma2-family model (12 layers, d_model=512 -> ~104M params incl.
+embeddings) trains for a few hundred steps on the synthetic token stream
+across 4 simulated edge nodes (ring gossip, sparsified differentials,
+Gaussian masking), with loss dropping well below the unigram floor.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300    # full run
+  PYTHONPATH=src python examples/train_lm.py --steps 20     # quick look
+"""
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+
+def _parse_args():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--batch-per-node", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=12)
+    return ap.parse_args()
+
+
+# device-count faking must precede the jax import
+_ARGS = _parse_args()
+os.environ.setdefault(
+    "XLA_FLAGS", f"--xla_force_host_platform_device_count={_ARGS.nodes}")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import gemma2_2b  # noqa: E402
+from repro.core.sdm_dsgd import SDMConfig  # noqa: E402
+from repro.data import TokenStream  # noqa: E402
+from repro.launch.mesh import make_mesh_by_name  # noqa: E402
+from repro.train import steps as steps_mod  # noqa: E402
+
+
+def main() -> None:
+    args = _ARGS
+
+    cfg = dataclasses.replace(
+        gemma2_2b.config(), name="gemma2-100m",
+        n_layers=args.layers, d_model=args.d_model, n_heads=8, n_kv_heads=4,
+        head_dim=64, d_ff=4 * args.d_model, vocab_size=32_768,
+        sliding_window=128, attn_chunk_q=None)
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name}  params={n_params / 1e6:.1f}M  "
+          f"layers={cfg.n_layers} d={cfg.d_model}")
+
+    mesh = make_mesh_by_name(str(args.nodes))  # nodes-only mesh on CPU
+    tc = steps_mod.DistributedTrainConfig(
+        model=cfg,
+        sdm=SDMConfig(p=0.25, theta=0.5, gamma=0.5, sigma=0.0, clip_c=1.0),
+        algorithm="sdm_dsgd", param_dtype=jnp.float32)
+
+    state = steps_mod.init_distributed_state(tc, mesh, jax.random.PRNGKey(0))
+    step_fn = jax.jit(steps_mod.make_distributed_train(tc, mesh))
+    stream = TokenStream(vocab_size=cfg.vocab_size,
+                         batch=args.nodes * args.batch_per_node,
+                         seq_len=args.seq, seed=0)
+
+    losses = []
+    t_start = time.time()
+    for t in range(args.steps):
+        tokens, labels = stream.batch_at(t)
+        t0 = time.time()
+        state, loss = step_fn(state, jnp.asarray(tokens), jnp.asarray(labels))
+        losses.append(float(loss))
+        if t % 10 == 0 or t == args.steps - 1:
+            print(f"step {t:4d} loss {losses[-1]:.4f} "
+                  f"({time.time() - t0:.2f}s)", flush=True)
+    print(f"\nloss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"in {time.time() - t_start:.0f}s "
+          f"({'improved' if losses[-1] < losses[0] else 'NO IMPROVEMENT'})")
+
+
+if __name__ == "__main__":
+    main()

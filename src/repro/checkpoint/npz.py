@@ -1,0 +1,81 @@
+"""Flat-key .npz pytree checkpointing (orbax is not available offline).
+
+Keys are '/'-joined tree paths; the treedef is rebuilt from an exemplar
+pytree on restore, so save/restore round-trips arbitrary nested
+dict/tuple/NamedTuple states (optimizer + params + algorithm state).
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_STEP_RE = re.compile(r"step_(\d+)\.npz$")
+
+
+def _flatten_with_paths(tree: PyTree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    flat = _flatten_with_paths(tree)
+    # atomic write: tmp + rename
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
+
+
+def restore_checkpoint(directory: str, exemplar: PyTree,
+                       step: Optional[int] = None) -> PyTree:
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    with np.load(path) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(exemplar)
+        leaves = []
+        for p, leaf in flat:
+            key = "/".join(_path_str(q) for q in p)
+            arr = data[key]
+            if hasattr(leaf, "dtype"):
+                arr = arr.astype(leaf.dtype)
+            leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := _STEP_RE.search(f))]
+    return max(steps) if steps else None

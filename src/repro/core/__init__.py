@@ -1,0 +1,21 @@
+"""SDM-DSGD core: the paper's contribution as composable JAX modules."""
+from repro.core.sdm_dsgd import (SDMConfig, SDMState, ReferenceSimulator,
+                                 init_distributed_state, distributed_advance,
+                                 distributed_commit,
+                                 transmitted_elements_per_step)
+from repro.core.baselines import (DSGDConfig, DSGDReference, dcdsgd_config,
+                                  dsgd_distributed_step)
+from repro.core.privacy import (PrivacyParams, PrivacyAccountant, epsilon_sdm,
+                                epsilon_alternative, sigma_for_budget,
+                                max_iterations, SIGMA_SQ_MIN)
+from repro.core import topology, theory, sparsifier, gossip, clipping
+
+__all__ = [
+    "SDMConfig", "SDMState", "ReferenceSimulator", "init_distributed_state",
+    "distributed_advance", "distributed_commit",
+    "transmitted_elements_per_step", "DSGDConfig", "DSGDReference",
+    "dcdsgd_config", "dsgd_distributed_step", "PrivacyParams",
+    "PrivacyAccountant", "epsilon_sdm", "epsilon_alternative",
+    "sigma_for_budget", "max_iterations", "SIGMA_SQ_MIN", "topology",
+    "theory", "sparsifier", "gossip", "clipping",
+]

@@ -1,0 +1,106 @@
+"""Baselines the paper compares against (§5): DSGD and DC-DSGD.
+
+* DSGD (Lian et al. 2017; also Nedic-Ozdaglar, Yuan-Ling-Yin):
+      x_{i,t+1} = sum_j W_ij x_{j,t} - gamma * g(x_{i,t})
+  exchanges the FULL uncompressed state x_i with neighbours every
+  iteration — communication cost d elements/node/iter.
+
+* DC-DSGD (Tang et al. 2018, "Communication compression for decentralized
+  training"): communicates compressed differentials like SDM-DSGD but has
+  no mixing parameter theta — it is exactly ``SDMConfig(theta=1.0)``
+  (Remark 1 / §5). Remark 1 shows it requires
+  p > 4(1-lambda_n)^2/(4(1-lambda_n)^2 + (1-|lambda_n|)^2) to converge;
+  Figure 2 demonstrates divergence at p=0.2.
+
+For the §5 "fair comparison", both baselines can also be run with the
+same Gaussian masking noise (``sigma > 0``) and clipping as SDM-DSGD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gossip
+from repro.core.sdm_dsgd import SDMConfig, _masked_grad
+from repro.core.topology import Topology
+
+__all__ = ["DSGDConfig", "DSGDState", "DSGDReference",
+           "dcdsgd_config", "dsgd_distributed_step"]
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class DSGDConfig:
+    gamma: float = 0.01
+    sigma: float = 0.0
+    clip_c: float | None = None
+
+    def as_sdm(self) -> SDMConfig:
+        """DSGD's noise/clip settings reused through the SDM helpers."""
+        return SDMConfig(p=1.0, theta=1.0, gamma=self.gamma,
+                         sigma=self.sigma, clip_c=self.clip_c)
+
+
+def dcdsgd_config(p: float, gamma: float, sigma: float = 0.0,
+                  clip_c: float | None = None) -> SDMConfig:
+    """DC-DSGD == SDM-DSGD with theta fixed to 1 (no state mixing)."""
+    return SDMConfig(p=p, theta=1.0, gamma=gamma, sigma=sigma, clip_c=clip_c)
+
+
+class DSGDState(NamedTuple):
+    x: PyTree
+    step: jax.Array
+
+
+class DSGDReference:
+    """Stacked single-host DSGD, mirroring ReferenceSimulator's API."""
+
+    def __init__(self, topo: Topology, cfg: DSGDConfig):
+        self.topo = topo
+        self.cfg = cfg
+        self.weights = jnp.asarray(topo.weights, jnp.float32)
+
+    def init(self, params_stack: PyTree) -> DSGDState:
+        return DSGDState(x=params_stack, step=jnp.zeros((), jnp.int32))
+
+    def step(self, state: DSGDState, grad_fn, batch_stack: PyTree,
+             key: jax.Array) -> Tuple[DSGDState, PyTree]:
+        grads, aux = grad_fn(state.x, batch_stack)
+        g = _masked_grad(grads, key, self.cfg.as_sdm())
+        x = jax.tree.map(
+            lambda xs, gs: gossip.mix_dense(self.weights, xs)
+            - self.cfg.gamma * gs.astype(xs.dtype),
+            state.x, g)
+        return DSGDState(x=x, step=state.step + 1), aux
+
+    def consensus_mean(self, state: DSGDState) -> PyTree:
+        return jax.tree.map(lambda x: jnp.mean(x, axis=0), state.x)
+
+
+def dsgd_distributed_step(state: DSGDState, grads: PyTree, *, base_key: jax.Array,
+                          axis_name, cfg: DSGDConfig, self_weight: float,
+                          neighbor_weight: float) -> DSGDState:
+    """Per-node DSGD step inside shard_map: FULL-state ring exchange.
+
+    This is the communication baseline for the roofline comparison:
+    collective bytes per round = 2 * d * itemsize (vs p * that for
+    SDM-DSGD packed mode).
+    """
+    me = jax.lax.axis_index(axis_name)
+    noise_key = jax.random.fold_in(
+        gossip.node_round_key(base_key, me, state.step), 0x5eed)
+    g = _masked_grad(grads, noise_key, cfg.as_sdm())
+
+    x_leaves, treedef = jax.tree.flatten(state.x)
+    mixed = []
+    for x in x_leaves:
+        from_left, from_right = gossip.ring_exchange(x, axis_name)
+        mixed.append(self_weight * x + neighbor_weight * (from_left + from_right))
+    mixed_tree = jax.tree.unflatten(treedef, mixed)
+    x = jax.tree.map(lambda m, gr: m - cfg.gamma * gr.astype(m.dtype),
+                     mixed_tree, g)
+    return DSGDState(x=x, step=state.step + 1)

@@ -1,0 +1,37 @@
+"""Coordinate-wise gradient clipping (paper §5, "Procedure for Privacy").
+
+The paper writes ``Clip([g]_i) = sign([g]_i) * max{|[g]_i|, C}`` but states
+"with this clipping, each coordinate of the gradient is bounded by C in
+magnitude" — the formula is a typo for ``min`` (``max`` would *raise*
+small coordinates). We implement the stated semantics:
+``clip(g)_i = sign(g_i) * min(|g_i|, C)``, i.e. an element-wise clamp to
+[-C, C]. With C = G/sqrt(d) this enforces Assumption 1(4) and hence the
+l2-sensitivity bound ||g|| <= G used by Theorem 1.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["clip_coordinates", "clip_tree", "sensitivity_G"]
+
+
+def clip_coordinates(g: jax.Array, c: float) -> jax.Array:
+    """Element-wise clamp of each coordinate to [-c, c]."""
+    return jnp.clip(g, -c, c)
+
+
+def clip_tree(grads: Any, c: float) -> Any:
+    return jax.tree.map(lambda g: clip_coordinates(g, c), grads)
+
+
+def sensitivity_G(c: float, d: int) -> float:
+    """The l2-sensitivity bound implied by coordinate clip c over d coords.
+
+    Coordinate-wise |g_i| <= c gives ||g||_2 <= c * sqrt(d); with the
+    paper's parameterization c = G/sqrt(d) this returns G.
+    """
+    return c * math.sqrt(d)

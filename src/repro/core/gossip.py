@@ -1,0 +1,189 @@
+"""Gossip exchange primitives: dense-W reference and TPU ring collectives.
+
+Three interchangeable realizations of "each node sends its (sparsified)
+message to its graph neighbours":
+
+* ``mix_dense``        — reference: einsum with the full (n, n) consensus
+                         matrix over a node-stacked leading axis. Used by
+                         the single-host simulator and all correctness
+                         tests; supports arbitrary topologies (ER graphs).
+* ``ring_exchange``    — distributed: two `jax.lax.ppermute`s over a named
+                         mesh axis (the node axis). Lowers to TPU
+                         `collective-permute`, nearest-neighbour on the
+                         ICI torus. Dense payload (paper-faithful
+                         Bernoulli-masked tensors).
+* ``ring_exchange_packed`` — distributed + communication-real: only the
+                         k = ceil(p*d) selected values cross the wire;
+                         the index set is regenerated on the receiver from
+                         the (round, sender) seed. Collective bytes shrink
+                         by exactly p. (DESIGN.md §2.)
+
+All distributed functions must be called inside `jax.shard_map` with the
+node axis manual.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparsifier
+
+__all__ = [
+    "mix_dense",
+    "apply_weights_dense",
+    "ring_exchange",
+    "ring_weighted_neighbor_sum",
+    "ring_exchange_packed",
+    "node_round_key",
+]
+
+
+# --------------------------------------------------------------------------
+# Reference (single-host, node-stacked) path.
+# --------------------------------------------------------------------------
+
+def mix_dense(weights: jax.Array, x_stack: jax.Array) -> jax.Array:
+    """(W x)_i = sum_j W_ij x_j over the leading node axis."""
+    return jnp.einsum("ij,j...->i...", weights, x_stack)
+
+
+def apply_weights_dense(weights: jax.Array, msgs_stack: jax.Array,
+                        include_self: bool = False) -> jax.Array:
+    """Weighted neighbour sum sum_{j != i} W_ij msg_j (optionally + W_ii msg_i)."""
+    w = weights if include_self else weights - jnp.diag(jnp.diag(weights))
+    return jnp.einsum("ij,j...->i...", w, msgs_stack)
+
+
+# --------------------------------------------------------------------------
+# Distributed ring path (inside shard_map, node axis manual).
+# --------------------------------------------------------------------------
+
+def _perm(n: int, shift: int) -> Sequence[Tuple[int, int]]:
+    return [(i, (i + shift) % n) for i in range(n)]
+
+
+def ring_exchange(x, axis_name) -> Tuple[jax.Array, jax.Array]:
+    """Send ``x`` to both ring neighbours; returns (from_left, from_right).
+
+    ``from_left[i] = x[i-1]`` and ``from_right[i] = x[i+1]``.
+    """
+    n = jax.lax.psum(1, axis_name)
+    from_left = jax.lax.ppermute(x, axis_name, _perm(n, +1))
+    from_right = jax.lax.ppermute(x, axis_name, _perm(n, -1))
+    return from_left, from_right
+
+
+def ring_weighted_neighbor_sum(x, axis_name, neighbor_weight: float) -> jax.Array:
+    """sum_{j in N_i} W_ij x_j for the symmetric ring (both neighbours weight w)."""
+    from_left, from_right = ring_exchange(x, axis_name)
+    return neighbor_weight * (from_left + from_right)
+
+
+# --------------------------------------------------------------------------
+# Packed (fixed-k) ring path.
+# --------------------------------------------------------------------------
+
+def node_round_key(base_key: jax.Array, node_index, step) -> jax.Array:
+    """Sparsifier seed both endpoints can regenerate: f(base, node, round)."""
+    return jax.random.fold_in(jax.random.fold_in(base_key, node_index), step)
+
+
+def ring_exchange_packed(d_flat: jax.Array, *, axis_name, base_key: jax.Array,
+                         step: jax.Array, p: float, neighbor_weight: float,
+                         block: int = 1) -> Tuple[jax.Array, jax.Array]:
+    """One SDM-DSGD gossip round with packed payloads.
+
+    Each node i:
+      1. draws its round-key K_i = f(base, i, step) and a block index set,
+      2. packs the selected (k_blocks, block) values scaled by 1/p_eff —
+         the ONLY wire payload, ppermuted to both ring neighbours,
+      3. regenerates its neighbours' index sets from K_{i-1}, K_{i+1}
+         locally and scatters the received values,
+      4. returns (own_sparse, weighted_neighbor_sum) where
+         own_sparse = S(d_i) densified and weighted_neighbor_sum =
+         w * (S(d_{i-1}) + S(d_{i+1})).
+
+    The wire cost per node per round is 2 * k * itemsize bytes instead of
+    2 * d * itemsize — exactly the paper's p-fraction, realized in HLO.
+    ``block > 1`` transmits contiguous blocks (bucket sparsification; see
+    sparsifier.block_sparsify) — required beyond ~2^31-element leaves and
+    DMA-friendly on TPU.
+    """
+    dim = d_flat.shape[0]
+    db = sparsifier.block_view(d_flat, block)
+    nb_blocks = db.shape[0]
+    kb = sparsifier.num_kept(nb_blocks, p)
+    scale = nb_blocks / kb
+    n = jax.lax.psum(1, axis_name)
+    me = jax.lax.axis_index(axis_name)
+
+    my_key = node_round_key(base_key, me, step)
+    my_idx = sparsifier.fixedk_indices(my_key, nb_blocks, kb)
+    my_vals = jnp.take(db, my_idx, axis=0) * scale   # (kb, block)
+
+    # Wire traffic: only the packed (kb, block) values move.
+    vals_from_left = jax.lax.ppermute(my_vals, axis_name, _perm(n, +1))
+    vals_from_right = jax.lax.ppermute(my_vals, axis_name, _perm(n, -1))
+
+    # Receivers regenerate sender index sets (no index traffic).
+    left_idx = sparsifier.fixedk_indices(
+        node_round_key(base_key, (me - 1) % n, step), nb_blocks, kb)
+    right_idx = sparsifier.fixedk_indices(
+        node_round_key(base_key, (me + 1) % n, step), nb_blocks, kb)
+
+    unpack = lambda vals, idx: jnp.zeros_like(db).at[idx].set(
+        vals).reshape(-1)[:dim]
+    own_sparse = unpack(my_vals, my_idx)
+    nb_sum = unpack(vals_from_left, left_idx) + \
+        unpack(vals_from_right, right_idx)
+    return own_sparse, neighbor_weight * nb_sum
+
+
+def ring_exchange_packed_rows(d: jax.Array, *, axis_name, base_key: jax.Array,
+                              step: jax.Array, p: float,
+                              neighbor_weight: float
+                              ) -> Tuple[jax.Array, jax.Array]:
+    """Sharding-aligned packed gossip: blocks = trailing-dim rows.
+
+    ``ring_exchange_packed`` flattens the leaf, which destroys the tensor-
+    parallel layout of model-sharded dims and makes GSPMD all-gather the
+    whole leaf around the gather/scatter (measured: +23% collective bytes
+    on qwen1.5-32b train instead of the predicted 10x drop). Here the
+    block unit is a whole trailing-dim row: the gather indexes only the
+    UNsharded leading dims, each packed row keeps the leaf's model-axis
+    sharding, and the ppermute payload is itself tensor-parallel.
+
+    Selection semantics equal ``sparsifier.block_sparsify`` with
+    block = leaf.shape[-1] (row-major): inclusion probability k/rows ~= p,
+    scale rows/k — unbiasedness intact.
+    """
+    shape = d.shape
+    cols = shape[-1] if d.ndim > 1 else 1
+    rows = d.size // cols
+    db = d.reshape(rows, cols)
+    kb = sparsifier.num_kept(rows, p)
+    scale = rows / kb
+    n = jax.lax.psum(1, axis_name)
+    me = jax.lax.axis_index(axis_name)
+
+    my_idx = sparsifier.fixedk_indices(
+        node_round_key(base_key, me, step), rows, kb)
+    my_vals = jnp.take(db, my_idx, axis=0) * scale      # (kb, cols)
+
+    vals_from_left = jax.lax.ppermute(my_vals, axis_name, _perm(n, +1))
+    vals_from_right = jax.lax.ppermute(my_vals, axis_name, _perm(n, -1))
+
+    left_idx = sparsifier.fixedk_indices(
+        node_round_key(base_key, (me - 1) % n, step), rows, kb)
+    right_idx = sparsifier.fixedk_indices(
+        node_round_key(base_key, (me + 1) % n, step), rows, kb)
+
+    unpack = lambda vals, idx: jnp.zeros_like(db).at[idx].set(
+        vals).reshape(shape)
+    own_sparse = unpack(my_vals, my_idx)
+    nb_sum = unpack(vals_from_left, left_idx) + \
+        unpack(vals_from_right, right_idx)
+    return own_sparse, neighbor_weight * nb_sum

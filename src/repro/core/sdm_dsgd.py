@@ -1,0 +1,400 @@
+"""SDM-DSGD (Algorithm 1) — reference simulator and distributed TPU step.
+
+The algorithm, per node i, per iteration t (paper Eq. (3)):
+
+    x_t = x_{t-1} + S(d_{t-1})                 # everyone advances public copies
+    y_t = (1-theta) x_t
+          + theta * (W~ x_t - gamma (grad f(x_t; batch) + eta)),  eta~N(0, sigma^2 I)
+    d_t = y_t - x_t
+
+Each node transmits only S(d_i); neighbours maintain exact replicas of
+the *public* copies x_j (they advance them with the received S(d_j)),
+so the distributed state per node is:
+
+    x — the node's own public copy (identical to what neighbours hold),
+    s — the running weighted neighbour sum  sum_{j in N_i} W_ij x_j,
+    d — the differential awaiting transmission next round.
+
+Two implementations, bit-for-bit testable against each other:
+
+* ``ReferenceSimulator`` — all n nodes stacked on a leading axis on one
+  host, gossip by dense einsum with any Topology (used for the paper's
+  CPU-scale experiments: MNIST/CIFAR-style models, ER graphs).
+* ``distributed_advance`` / ``distributed_commit`` — per-node code to run
+  inside `jax.shard_map` with the node axis manual; ring gossip via
+  `collective-permute`, optionally packed fixed-k payloads.
+
+Baselines (DSGD, DC-DSGD) live in ``baselines.py``; DC-DSGD is exactly
+``SDMConfig(theta=1.0, sigma=0.0)`` — the generalization claim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clipping, gossip, sparsifier
+from repro.core.topology import Topology
+
+__all__ = ["SDMConfig", "SDMState", "ReferenceSimulator",
+           "init_distributed_state", "distributed_advance",
+           "distributed_commit", "transmitted_elements_per_step"]
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SDMConfig:
+    """Hyper-parameters of Algorithm 1.
+
+    mode:
+      'bernoulli'     — paper-faithful i.i.d. Bernoulli(p) masking, dense payloads.
+      'fixedk_packed' — seed-synchronized fixed-k packed payloads over flat
+                        pack_block-coordinate blocks (TPU adaptation).
+      'fixedk_rows'   — packed payloads over trailing-dim rows: keeps the
+                        tensor-parallel sharding of every leaf intact
+                        (the production choice; see EXPERIMENTS.md §Perf).
+    """
+
+    p: float = 0.2
+    theta: float = 0.6
+    gamma: float = 0.01
+    sigma: float = 0.0
+    clip_c: float | None = None
+    mode: str = "bernoulli"
+    pack_block: int = 1   # fixedk granularity (coords per transmitted block)
+    # BEYOND-PAPER extension (off by default = paper-faithful): carry the
+    # unsent compression residual e = d - S(d) into the next round's
+    # differential (error feedback a la Stich et al. [20], which the paper
+    # cites but does not use). FINDING (tests/test_error_feedback.py): EF
+    # requires a contractive compressor, and p-scaling the differential
+    # slows the CONSENSUS correction inside d until disagreement outruns
+    # it — long-horizon drift. Structural evidence for the paper's
+    # unbiasedness requirement; keep off for real training.
+    error_feedback: bool = False
+
+    def __post_init__(self) -> None:
+        if not (0.0 < self.p <= 1.0):
+            raise ValueError("p in (0,1]")
+        if not (0.0 < self.theta <= 1.0):
+            raise ValueError("theta in (0,1]")
+        if self.mode not in ("bernoulli", "fixedk_packed", "fixedk_rows"):
+            raise ValueError(f"unknown mode {self.mode}")
+
+    def validate_against(self, topo: Topology, L: float = 1.0) -> None:
+        """Assert Lemma 1's theta < 2p/(1 - lambda_n + gamma L)."""
+        bound = 2.0 * self.p / (1.0 - topo.lambda_n + self.gamma * L)
+        if self.theta >= bound:
+            raise ValueError(
+                f"theta={self.theta} >= Lemma-1 bound {bound:.4g} "
+                f"(p={self.p}, lambda_n={topo.lambda_n:.4g})")
+
+
+class SDMState(NamedTuple):
+    x: PyTree       # public copy (stacked (n, ...) in reference; per-node distributed)
+    s: PyTree       # weighted neighbour sum (distributed only; zeros-like in reference)
+    d: PyTree       # differential pending transmission
+    step: jax.Array  # iteration counter (int32)
+    e: PyTree = None  # error-feedback residual (only when cfg.error_feedback)
+
+
+def _tree_zeros_like(t: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, t)
+
+
+def _leaf_keys(key: jax.Array, tree: PyTree) -> PyTree:
+    """One independent key per leaf, stable in tree-flatten order."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = [jax.random.fold_in(key, i) for i in range(len(leaves))]
+    return jax.tree.unflatten(treedef, keys)
+
+
+def _noise_like(key: jax.Array, tree: PyTree, sigma: float) -> PyTree:
+    ks = _leaf_keys(key, tree)
+    return jax.tree.map(
+        lambda k, x: sigma * jax.random.normal(k, x.shape, jnp.float32).astype(x.dtype),
+        ks, tree)
+
+
+def _masked_grad(grads: PyTree, key: jax.Array, cfg: SDMConfig) -> PyTree:
+    """clip (optional, §5 procedure) then Gaussian-mask: g_hat = clip(g) + eta."""
+    if cfg.clip_c is not None:
+        grads = clipping.clip_tree(grads, cfg.clip_c)
+    if cfg.sigma > 0.0:
+        noise = _noise_like(key, grads, cfg.sigma)
+        grads = jax.tree.map(jnp.add, grads, noise)
+    return grads
+
+
+def transmitted_elements_per_step(params: PyTree, cfg: SDMConfig) -> int:
+    """Expected non-zero elements each node transmits per iteration.
+
+    The paper's Figure-3 communication metric ("non-zero digits"). For
+    fixedk mode this is exact; for bernoulli it is the expectation p*d.
+    """
+    d = sum(int(x.size) for x in jax.tree.leaves(params))
+    if cfg.mode == "fixedk_packed":
+        b = cfg.pack_block
+        return sum(
+            sparsifier.num_kept(-(-int(x.size) // b), cfg.p) * b
+            for x in jax.tree.leaves(params))
+    if cfg.mode == "fixedk_rows":
+        total = 0
+        for x in jax.tree.leaves(params):
+            cols = x.shape[-1] if x.ndim > 1 else 1
+            rows = int(x.size) // cols
+            total += sparsifier.num_kept(rows, cfg.p) * cols
+        return total
+    return int(round(cfg.p * d))
+
+
+# ==========================================================================
+# Reference simulator: n nodes stacked on axis 0, dense-W gossip.
+# ==========================================================================
+
+class ReferenceSimulator:
+    """Single-host n-node simulator for any Topology (paper's experiments)."""
+
+    def __init__(self, topo: Topology, cfg: SDMConfig):
+        self.topo = topo
+        self.cfg = cfg
+        self.weights = jnp.asarray(topo.weights, jnp.float32)
+
+    def init(self, params_stack: PyTree) -> SDMState:
+        """params_stack leaves have leading dim n (one slice per node)."""
+        n = jax.tree.leaves(params_stack)[0].shape[0]
+        assert n == self.topo.n_nodes, (n, self.topo.n_nodes)
+        e = _tree_zeros_like(params_stack) if self.cfg.error_feedback else None
+        return SDMState(x=params_stack, s=_tree_zeros_like(params_stack),
+                        d=_tree_zeros_like(params_stack),
+                        step=jnp.zeros((), jnp.int32), e=e)
+
+    # -- phase 1: everyone transmits S(d) and advances public copies ------
+    def advance(self, state: SDMState, key: jax.Array) -> Tuple[SDMState, PyTree]:
+        """Returns (state with x <- x + S(d), the S(d) stack)."""
+        cfg = self.cfg
+        n = self.topo.n_nodes
+
+        if cfg.error_feedback:
+            # fold the residual from the previous round into what we send.
+            # EF requires the CONTRACTIVE (unscaled) compressor mask*d —
+            # the unbiased 1/p amplification would make the residual loop
+            # explosive; error feedback is what repairs the bias instead
+            # (Stich et al.). Implemented by undoing the 1/p scale below.
+            d_in = jax.tree.map(jnp.add, state.d, state.e)
+        else:
+            d_in = state.d
+        ef_scale = cfg.p if cfg.error_feedback else 1.0
+
+        def sparsify_stack(leaf_key: jax.Array, d_stack: jax.Array) -> jax.Array:
+            node_keys = jax.vmap(
+                lambda i: gossip.node_round_key(leaf_key, i, state.step))(jnp.arange(n))
+            if cfg.mode == "bernoulli":
+                fn = lambda k, v: sparsifier.bernoulli_sparsify(k, v, cfg.p)
+            elif cfg.mode == "fixedk_rows":
+                fn = lambda k, v: sparsifier.block_sparsify(
+                    k, v.reshape(-1), cfg.p,
+                    v.shape[-1] if v.ndim > 1 else 1).reshape(v.shape)
+            else:
+                fn = lambda k, v: sparsifier.block_sparsify(
+                    k, v.reshape(-1), cfg.p, cfg.pack_block).reshape(v.shape)
+            return jax.vmap(fn)(node_keys, d_stack)
+
+        sd = jax.tree.map(sparsify_stack, _leaf_keys(key, d_in), d_in)
+        if cfg.error_feedback and ef_scale != 1.0:
+            sd = jax.tree.map(lambda v: v * ef_scale, sd)
+        x = jax.tree.map(jnp.add, state.x, sd)
+        new_e = jax.tree.map(jnp.subtract, d_in, sd) \
+            if cfg.error_feedback else state.e
+        return state._replace(x=x, e=new_e), sd
+
+    # -- phase 2: local gradient + masking + generalized mixing -----------
+    def commit(self, state: SDMState, grads_stack: PyTree,
+               key: jax.Array) -> SDMState:
+        cfg = self.cfg
+        g = _masked_grad(grads_stack, key, cfg)
+        mixed = jax.tree.map(lambda x: gossip.mix_dense(self.weights, x), state.x)
+        y = jax.tree.map(
+            lambda x, m, gr: (1.0 - cfg.theta) * x + cfg.theta * (m - cfg.gamma * gr),
+            state.x, mixed, g)
+        d = jax.tree.map(jnp.subtract, y, state.x)
+        return state._replace(d=d, step=state.step + 1)
+
+    def step(self, state: SDMState, grad_fn, batch_stack: PyTree,
+             key: jax.Array) -> Tuple[SDMState, PyTree]:
+        """Convenience: advance -> grads at new x -> commit.
+
+        grad_fn(params_stack, batch_stack) -> grads_stack, aux.
+        Returns (new_state, aux).
+        """
+        k_sp, k_noise = jax.random.split(key)
+        state, _ = self.advance(state, k_sp)
+        grads, aux = grad_fn(state.x, batch_stack)
+        state = self.commit(state, grads, k_noise)
+        return state, aux
+
+    def consensus_mean(self, state: SDMState) -> PyTree:
+        """xbar_t = (1/n) sum_i x_{i,t} — the quantity Lemma 1 bounds."""
+        return jax.tree.map(lambda x: jnp.mean(x, axis=0), state.x)
+
+
+# ==========================================================================
+# Distributed per-node step (inside shard_map; node axis manual).
+# ==========================================================================
+
+def init_distributed_state(params: PyTree, self_weight: float) -> SDMState:
+    """Per-node state. ``params`` has NO node axis here (each shard owns one).
+
+    All nodes must start from IDENTICAL params (standard same-seed init);
+    then the initial neighbour sum is s_0 = (1 - W_ii) * x_0, since
+    sum_{j != i} W_ij = 1 - W_ii and x_{j,0} = x_0. (The paper starts at
+    x_0 = 0, a special case.)
+    """
+    s0 = jax.tree.map(lambda x: (1.0 - self_weight) * x, params)
+    return SDMState(x=params, s=s0, d=_tree_zeros_like(params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def distributed_advance(state: SDMState, *, base_key: jax.Array, axis_name,
+                        cfg: SDMConfig, self_weight: float,
+                        neighbor_weight: float) -> SDMState:
+    """Phase 1 on the mesh: sparsify d, ring-exchange, update x and s."""
+    me = jax.lax.axis_index(axis_name)
+
+    if cfg.mode in ("fixedk_packed", "fixedk_rows"):
+        new_x, new_s = [], []
+        x_leaves, treedef = jax.tree.flatten(state.x)
+        s_leaves = jax.tree.leaves(state.s)
+        d_leaves = jax.tree.leaves(state.d)
+        for i, (x, s, d) in enumerate(zip(x_leaves, s_leaves, d_leaves)):
+            leaf_key = jax.random.fold_in(base_key, i)
+            if cfg.mode == "fixedk_rows":
+                own_sparse, nb_sum = gossip.ring_exchange_packed_rows(
+                    d, axis_name=axis_name, base_key=leaf_key,
+                    step=state.step, p=cfg.p,
+                    neighbor_weight=neighbor_weight)
+            else:
+                own_sparse, nb_sum = gossip.ring_exchange_packed(
+                    d.reshape(-1), axis_name=axis_name, base_key=leaf_key,
+                    step=state.step, p=cfg.p,
+                    neighbor_weight=neighbor_weight, block=cfg.pack_block)
+            new_x.append(x + own_sparse.reshape(x.shape).astype(x.dtype))
+            new_s.append(s + nb_sum.reshape(s.shape).astype(s.dtype))
+        x = jax.tree.unflatten(treedef, new_x)
+        s = jax.tree.unflatten(treedef, new_s)
+    else:
+        # Key schedule fold(fold(fold(base, leaf), node), step) — identical
+        # to ReferenceSimulator.advance so the two paths are bit-equal.
+        leaf_keys = jax.tree.map(
+            lambda k: gossip.node_round_key(k, me, state.step),
+            _leaf_keys(base_key, state.d))
+        sd = jax.tree.map(
+            lambda k, d: sparsifier.bernoulli_sparsify(k, d, cfg.p),
+            leaf_keys, state.d)
+        sd_leaves, treedef = jax.tree.flatten(sd)
+        pairs = [gossip.ring_exchange(v, axis_name) for v in sd_leaves]
+        from_left = jax.tree.unflatten(treedef, [l for l, _ in pairs])
+        from_right = jax.tree.unflatten(treedef, [r for _, r in pairs])
+        x = jax.tree.map(jnp.add, state.x, sd)
+        s = jax.tree.map(
+            lambda s_, l, r: s_ + neighbor_weight * (l + r),
+            state.s, from_left, from_right)
+    return state._replace(x=x, s=s)
+
+
+class SDMFusedState(NamedTuple):
+    """Two-buffer state for the fused step (see distributed_step_fused)."""
+    x: PyTree
+    s: PyTree
+    step: jax.Array
+
+
+def init_fused_state(params: PyTree, self_weight: float) -> SDMFusedState:
+    s0 = jax.tree.map(lambda x: (1.0 - self_weight) * x, params)
+    return SDMFusedState(x=params, s=s0, step=jnp.zeros((), jnp.int32))
+
+
+def distributed_step_fused(state: SDMFusedState, grads: PyTree, *,
+                           base_key: jax.Array, axis_name, cfg: SDMConfig,
+                           self_weight: float,
+                           neighbor_weight: float) -> SDMFusedState:
+    """Memory-optimized whole-iteration step: commit_t + advance_{t+1} fused.
+
+    Identical algorithm to (distributed_advance; grads; distributed_commit)
+    with the step boundary shifted by half an iteration: the differential
+    d_t only lives INSIDE the step (computed from this step's gradient,
+    sparsified, exchanged, and folded into (x, s) immediately), so the
+    persistent state drops from 3 parameter buffers (x, s, d) to 2 —
+    a 1/3 cut of the dominant memory term. Gradient must be evaluated at
+    state.x BEFORE calling (x is already post-advance).
+    """
+    me = jax.lax.axis_index(axis_name)
+    noise_key = jax.random.fold_in(
+        gossip.node_round_key(base_key, me, state.step), 0x5eed)
+    g = _masked_grad(grads, noise_key, cfg)
+    d = jax.tree.map(
+        lambda x, s, gr: (cfg.theta * (self_weight * x + s
+                                       - cfg.gamma * gr.astype(x.dtype))
+                          - cfg.theta * x),
+        state.x, state.s, g)
+
+    # immediately sparsify + exchange + fold in (the next round's advance).
+    # Sparsifier keys use counter step+1: in the unfused flow d_t is
+    # sparsified by the NEXT iteration's advance (bit-equality preserved).
+    sp_step = state.step + 1
+    if cfg.mode in ("fixedk_packed", "fixedk_rows"):
+        x_leaves, treedef = jax.tree.flatten(state.x)
+        s_leaves = jax.tree.leaves(state.s)
+        d_leaves = jax.tree.leaves(d)
+        new_x, new_s = [], []
+        for i, (x, s, dd) in enumerate(zip(x_leaves, s_leaves, d_leaves)):
+            leaf_key = jax.random.fold_in(base_key, i)
+            if cfg.mode == "fixedk_rows":
+                own_sparse, nb_sum = gossip.ring_exchange_packed_rows(
+                    dd, axis_name=axis_name, base_key=leaf_key,
+                    step=sp_step, p=cfg.p, neighbor_weight=neighbor_weight)
+            else:
+                own_sparse, nb_sum = gossip.ring_exchange_packed(
+                    dd.reshape(-1), axis_name=axis_name, base_key=leaf_key,
+                    step=sp_step, p=cfg.p, neighbor_weight=neighbor_weight,
+                    block=cfg.pack_block)
+            new_x.append(x + own_sparse.reshape(x.shape).astype(x.dtype))
+            new_s.append(s + nb_sum.reshape(s.shape).astype(s.dtype))
+        x = jax.tree.unflatten(treedef, new_x)
+        s = jax.tree.unflatten(treedef, new_s)
+    else:
+        leaf_keys = jax.tree.map(
+            lambda k: gossip.node_round_key(k, me, sp_step),
+            _leaf_keys(base_key, d))
+        sd = jax.tree.map(
+            lambda k, dd: sparsifier.bernoulli_sparsify(k, dd, cfg.p),
+            leaf_keys, d)
+        sd_leaves, treedef = jax.tree.flatten(sd)
+        pairs = [gossip.ring_exchange(v, axis_name) for v in sd_leaves]
+        from_left = jax.tree.unflatten(treedef, [l for l, _ in pairs])
+        from_right = jax.tree.unflatten(treedef, [r for _, r in pairs])
+        x = jax.tree.map(jnp.add, state.x, sd)
+        s = jax.tree.map(
+            lambda s_, l, r: s_ + neighbor_weight * (l + r),
+            state.s, from_left, from_right)
+    return SDMFusedState(x=x, s=s, step=state.step + 1)
+
+
+def distributed_commit(state: SDMState, grads: PyTree, *, base_key: jax.Array,
+                       axis_name, cfg: SDMConfig,
+                       self_weight: float) -> SDMState:
+    """Phase 2 on the mesh: masked gradient + generalized mixing update."""
+    me = jax.lax.axis_index(axis_name)
+    noise_key = jax.random.fold_in(
+        gossip.node_round_key(base_key, me, state.step), 0x5eed)
+    g = _masked_grad(grads, noise_key, cfg)
+    # W~ x for node i = W_ii x_i + s_i  (s maintained incrementally).
+    y = jax.tree.map(
+        lambda x, s, gr: ((1.0 - cfg.theta) * x
+                          + cfg.theta * (self_weight * x + s
+                                         - cfg.gamma * gr.astype(x.dtype))),
+        state.x, state.s, g)
+    d = jax.tree.map(jnp.subtract, y, state.x)
+    return state._replace(d=d, step=state.step + 1)

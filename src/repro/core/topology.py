@@ -1,0 +1,192 @@
+"""Gossip-graph topologies and consensus matrices.
+
+The paper (§4.2) requires a consensus matrix ``W`` that is (1) doubly
+stochastic, (2) symmetric, and (3) has the network's sparsity pattern.
+Its spectrum then lies in (-1, 1] with one eigenvalue equal to 1; the
+convergence theory is driven by ``beta = max(|lambda_2|, |lambda_n|)``
+and the smallest eigenvalue ``lambda_n``.
+
+The experimental section builds ``W = I - 2/(3*lambda_max(L)) * L`` from
+the graph Laplacian ``L`` (used for Erdős–Rényi graphs); we reproduce
+that construction exactly and also provide closed-form ring / torus /
+complete topologies that map directly onto TPU ICI neighbourhoods.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "Topology",
+    "ring",
+    "torus_2d",
+    "complete",
+    "erdos_renyi",
+    "star",
+    "laplacian_consensus_matrix",
+    "metropolis_hastings_weights",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A gossip graph plus its consensus matrix and spectral summary."""
+
+    name: str
+    n_nodes: int
+    adjacency: np.ndarray  # (n, n) 0/1, zero diagonal
+    weights: np.ndarray  # (n, n) consensus matrix W
+
+    def __post_init__(self) -> None:
+        w = self.weights
+        if not np.allclose(w, w.T, atol=1e-10):
+            raise ValueError(f"{self.name}: W must be symmetric")
+        if not np.allclose(w.sum(axis=0), 1.0, atol=1e-8):
+            raise ValueError(f"{self.name}: W must be doubly stochastic")
+        off_diag = w - np.diag(np.diag(w))
+        support = np.abs(off_diag) > 1e-12
+        if np.any(support & ~self.adjacency.astype(bool)):
+            raise ValueError(f"{self.name}: W uses non-edges")
+
+    # -- spectral quantities used throughout the paper's theory -----------
+    @property
+    def eigenvalues(self) -> np.ndarray:
+        """Sorted descending: lambda_1 = 1 >= ... >= lambda_n > -1."""
+        return np.sort(np.linalg.eigvalsh(self.weights))[::-1]
+
+    @property
+    def beta(self) -> float:
+        """Second-largest eigenvalue magnitude (mixing rate)."""
+        ev = self.eigenvalues
+        return float(max(abs(ev[1]), abs(ev[-1])))
+
+    @property
+    def lambda_n(self) -> float:
+        """Smallest eigenvalue of W (enters the theta bound)."""
+        return float(self.eigenvalues[-1])
+
+    @property
+    def degree(self) -> np.ndarray:
+        return self.adjacency.sum(axis=1).astype(np.int64)
+
+    def neighbors(self, i: int) -> Sequence[int]:
+        return np.nonzero(self.adjacency[i])[0].tolist()
+
+    def mixed_with_theta(self, theta: float) -> np.ndarray:
+        """The effective mixing matrix W_theta = (1-theta) I + theta W (Eq. 26)."""
+        n = self.n_nodes
+        return (1.0 - theta) * np.eye(n) + theta * self.weights
+
+
+def laplacian_consensus_matrix(adjacency: np.ndarray) -> np.ndarray:
+    """The paper's experimental construction: W = I - 2/(3 lambda_max(L)) L."""
+    adjacency = np.asarray(adjacency, dtype=np.float64)
+    deg = np.diag(adjacency.sum(axis=1))
+    lap = deg - adjacency
+    lam_max = float(np.max(np.linalg.eigvalsh(lap)))
+    if lam_max <= 0:
+        raise ValueError("graph has no edges")
+    return np.eye(adjacency.shape[0]) - (2.0 / (3.0 * lam_max)) * lap
+
+
+def metropolis_hastings_weights(adjacency: np.ndarray) -> np.ndarray:
+    """Metropolis–Hastings weights: always doubly stochastic & symmetric."""
+    adjacency = np.asarray(adjacency)
+    n = adjacency.shape[0]
+    deg = adjacency.sum(axis=1)
+    w = np.zeros((n, n))
+    for i in range(n):
+        for j in np.nonzero(adjacency[i])[0]:
+            w[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+    np.fill_diagonal(w, 1.0 - w.sum(axis=1))
+    return w
+
+
+def _topology(name: str, adjacency: np.ndarray, weights: np.ndarray | None) -> Topology:
+    if weights is None:
+        weights = laplacian_consensus_matrix(adjacency)
+    return Topology(name=name, n_nodes=adjacency.shape[0],
+                    adjacency=np.asarray(adjacency), weights=np.asarray(weights))
+
+
+def ring(n: int, self_weight: float | None = None) -> Topology:
+    """Symmetric ring; maps to two `collective-permute`s on a TPU torus.
+
+    ``self_weight`` defaults to 1/3 (uniform over {self, left, right}).
+    """
+    if n < 2:
+        raise ValueError("ring needs n >= 2")
+    adj = np.zeros((n, n), dtype=np.int64)
+    for i in range(n):
+        adj[i, (i + 1) % n] = 1
+        adj[i, (i - 1) % n] = 1
+    if n == 2:
+        adj = np.array([[0, 1], [1, 0]], dtype=np.int64)
+    if self_weight is None:
+        self_weight = 1.0 / 3.0
+    nb_weight = (1.0 - self_weight) / 2.0
+    w = np.eye(n) * self_weight
+    for i in range(n):
+        w[i, (i + 1) % n] += nb_weight
+        w[i, (i - 1) % n] += nb_weight
+    return _topology(f"ring{n}", adj, w)
+
+
+def torus_2d(rows: int, cols: int) -> Topology:
+    """2-D torus: 4 neighbours per node (wraps); the native ICI shape."""
+    n = rows * cols
+    adj = np.zeros((n, n), dtype=np.int64)
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            for dr, dc in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                j = ((r + dr) % rows) * cols + (c + dc) % cols
+                if j != i:
+                    adj[i, j] = 1
+    w = metropolis_hastings_weights(adj)
+    return _topology(f"torus{rows}x{cols}", adj, w)
+
+
+def complete(n: int) -> Topology:
+    """Fully connected; W = (1/n) 11^T. beta = 0 (one-shot consensus)."""
+    adj = np.ones((n, n), dtype=np.int64) - np.eye(n, dtype=np.int64)
+    w = np.full((n, n), 1.0 / n)
+    return _topology(f"complete{n}", adj, w)
+
+
+def star(n: int) -> Topology:
+    adj = np.zeros((n, n), dtype=np.int64)
+    adj[0, 1:] = 1
+    adj[1:, 0] = 1
+    w = metropolis_hastings_weights(adj)
+    return _topology(f"star{n}", adj, w)
+
+
+def erdos_renyi(n: int, p_connect: float = 0.35, seed: int = 0,
+                ensure_connected: bool = True) -> Topology:
+    """The paper's experimental graph: ER(n, p_c=0.35), Laplacian weights."""
+    rng = np.random.default_rng(seed)
+    for attempt in range(1000):
+        upper = rng.random((n, n)) < p_connect
+        adj = np.triu(upper, k=1)
+        adj = (adj | adj.T).astype(np.int64)
+        if not ensure_connected or _is_connected(adj):
+            return _topology(f"er{n}_pc{p_connect}_s{seed + attempt}", adj,
+                             laplacian_consensus_matrix(adj))
+        rng = np.random.default_rng(seed + attempt + 1)
+    raise RuntimeError("could not sample a connected ER graph")
+
+
+def _is_connected(adj: np.ndarray) -> bool:
+    n = adj.shape[0]
+    seen = {0}
+    frontier = [0]
+    while frontier:
+        i = frontier.pop()
+        for j in np.nonzero(adj[i])[0]:
+            if j not in seen:
+                seen.add(int(j))
+                frontier.append(int(j))
+    return len(seen) == n

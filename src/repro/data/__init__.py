@@ -1,0 +1,5 @@
+from repro.data.synthetic import (TokenStream, classification_dataset,
+                                  node_partitioned_batches)
+
+__all__ = ["TokenStream", "classification_dataset",
+           "node_partitioned_batches"]

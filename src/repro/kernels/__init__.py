@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's per-iteration hot loop and attention.
+
+Each kernel ships as <name>/<name>.py (pl.pallas_call + BlockSpec),
+<name>/ops.py (jit'd public wrapper), <name>/ref.py (pure-jnp oracle).
+Kernels target TPU; correctness is validated with interpret=True on CPU.
+"""

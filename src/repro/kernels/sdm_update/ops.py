@@ -1,0 +1,72 @@
+"""Public wrapper: flat-pytree SDM-DSGD fused update.
+
+Flattens a parameter pytree into the kernel's (rows, 1024) layout,
+generates the three uniform bit streams with jax.random (or, on real
+TPU hardware, leaves generation to the in-kernel PRNG), runs the fused
+kernel, and unflattens. Drop-in replacement for the unfused
+distributed_commit+advance pair's elementwise work.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sdm_update.sdm_update import (LANE, DEFAULT_BLOCK_ROWS,
+                                                 sdm_update_pallas)
+from repro.kernels.sdm_update import ref as ref_mod
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree, block_rows: int):
+    leaves, treedef = jax.tree.flatten(tree)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                            for l in leaves])
+    n = flat.shape[0]
+    tile = LANE * block_rows
+    pad = (-n) % tile
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, LANE), (treedef, [l.shape for l in leaves],
+                                    [l.dtype for l in leaves], n)
+
+
+def _unflatten(mat: jax.Array, meta) -> PyTree:
+    treedef, shapes, dtypes, n = meta
+    flat = mat.reshape(-1)[:n]
+    out, off = [], 0
+    for shp, dt in zip(shapes, dtypes):
+        size = 1
+        for d in shp:
+            size *= d
+        out.append(flat[off:off + size].reshape(shp).astype(dt))
+        off += size
+    return jax.tree.unflatten(treedef, out)
+
+
+def sdm_update(x_tree: PyTree, s_tree: PyTree, nb_tree: PyTree,
+               g_tree: PyTree, key: jax.Array, *, p: float, theta: float,
+               gamma: float, sigma: float, clip_c: float | None,
+               self_w: float, block_rows: int = DEFAULT_BLOCK_ROWS,
+               use_kernel: bool = True, interpret: bool = True
+               ) -> Tuple[PyTree, PyTree, PyTree]:
+    """Returns (x_new, s_new, sd) trees. ``key`` drives mask+noise bits."""
+    x, meta = _flatten(x_tree, block_rows)
+    s, _ = _flatten(s_tree, block_rows)
+    nb, _ = _flatten(nb_tree, block_rows)
+    g, _ = _flatten(g_tree, block_rows)
+    kb, k1, k2 = jax.random.split(key, 3)
+    bits = lambda k: jax.random.bits(k, x.shape, jnp.uint32)
+    fn = sdm_update_pallas if use_kernel else _ref_adapter
+    x2, s2, sd = fn(x, s, nb, g, bits(kb), bits(k1), bits(k2), p=p,
+                    theta=theta, gamma=gamma, sigma=sigma, clip_c=clip_c,
+                    self_w=self_w,
+                    **({"block_rows": block_rows, "interpret": interpret}
+                       if use_kernel else {}))
+    return (_unflatten(x2, meta), _unflatten(s2, meta), _unflatten(sd, meta))
+
+
+def _ref_adapter(x, s, nb, g, mb, n1, n2, **kw):
+    return ref_mod.sdm_update_ref(x, s, nb, g, mb, n1, n2, **kw)

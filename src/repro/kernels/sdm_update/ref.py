@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the fused SDM-DSGD update kernel.
+
+Bit-identical math to the kernel given the same uniform bit streams.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_TWO_PI = 2.0 * math.pi
+_INV24 = 1.0 / (1 << 24)
+
+
+def _uniform01(bits: jax.Array) -> jax.Array:
+    u = (bits >> 8).astype(jnp.float32) * _INV24
+    return jnp.maximum(u, _INV24)
+
+
+def sdm_update_ref(x, s, nb_sum, g, mask_bits, n1_bits, n2_bits, *, p,
+                   theta, gamma, sigma, clip_c, self_w
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    s = s + nb_sum
+    if clip_c is not None:
+        g = jnp.clip(g, -clip_c, clip_c)
+    if sigma > 0.0:
+        u1 = _uniform01(n1_bits)
+        u2 = _uniform01(n2_bits)
+        gauss = jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(_TWO_PI * u2)
+        g = g + sigma * gauss
+    y = (1.0 - theta) * x + theta * (self_w * x + s - gamma * g)
+    d = y - x
+    keep = _uniform01(mask_bits) < p
+    sd = jnp.where(keep, d / p, 0.0)
+    return x + sd, s, sd

@@ -1,0 +1,64 @@
+"""Parse collective traffic out of compiled HLO text.
+
+``cost_analysis()`` has no collective-bytes entry, so the roofline's
+collective term is derived here: sum the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+instruction (async ``-start`` forms counted once; ``-done`` skipped).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict
+
+__all__ = ["collective_bytes", "count_ops", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.  %x = bf16[2,512]{1,0} all-reduce(...)  or tuple results
+_INSTR_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shapes_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Bytes moved per collective kind (result-shape convention), plus total.
+
+    Skips `-done` ops (the matching `-start` already carries the shape).
+    """
+    out: Dict[str, int] = defaultdict(int)
+    for shapes_str, kind, _start in _INSTR_RE.findall(hlo_text):
+        out[kind] += _shape_bytes(shapes_str)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def count_ops(hlo_text: str) -> Dict[str, int]:
+    counts: Dict[str, int] = defaultdict(int)
+    for _, kind, _start in _INSTR_RE.findall(hlo_text):
+        counts[kind] += 1
+    return dict(counts)

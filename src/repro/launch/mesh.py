@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module touches no jax device state — required for the dry-run's
+XLA_FLAGS ordering and for tests that run on 1 CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh_by_name", "node_axis_names"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 single pod (256 chips) or 2x16x16 two pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_by_name(name: str) -> jax.sharding.Mesh:
+    if name in ("single_pod", "16x16"):
+        return make_production_mesh(multi_pod=False)
+    if name in ("multi_pod", "2x16x16"):
+        return make_production_mesh(multi_pod=True)
+    # small debug meshes, e.g. "2x4"
+    dims = tuple(int(d) for d in name.split("x"))
+    axes = {1: ("data",), 2: ("data", "model"),
+            3: ("pod", "data", "model")}[len(dims)]
+    return jax.make_mesh(
+        dims, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+
+
+def node_axis_names(mesh: jax.sharding.Mesh):
+    return tuple(a for a in mesh.axis_names if a != "model")

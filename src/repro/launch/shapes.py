@@ -1,0 +1,103 @@
+"""Input shapes and ShapeDtypeStruct stand-ins for every (arch x shape).
+
+The four assigned input shapes:
+    train_4k     seq=4096,   global_batch=256   (training)
+    prefill_32k  seq=32768,  global_batch=32    (inference-prefill)
+    decode_32k   seq=32768,  global_batch=128   (inference-decode: 1 token,
+                                                 32k KV cache)
+    long_500k    seq=524288, global_batch=1     (long-context decode;
+                                                 sub-quadratic archs only)
+
+``input_specs`` returns weak-type-correct, shardable ShapeDtypeStructs —
+no device allocation — exactly what ``jax.jit(...).lower(**specs)`` needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+__all__ = ["SHAPES", "ShapeCase", "input_specs", "skip_reason"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCase] = {
+    "train_4k": ShapeCase("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524_288, 1, "decode"),
+}
+
+# long_500k eligibility (DESIGN.md §4): SSM / hybrid / sliding-window only.
+LONG_OK = {"rwkv6-3b", "jamba-v0.1-52b", "gemma2-2b"}
+
+
+def skip_reason(cfg: ModelConfig, case: ShapeCase) -> Optional[str]:
+    if case.name == "long_500k" and cfg.name not in LONG_OK:
+        if cfg.family == "audio":
+            return ("encoder-decoder audio model: a 500k-token decoder "
+                    "cache has no audio meaning")
+        return ("pure full-attention architecture without a sliding-window "
+                "variant; 500k dense KV cache excluded by the brief")
+    return None
+
+
+def _context_spec(cfg: ModelConfig, batch: int, dtype):
+    if cfg.family == "audio":
+        return jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model),
+                                    dtype)
+    if cfg.family == "vlm":
+        return jax.ShapeDtypeStruct((batch, cfg.n_image_tokens, cfg.d_model),
+                                    dtype)
+    return None
+
+
+def input_specs(cfg: ModelConfig, case: ShapeCase,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one step of the given kind."""
+    b, s = case.global_batch, case.seq_len
+    tok = jnp.int32
+    if case.kind == "train":
+        out = {
+            "tokens": jax.ShapeDtypeStruct((b, s), tok),
+            "labels": jax.ShapeDtypeStruct((b, s), tok),
+        }
+        ctx = _context_spec(cfg, b, dtype)
+        if ctx is not None:
+            out["context"] = ctx
+        return out
+    if case.kind == "prefill":
+        cache = jax.eval_shape(
+            lambda: transformer.init_cache(cfg, b, s, dtype))
+        out = {
+            "tokens": jax.ShapeDtypeStruct((b, s), tok),
+            "cache": cache,
+        }
+        ctx = _context_spec(cfg, b, dtype)
+        if ctx is not None:
+            out["context"] = ctx
+        return out
+    if case.kind == "decode":
+        cache = jax.eval_shape(
+            lambda: transformer.init_cache(cfg, b, s, dtype))
+        out = {
+            "token": jax.ShapeDtypeStruct((b,), tok),
+            "cache": cache,
+        }
+        ctx = _context_spec(cfg, b, dtype)
+        if ctx is not None:
+            out["context"] = ctx
+        return out
+    raise ValueError(case.kind)

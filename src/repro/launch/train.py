@@ -1,0 +1,100 @@
+"""Production training launcher.
+
+On real TPU pods this process runs once per host (jax.distributed
+auto-init); in this container it drives the same code over N simulated
+nodes. Selects architecture / algorithm / gossip parameters from the CLI
+and runs the distributed SDM-DSGD train step built by
+``repro.train.steps.make_distributed_train``.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --smoke \
+      --steps 5 --mesh 1x2            # reduced config, 2-device debug mesh
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--mesh", default="single_pod")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--algorithm", default="sdm_dsgd",
+                    choices=["sdm_dsgd", "dsgd", "allreduce"])
+    ap.add_argument("--p", type=float, default=0.2)
+    ap.add_argument("--theta", type=float, default=0.5)
+    ap.add_argument("--gamma", type=float, default=1e-2)
+    ap.add_argument("--sigma", type=float, default=0.0)
+    ap.add_argument("--clip-c", type=float, default=None)
+    ap.add_argument("--gossip-mode", default="bernoulli",
+                    choices=["bernoulli", "fixedk_packed"])
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import configs
+    from repro.checkpoint import save_checkpoint
+    from repro.core.sdm_dsgd import SDMConfig
+    from repro.data import TokenStream
+    from repro.launch.mesh import make_mesh_by_name, node_axis_names
+    from repro.train import steps as steps_mod
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    mesh = make_mesh_by_name(args.mesh)
+    node_axes = node_axis_names(mesh)
+    n_nodes = 1
+    for a in node_axes:
+        n_nodes *= mesh.shape[a]
+
+    batch = args.global_batch or max(n_nodes, 2 * n_nodes)
+    seq = args.seq_len or 64 if args.smoke else 4096
+
+    tc = steps_mod.DistributedTrainConfig(
+        model=cfg,
+        sdm=SDMConfig(p=args.p, theta=args.theta, gamma=args.gamma,
+                      sigma=args.sigma, clip_c=args.clip_c,
+                      mode=args.gossip_mode),
+        algorithm=args.algorithm,
+        param_dtype=jnp.float32 if args.smoke else jnp.bfloat16)
+
+    print(f"arch={cfg.name} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"nodes={n_nodes} algo={args.algorithm} p={args.p} theta={args.theta}")
+
+    state = steps_mod.init_distributed_state(tc, mesh,
+                                             jax.random.PRNGKey(args.seed))
+    step_fn = jax.jit(steps_mod.make_distributed_train(tc, mesh))
+    stream = TokenStream(vocab_size=cfg.vocab_size, batch=batch, seq_len=seq,
+                         seed=args.seed)
+
+    has_ctx = cfg.family in ("audio", "vlm")
+    for t in range(args.steps):
+        tokens, labels = stream.batch_at(t)
+        fn_args = [state, jnp.asarray(tokens), jnp.asarray(labels)]
+        if has_ctx:
+            shape = (batch, cfg.encoder_seq if cfg.family == "audio"
+                     else cfg.n_image_tokens, cfg.d_model)
+            fn_args.append(jnp.full(shape, 0.01, tc.param_dtype))
+        t0 = time.time()
+        state, loss = step_fn(*fn_args)
+        print(f"step {t:4d} loss {float(loss):.4f} "
+              f"({time.time() - t0:.2f}s)", flush=True)
+
+    if args.checkpoint_dir:
+        save_checkpoint(args.checkpoint_dir, args.steps, state)
+        print(f"checkpoint written to {args.checkpoint_dir}")
+
+
+if __name__ == "__main__":
+    main()

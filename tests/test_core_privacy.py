@@ -1,0 +1,98 @@
+"""Privacy accountant: Theorem 1, Corollary 2, Theorem 4, Proposition 5."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import privacy
+
+
+BASE = dict(G=5.0, m=1200, tau=1.0 / 1200, p=0.2, sigma=2.0, delta=1e-5)
+
+
+def test_theorem1_epsilon_formula():
+    params = privacy.PrivacyParams(**BASE)
+    T, eps_t = 1000, 0.5
+    alpha = 2 * math.log(1 / 1e-5) / eps_t + 1
+    expected = 4 * alpha * 0.2 * T * (BASE["tau"] * 5.0 / (1200 * 2.0)) ** 2 + eps_t / 2
+    assert privacy.epsilon_sdm(params, T, eps_t) == pytest.approx(expected)
+
+
+def test_sigma_min_precondition():
+    params = privacy.PrivacyParams(**{**BASE, "sigma": 0.5})  # sigma^2 < 1/1.25
+    assert privacy.epsilon_sdm(params, 100, 0.5) == math.inf
+
+
+def test_sparsifier_improves_epsilon_by_p():
+    """Theorem 1: eps-part scales linearly in p."""
+    eps_t = 0.4
+    e_small = privacy.epsilon_sdm(privacy.PrivacyParams(**{**BASE, "p": 0.1}), 500, eps_t)
+    e_big = privacy.epsilon_sdm(privacy.PrivacyParams(**{**BASE, "p": 0.2}), 500, eps_t)
+    assert (e_big - eps_t / 2) == pytest.approx(2.0 * (e_small - eps_t / 2))
+
+
+def test_proposition5_p_squared_gap():
+    """Reversed design is worse by exactly 1/p^2 in the eps-part (§4.3)."""
+    params = privacy.PrivacyParams(**BASE)
+    T, eps_t = 300, 0.3
+    sdm = privacy.epsilon_sdm(params, T, eps_t) - eps_t / 2
+    alt = privacy.epsilon_alternative(params, T, eps_t) - eps_t / 2
+    assert alt / sdm == pytest.approx(1.0 / params.p ** 2, rel=1e-6)
+
+
+def test_corollary2_sigma_inverts_theorem1():
+    """Running Theorem 1 with Corollary 2's sigma recovers ~eps (tau=1/m)."""
+    G, m, p, T, eps, delta = 5.0, 300, 0.2, 200_000, 0.05, 1e-5
+    sigma = privacy.sigma_for_budget(G, m, p, T, eps, delta)
+    assert sigma ** 2 >= privacy.SIGMA_SQ_MIN
+    params = privacy.PrivacyParams(G=G, m=m, tau=1.0 / m, p=p, sigma=sigma,
+                                   delta=delta)
+    # eps_total = 4 alpha p T (G/(m^2 sigma))^2 + eps/2 with Cor-2 sigma
+    # == eps^2/(2 log(1/delta)+eps) * alpha/2 ... verify it is close to eps.
+    total = privacy.epsilon_sdm(params, T, eps)
+    assert total == pytest.approx(eps, rel=0.01)
+
+
+def test_corollary2_raises_when_infeasible():
+    with pytest.raises(ValueError):
+        privacy.sigma_for_budget(G=5.0, m=10_000, p=0.2, T=10, eps=1.0)
+
+
+def test_theorem4_m4_scaling():
+    """T_max = O(m^4): doubling m multiplies the budget by 16."""
+    t1 = privacy.max_iterations(G=5.0, m=100, p=0.2, eps=1.0)
+    t2 = privacy.max_iterations(G=5.0, m=200, p=0.2, eps=1.0)
+    assert t2 / t1 == pytest.approx(16.0, rel=0.01)
+
+
+def test_accountant_tracks_composition():
+    params = privacy.PrivacyParams(**BASE)
+    acc = privacy.PrivacyAccountant(params, eps_target=0.5)
+    acc.step(1000)
+    assert acc.steps == 1000
+    # Lemma 4 conversion with alpha - 1 = 2 log(1/delta)/eps gives exactly
+    # rho*T + eps/2, matching Theorem 1.
+    assert acc.epsilon == pytest.approx(privacy.epsilon_sdm(params, 1000, 0.5))
+
+
+@given(p=st.floats(0.01, 1.0), T=st.integers(1, 10_000),
+       sigma=st.floats(1.0, 50.0))
+@settings(max_examples=100, deadline=None)
+def test_epsilon_monotonicity_properties(p, T, sigma):
+    """eps grows with T and p, shrinks with sigma (Remark 2)."""
+    mk = lambda **kw: privacy.PrivacyParams(**{**BASE, "sigma": sigma, "p": p, **kw})
+    e = privacy.epsilon_sdm(mk(), T, 0.5)
+    assert e >= 0.25  # >= eps_target / 2
+    assert privacy.epsilon_sdm(mk(), T + 100, 0.5) >= e
+    if sigma + 1.0 <= 50.0:
+        assert privacy.epsilon_sdm(mk(sigma=sigma + 1.0), T, 0.5) <= e
+
+
+@given(m=st.integers(50, 5000))
+@settings(max_examples=50, deadline=None)
+def test_theorem4_beats_m2_prior_art(m):
+    """The paper's T=O(m^4) dominates the O(m^2) state of the art for large m."""
+    t_paper = privacy.max_iterations(G=5.0, m=m, p=0.2, eps=1.0)
+    t_prior = m ** 2
+    if m >= 500:
+        assert t_paper > t_prior

@@ -1,0 +1,101 @@
+"""Sparsifier S(.) properties: Definition 2 and Lemma 1 of §3."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparsifier
+
+
+def test_values_are_scaled_or_zero():
+    key = jax.random.PRNGKey(0)
+    x = jnp.ones((4, 257))
+    out = sparsifier.bernoulli_sparsify(key, x, 0.3)
+    vals = np.unique(np.asarray(out))
+    assert all(np.isclose(v, 0.0) or np.isclose(v, 1.0 / 0.3, rtol=1e-5)
+               for v in vals)
+
+
+def test_unbiasedness_statistical():
+    """E[S(x)] = x (Lemma 1.i), checked by averaging many masks."""
+    x = jnp.array(np.random.default_rng(0).normal(size=(64,)), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(1), 4000)
+    outs = jax.vmap(lambda k: sparsifier.bernoulli_sparsify(k, x, 0.25))(keys)
+    np.testing.assert_allclose(np.asarray(outs.mean(0)), np.asarray(x),
+                               atol=0.25)
+
+
+def test_variance_matches_lemma1():
+    """Var(S(x)) = (1/p - 1)||x||^2 (summed over coordinates)."""
+    p = 0.4
+    x = jnp.array(np.random.default_rng(2).normal(size=(128,)), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(3), 8000)
+    outs = np.asarray(
+        jax.vmap(lambda k: sparsifier.bernoulli_sparsify(k, x, p))(keys))
+    emp_var = outs.var(axis=0).sum()
+    pred = float(sparsifier.sparsifier_variance(x, p))
+    assert emp_var == pytest.approx(pred, rel=0.1)
+
+
+def test_p_one_identity():
+    x = jnp.arange(10.0)
+    out = sparsifier.bernoulli_sparsify(jax.random.PRNGKey(0), x, 1.0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_fixedk_exact_count():
+    x = jnp.array(np.random.default_rng(4).normal(size=(1000,)), jnp.float32)
+    out = sparsifier.fixedk_sparsify(jax.random.PRNGKey(5), x, 0.2)
+    assert int((np.asarray(out) != 0).sum()) == 200
+
+
+def test_fixedk_unbiased_statistical():
+    x = jnp.array(np.random.default_rng(6).normal(size=(50,)), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(7), 4000)
+    outs = jax.vmap(lambda k: sparsifier.fixedk_sparsify(k, x, 0.3))(keys)
+    np.testing.assert_allclose(np.asarray(outs.mean(0)), np.asarray(x),
+                               atol=0.25)
+
+
+def test_fixedk_pack_unpack_roundtrip():
+    d = 333
+    x = jnp.array(np.random.default_rng(8).normal(size=(d,)), jnp.float32)
+    k = sparsifier.num_kept(d, 0.25)
+    idx = sparsifier.fixedk_indices(jax.random.PRNGKey(9), d, k)
+    dense = sparsifier.fixedk_unpack(sparsifier.fixedk_pack(x, idx, d), idx, d)
+    # kept coordinates scaled by exactly d/k, others zero
+    mask = np.zeros(d, bool)
+    mask[np.asarray(idx)] = True
+    np.testing.assert_allclose(np.asarray(dense)[mask],
+                               np.asarray(x)[mask] * (d / k), rtol=1e-6)
+    assert (np.asarray(dense)[~mask] == 0).all()
+
+
+def test_fixedk_indices_distinct_and_regenerable():
+    idx1 = sparsifier.fixedk_indices(jax.random.PRNGKey(10), 500, 100)
+    idx2 = sparsifier.fixedk_indices(jax.random.PRNGKey(10), 500, 100)
+    np.testing.assert_array_equal(np.asarray(idx1), np.asarray(idx2))
+    assert len(np.unique(np.asarray(idx1))) == 100
+
+
+@given(d=st.integers(1, 2048), p=st.floats(0.01, 1.0))
+@settings(max_examples=200, deadline=None)
+def test_num_kept_properties(d, p):
+    k = sparsifier.num_kept(d, p)
+    assert 1 <= k <= d
+    assert k >= p * d - 1e-9  # ceil
+
+
+@given(p=st.sampled_from([0.1, 0.25, 0.5, 0.9]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_sparsify_support_subset_property(p, seed):
+    """S(x) is supported on a subset of supp(x) and scales by 1/p."""
+    x = jnp.array(np.random.default_rng(seed % 100).normal(size=(64,)),
+                  jnp.float32)
+    out = np.asarray(
+        sparsifier.bernoulli_sparsify(jax.random.PRNGKey(seed), x, p))
+    xs = np.asarray(x)
+    nz = out != 0
+    np.testing.assert_allclose(out[nz], xs[nz] / p, rtol=1e-5)

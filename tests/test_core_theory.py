@@ -1,0 +1,83 @@
+"""Convergence-theory calculators: Lemma 1, Corollary 3, Remark 1."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import theory, topology
+
+
+TOPO = topology.ring(8)
+
+
+def _inputs(**kw):
+    base = dict(n=8, m=100, d=64, p=0.5, theta=0.2, gamma=0.05,
+                beta=TOPO.beta, lambda_n=TOPO.lambda_n)
+    base.update(kw)
+    return theory.BoundInputs(**base)
+
+
+def test_theta_bound_and_default():
+    b = theory.theta_upper_bound(0.2, TOPO.lambda_n, 0.05, 1.0)
+    d = theory.default_theta(0.2, TOPO.lambda_n, 0.05, 1.0)
+    assert 0 < d < b
+
+
+def test_lemma1_terms_positive_and_decrease_in_T():
+    x = _inputs()
+    t1 = theory.lemma1_bound(x, 1000)
+    t2 = theory.lemma1_bound(x, 100_000)
+    assert t2 < t1
+    terms = theory.lemma1_terms(x, 1000)
+    assert set(terms) == {"I", "II", "III", "IV"}
+    assert all(v >= 0 for v in terms.values())
+
+
+def test_lemma1_rejects_invalid_theta():
+    with pytest.raises(ValueError):
+        theory.lemma1_terms(_inputs(theta=0.99, p=0.1), 1000)
+
+
+def test_term_I_scales_inverse_T():
+    x = _inputs()
+    a = theory.lemma1_terms(x, 1000)["I"]
+    b = theory.lemma1_terms(x, 2000)["I"]
+    assert a / b == pytest.approx(2.0)
+
+
+def test_sparsification_noise_vanishes_at_p1():
+    """At p=1 the (1/p - 1) compression-noise factors vanish: (IV) == 0."""
+    x = _inputs(p=1.0, theta=0.5)
+    terms = theory.lemma1_terms(x, 1000)
+    assert terms["IV"] == pytest.approx(0.0, abs=1e-12)
+
+
+def test_corollary3_requirements():
+    assert theory.min_iterations_for_rate(8, TOPO.beta) > 0
+    g = theory.default_gamma(8, 10_000)
+    assert 0 < g < 1
+
+
+def test_dcdsgd_threshold_formula():
+    ln = -0.5
+    expected = 4 * (1 - ln) ** 2 / (4 * (1 - ln) ** 2 + (1 - abs(ln)) ** 2)
+    assert theory.dcdsgd_min_p(ln) == pytest.approx(expected)
+
+
+@given(p=st.floats(0.05, 1.0), gamma=st.floats(1e-4, 0.5),
+       lam=st.floats(-0.9, 0.9))
+@settings(max_examples=100, deadline=None)
+def test_default_theta_always_valid(p, gamma, lam):
+    """Corollary 3's theta choice always satisfies Lemma 1's bound."""
+    th = theory.default_theta(p, lam, gamma, 1.0)
+    assert 0 < th < theory.theta_upper_bound(p, lam, gamma, 1.0)
+
+
+@given(m1=st.integers(50, 500), scale=st.integers(2, 4))
+@settings(max_examples=50, deadline=None)
+def test_bound_inputs_constants(m1, scale):
+    x1 = _inputs(m=m1)
+    assert x1.C2 > 0 and x1.C3 > 0
+    # C2 decreases with m (less sampling noise)
+    x2 = _inputs(m=m1 * scale)
+    assert x2.C2 < x1.C2

@@ -1,0 +1,73 @@
+"""Topology / consensus-matrix properties (paper §4.2 requirements)."""
+import numpy as np
+import pytest
+
+from repro.core import topology, theory
+
+
+TOPOS = {
+    "ring8": topology.ring(8),
+    "ring50": topology.ring(50),
+    "torus4x4": topology.torus_2d(4, 4),
+    "complete8": topology.complete(8),
+    "star6": topology.star(6),
+    "er50": topology.erdos_renyi(50, 0.35, seed=0),
+}
+
+
+@pytest.mark.parametrize("name", sorted(TOPOS))
+def test_consensus_matrix_properties(name):
+    topo = TOPOS[name]
+    w = topo.weights
+    # 1) doubly stochastic
+    np.testing.assert_allclose(w.sum(axis=0), 1.0, atol=1e-8)
+    np.testing.assert_allclose(w.sum(axis=1), 1.0, atol=1e-8)
+    # 2) symmetric
+    np.testing.assert_allclose(w, w.T, atol=1e-10)
+    # spectrum in (-1, 1] with a single unit eigenvalue (connected graph)
+    ev = topo.eigenvalues
+    assert ev[0] == pytest.approx(1.0, abs=1e-8)
+    assert ev[1] < 1.0 - 1e-10
+    assert ev[-1] > -1.0
+    assert 0.0 <= topo.beta < 1.0
+
+
+def test_er_graph_matches_paper_construction():
+    """W = I - 2/(3 lambda_max(L)) L for the ER experimental graph."""
+    topo = TOPOS["er50"]
+    deg = np.diag(topo.adjacency.sum(axis=1))
+    lap = deg - topo.adjacency
+    lam_max = np.max(np.linalg.eigvalsh(lap))
+    expected = np.eye(50) - 2.0 / (3.0 * lam_max) * lap
+    np.testing.assert_allclose(topo.weights, expected, atol=1e-12)
+
+
+def test_ring_neighbors():
+    topo = TOPOS["ring8"]
+    assert set(topo.neighbors(0)) == {1, 7}
+    assert set(topo.neighbors(3)) == {2, 4}
+
+
+def test_complete_beta_zero():
+    assert TOPOS["complete8"].beta == pytest.approx(0.0, abs=1e-8)
+
+
+def test_mixed_with_theta_spectrum():
+    """W_theta = (1-theta)I + theta W keeps double stochasticity; Lemma 6."""
+    topo = TOPOS["ring8"]
+    theta = 0.6
+    w_th = topo.mixed_with_theta(theta)
+    np.testing.assert_allclose(w_th.sum(axis=1), 1.0, atol=1e-10)
+    ev = np.sort(np.linalg.eigvalsh(w_th))[::-1]
+    beta_th = max(abs(ev[1]), abs(ev[-1]))
+    # Lemma 6: 1/(1-beta_theta) <= 1/(theta (1-beta))
+    assert 1.0 / (1.0 - beta_th) <= 1.0 / (theta * (1.0 - topo.beta)) + 1e-9
+
+
+def test_dcdsgd_threshold_monotone():
+    """Remark 1: the DC-DSGD p-threshold; worse (higher) as lambda_n -> -1."""
+    ths = [theory.dcdsgd_min_p(ln) for ln in (-0.9, -0.5, 0.0, 0.5)]
+    assert all(0 < t < 1 for t in ths)
+    assert ths == sorted(ths, reverse=True)
+    # p = 0.2 is below the threshold for typical graphs -> DC-DSGD invalid
+    assert theory.dcdsgd_min_p(TOPOS["er50"].lambda_n) > 0.2

@@ -1,0 +1,37 @@
+"""Distributed (shard_map + ppermute) path == dense-W reference, bit-close.
+
+Runs in a subprocess because XLA_FLAGS device-count faking must happen
+before jax initializes (the main test process keeps 1 device).
+"""
+import pathlib
+import re
+import subprocess
+import sys
+
+import pytest
+
+HELPER = pathlib.Path(__file__).parent / "helpers" / "dist_equiv_check.py"
+SRC = str(pathlib.Path(__file__).parent.parent / "src")
+
+
+def _run(mode: str) -> dict:
+    out = subprocess.run(
+        [sys.executable, str(HELPER), mode], capture_output=True, text=True,
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+        timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    vals = dict(re.findall(r"^(\w+) (.+)$", out.stdout, re.M))
+    return vals
+
+
+@pytest.mark.parametrize("mode", ["bernoulli", "fixedk_packed",
+                                  "fixedk_rows"])
+def test_distributed_matches_reference(mode):
+    vals = _run(mode)
+    err, scale = float(vals["MAXERR"]), float(vals["SCALE"])
+    assert scale > 0.01  # the run actually moved
+    assert err < 1e-4 * max(scale, 1.0), (err, scale)
+    assert vals["HAS_CPERM"] == "True"
+    # the fused 2-buffer step is the same algorithm (half-step shifted)
+    assert float(vals["MAXERR_FUSED"]) < 1e-4 * max(scale, 1.0), vals

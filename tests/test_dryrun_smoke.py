@@ -1,0 +1,53 @@
+"""Dry-run integration smoke: one cheap (arch x shape) per step kind
+lowers + compiles on the 512-device production mesh, in a subprocess
+(XLA device-count faking must precede jax init)."""
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+SRC = str(pathlib.Path(__file__).parent.parent / "src")
+
+SCRIPT = """
+import sys
+from repro.launch.dryrun import build_case
+rec = build_case({arch!r}, {shape!r}, "single_pod", "sdm_dsgd_fused",
+                 "fixedk_rows", out_root="", verbose=False, probes=False)
+assert rec["status"] == "ok", rec
+assert rec["n_devices"] == 256
+assert rec["flops"] > 0 and rec["collective_bytes"]["total"] > 0
+assert rec["memory"]["peak_memory_in_bytes"] > 0
+print("DRYRUN_OK", rec["arch"], rec["shape"])
+"""
+
+
+def _run(arch, shape):
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT.format(arch=arch, shape=shape)],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "DRYRUN_OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_decode_case():
+    _run("rwkv6-3b", "long_500k")   # cheapest decode case
+
+
+@pytest.mark.slow
+def test_dryrun_skip_case():
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "from repro.launch.dryrun import build_case;"
+         "rec = build_case('phi3-medium-14b','long_500k','single_pod',"
+         "'sdm_dsgd','bernoulli',out_root='',verbose=False,probes=False);"
+         "assert rec['status']=='skipped', rec; print('SKIP_OK')"],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SKIP_OK" in out.stdout

@@ -1,0 +1,91 @@
+"""Beyond-paper extension: error-feedback sparsification (EF-SDM-DSGD)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sdm_dsgd, topology
+
+N, DIM = 8, 12
+
+
+def _problem(seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(N, 32, DIM)) / np.sqrt(32)
+    x_true = rng.normal(size=(DIM,))
+    b = A @ x_true + 0.01 * rng.normal(size=(N, 32))
+    return jnp.asarray(A, jnp.float32), jnp.asarray(b, jnp.float32), x_true
+
+
+A_S, B_S, X_TRUE = _problem()
+
+
+def grad_fn(params_stack, batch):
+    del batch
+
+    def one(a, b, x):
+        return a.T @ (a @ x - b) / a.shape[0]
+
+    g = jax.vmap(one)(A_S, B_S, params_stack["w"])
+    loss = jnp.mean((jnp.einsum("nbd,nd->nb", A_S, params_stack["w"])
+                     - B_S) ** 2)
+    return {"w": g}, loss
+
+
+def _run(cfg, steps=700, seed=0):
+    topo = topology.ring(N)
+    sim = sdm_dsgd.ReferenceSimulator(topo, cfg)
+    state = sim.init({"w": jnp.zeros((N, DIM))})
+    key = jax.random.PRNGKey(seed)
+
+    @jax.jit
+    def body(state, key):
+        return sim.step(state, grad_fn, None, key)
+
+    for _ in range(steps):
+        key, sub = jax.random.split(key)
+        state, loss = body(state, sub)
+    return float(loss), state
+
+
+def test_ef_instability_documents_why_the_paper_needs_unbiasedness():
+    """NEGATIVE RESULT (kept as a regression-pinned finding): error
+    feedback with a contractive mask*d compressor is UNSTABLE inside
+    differential-coded gossip. Unlike plain EF-SGD (gradient-only), the
+    SDM-DSGD differential d = theta*(Wx - x - gamma*g) carries the
+    CONSENSUS correction; p-scaling it slows mixing ~p-fold while
+    disagreement keeps being injected, so the residual accumulates and
+    the iterates drift. This is structural support for the paper's
+    insistence on UNBIASED sparsification (Definition 2 + Lemma 1):
+    short horizons look fine, long horizons diverge.
+    """
+    base = dict(p=0.05, theta=0.1, gamma=0.3)
+    short, _ = _run(sdm_dsgd.SDMConfig(error_feedback=True, **base),
+                    steps=400, seed=0)
+    long_, state = _run(sdm_dsgd.SDMConfig(error_feedback=True, **base),
+                        steps=2500, seed=0)
+    assert np.isfinite(short) and short < 4.0      # short horizon: trains
+    assert long_ > 2 * short                        # long horizon: drifts
+    # the same budget with the paper's unbiased sparsifier stays stable
+    stable, _ = _run(sdm_dsgd.SDMConfig(**base), steps=2500, seed=0)
+    assert np.isfinite(stable) and stable < 0.5
+
+
+def test_ef_state_threading():
+    cfg = sdm_dsgd.SDMConfig(p=0.25, theta=0.2, gamma=0.1,
+                             error_feedback=True)
+    _, state = _run(cfg, steps=5)
+    assert state.e is not None
+    # residual is nonzero after sparsified rounds
+    assert float(jnp.abs(state.e["w"]).max()) > 0
+
+    cfg2 = sdm_dsgd.SDMConfig(p=0.25, theta=0.2, gamma=0.1)
+    _, state2 = _run(cfg2, steps=5)
+    assert state2.e is None
+
+
+def test_ef_identity_at_p1():
+    """With p=1 nothing is dropped; EF residual stays exactly zero."""
+    cfg = sdm_dsgd.SDMConfig(p=1.0, theta=0.5, gamma=0.1,
+                             error_feedback=True)
+    _, state = _run(cfg, steps=5)
+    np.testing.assert_allclose(np.asarray(state.e["w"]), 0.0, atol=1e-7)

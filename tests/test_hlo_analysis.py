@@ -1,0 +1,36 @@
+"""Collective-byte parser unit tests over hand-written HLO snippets."""
+from repro.launch import hlo_analysis
+
+
+HLO = """
+ENTRY main {
+  %p0 = bf16[2,512]{1,0} parameter(0)
+  %ar = bf16[2,512]{1,0} all-reduce(%p0), replica_groups={}
+  %ag = f32[4,128]{1,0} all-gather(%p0), dimensions={0}
+  %cp = bf16[1024]{0} collective-permute(%ar), source_target_pairs={{0,1}}
+  %ars = (bf16[2,512]{1,0}, bf16[2,512]{1,0}) all-reduce-start(%p0)
+  %ard = bf16[2,512]{1,0} all-reduce-done(%ars)
+  %a2a = f32[8,64]{1,0} all-to-all(%ag), dimensions={0}
+  %rs = f32[2,64]{1,0} reduce-scatter(%ag), dimensions={0}
+}
+"""
+
+
+def test_collective_bytes_by_kind():
+    out = hlo_analysis.collective_bytes(HLO)
+    assert out["all-reduce"] == 2 * 512 * 2 + 2 * (2 * 512 * 2)  # ar + start tuple
+    assert out["all-gather"] == 4 * 128 * 4
+    assert out["collective-permute"] == 1024 * 2
+    assert out["all-to-all"] == 8 * 64 * 4
+    assert out["reduce-scatter"] == 2 * 64 * 4
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_done_ops_not_double_counted():
+    counts = hlo_analysis.count_ops(HLO)
+    assert counts["all-reduce"] == 2  # plain + start, not done
+
+
+def test_empty_and_garbage():
+    assert hlo_analysis.collective_bytes("") == {"total": 0}
+    assert hlo_analysis.collective_bytes("add(f32[2] x, y)") == {"total": 0}

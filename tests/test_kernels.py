@@ -1,0 +1,187 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis.
+
+Kernels execute in interpret mode (CPU container; TPU is the target).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attn.ops import flash_attention
+from repro.kernels.flash_attn.ref import attention_ref
+from repro.kernels.sdm_update import ref as sdm_ref
+from repro.kernels.sdm_update.ops import sdm_update
+from repro.kernels.sdm_update.sdm_update import LANE, sdm_update_pallas
+
+
+# --------------------------------------------------------------------------
+# sdm_update
+# --------------------------------------------------------------------------
+
+def _operands(rows, seed=0):
+    rng = np.random.default_rng(seed)
+    shape = (rows, LANE)
+    f = lambda: jnp.asarray(rng.normal(size=shape), jnp.float32)
+    bits = lambda: jnp.asarray(
+        rng.integers(0, 2**32, size=shape, dtype=np.uint32))
+    return f(), f(), f(), f(), bits(), bits(), bits()
+
+
+SDM_KW = dict(p=0.25, theta=0.4, gamma=0.05, sigma=0.7, clip_c=1.5,
+              self_w=1.0 / 3.0)
+
+
+@pytest.mark.parametrize("rows,block_rows", [(8, 8), (16, 8), (64, 32)])
+def test_sdm_update_matches_ref(rows, block_rows):
+    ops = _operands(rows)
+    out_k = sdm_update_pallas(*ops, block_rows=block_rows, interpret=True,
+                              **SDM_KW)
+    out_r = sdm_ref.sdm_update_ref(*ops, **SDM_KW)
+    for a, b, name in zip(out_k, out_r, ("x_new", "s_new", "sd")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6,
+                                   atol=1e-6, err_msg=name)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(SDM_KW, sigma=0.0),            # no noise branch
+    dict(SDM_KW, clip_c=None),          # no clip branch
+    dict(SDM_KW, p=1.0),                # no sparsification
+    dict(SDM_KW, theta=1.0),            # DC-DSGD corner
+])
+def test_sdm_update_branch_configs(kw):
+    ops = _operands(8, seed=3)
+    out_k = sdm_update_pallas(*ops, block_rows=8, interpret=True, **kw)
+    out_r = sdm_ref.sdm_update_ref(*ops, **kw)
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6,
+                                   atol=1e-6)
+
+
+def test_sdm_update_semantics():
+    """Kernel implements Algorithm 1's algebra: check against hand-computed
+    dense formulas (not just the ref module)."""
+    ops = _operands(8, seed=5)
+    x, s, nb, g, mb, n1, n2 = ops
+    kw = dict(SDM_KW, sigma=0.0, clip_c=None, p=1.0)
+    x2, s2, sd = sdm_update_pallas(*ops, block_rows=8, interpret=True, **kw)
+    s_new = s + nb
+    y = (1 - kw["theta"]) * x + kw["theta"] * (
+        kw["self_w"] * x + s_new - kw["gamma"] * g)
+    np.testing.assert_allclose(np.asarray(sd), np.asarray(y - x), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(x2), np.asarray(y), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_sdm_update_pytree_wrapper():
+    tree = {"a": jnp.ones((3, 5)), "b": jnp.arange(7.0)}
+    zeros = jax.tree.map(jnp.zeros_like, tree)
+    key = jax.random.PRNGKey(0)
+    x2, s2, sd = sdm_update(tree, zeros, zeros, tree, key, use_kernel=True,
+                            block_rows=8, **SDM_KW)
+    xr, sr, sdr = sdm_update(tree, zeros, zeros, tree, key, use_kernel=False,
+                             **SDM_KW)
+    for t1, t2 in ((x2, xr), (s2, sr), (sd, sdr)):
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6), t1, t2)
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       p=st.sampled_from([0.1, 0.5, 1.0]),
+       theta=st.floats(0.05, 1.0),
+       sigma=st.sampled_from([0.0, 0.5]))
+@settings(max_examples=25, deadline=None)
+def test_sdm_update_property_sweep(seed, p, theta, sigma):
+    ops = _operands(8, seed=seed % 1000)
+    kw = dict(p=p, theta=theta, gamma=0.01, sigma=sigma, clip_c=2.0,
+              self_w=0.5)
+    out_k = sdm_update_pallas(*ops, block_rows=8, interpret=True, **kw)
+    out_r = sdm_ref.sdm_update_ref(*ops, **kw)
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+def _qkv(b, sq, skv, h, kvh, dh, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, sq, h, dh)), dtype) * 0.5
+    k = jnp.asarray(rng.normal(size=(b, skv, kvh, dh)), dtype) * 0.5
+    v = jnp.asarray(rng.normal(size=(b, skv, kvh, dh)), dtype) * 0.5
+    return q, k, v
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sq,skv,dh", [(128, 128, 64), (256, 384, 128),
+                                       (128, 160, 32)])
+def test_flash_matches_ref_shapes_dtypes(sq, skv, dh, dtype):
+    q, k, v = _qkv(2, sq, skv, 4, 4, dh, dtype)
+    out = flash_attention(q, k, v, causal=False, block_q=128, block_k=128,
+                          use_kernel=True, interpret=True)
+    ref = flash_attention(q, k, v, causal=False, use_kernel=False)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, None, None),
+    (True, 64, None),        # gemma2 sliding window
+    (True, None, 50.0),      # gemma2 attn softcap
+    (True, 64, 50.0),
+])
+def test_flash_masking_variants(causal, window, softcap):
+    q, k, v = _qkv(1, 256, 256, 2, 2, 64, jnp.float32, seed=7)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, use_kernel=True, interpret=True)
+    ref = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_flash_gqa_groups():
+    q, k, v = _qkv(2, 128, 128, 8, 2, 64, jnp.float32, seed=9)
+    out = flash_attention(q, k, v, causal=True, use_kernel=True,
+                          interpret=True)
+    ref = flash_attention(q, k, v, causal=True, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_flash_matches_model_sdpa():
+    """Cross-validate the kernel against the model's _sdpa (independent)."""
+    from repro.models.layers import _sdpa
+    b, s, h, dh = 2, 128, 4, 64
+    q, k, v = _qkv(b, s, s, h, h, dh, jnp.float32, seed=11)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    ref = _sdpa(q, k, v, q_positions=pos, kv_positions=pos, causal=True,
+                window=None, softcap_val=None)
+    out = flash_attention(q, k, v, causal=True, use_kernel=True,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5,
+                               rtol=3e-5)
+
+
+@given(seed=st.integers(0, 10_000),
+       sq=st.sampled_from([128, 256]),
+       skv=st.sampled_from([128, 192, 320]),
+       causal=st.booleans())
+@settings(max_examples=15, deadline=None)
+def test_flash_property_sweep(seed, sq, skv, causal):
+    q, k, v = _qkv(1, sq, skv, 2, 1, 64, jnp.float32, seed=seed)
+    if causal and sq > skv:
+        skv = sq  # causal requires kv covers q positions in this harness
+        q, k, v = _qkv(1, sq, skv, 2, 1, 64, jnp.float32, seed=seed)
+    out = flash_attention(q, k, v, causal=causal, use_kernel=True,
+                          interpret=True)
+    ref = flash_attention(q, k, v, causal=causal, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5,
+                               rtol=3e-5)
