@@ -18,9 +18,14 @@ N_TRAIN = 10_000
 BATCH_PER_NODE = 16
 
 
-def make_mlr_testbed(seed: int = 0, n_train: int = N_TRAIN):
-    """Paper §5 setup: ER(50, 0.35) graph + MLR on MNIST-shaped data."""
-    topo = topology.erdos_renyi(N_NODES, 0.35, seed=seed)
+def make_mlr_testbed(seed: int = 0, n_train: int = N_TRAIN,
+                     topology_spec: str = "er:0.35"):
+    """Paper §5 setup: ER(50, 0.35) graph + MLR on MNIST-shaped data.
+
+    ``topology_spec`` swaps the gossip graph (topology.by_name syntax) so
+    every paper figure can be reproduced on ring/torus/star as well.
+    """
+    topo = topology.by_name(topology_spec, N_NODES, seed=seed)
     (x_tr, y_tr), (x_te, y_te) = classification_dataset(
         N_FEATURES, N_CLASSES, n_train, 2000, seed=seed)
     params0 = vision_small.mlr_init(jax.random.PRNGKey(seed))

@@ -13,8 +13,10 @@ from repro.core import baselines, sdm_dsgd, theory
 from repro.train.trainer import run_decentralized
 
 
-def run(comm_budget_elems: int = 60_000_000, gamma: float = 0.05):
-    topo, params, grad_fn, eval_fn, batches, m = common.make_mlr_testbed()
+def run(comm_budget_elems: int = 60_000_000, gamma: float = 0.05,
+        topology: str = "er:0.35"):
+    topo, params, grad_fn, eval_fn, batches, m = common.make_mlr_testbed(
+        topology_spec=topology)
     d = sum(int(x.size) for x in __import__("jax").tree.leaves(params)) \
         // topo.n_nodes
 
@@ -41,8 +43,8 @@ def run(comm_budget_elems: int = 60_000_000, gamma: float = 0.05):
 
     # At the SAME communication budget, sparser methods take more steps and
     # end lower (the paper's Fig. 3 ordering).
-    derived = ";".join(f"{k}:loss={v[0]:.4f},acc={v[1]:.4f}"
-                       for k, v in finals.items())
+    derived = f"topo={topo.name};" + ";".join(
+        f"{k}:loss={v[0]:.4f},acc={v[1]:.4f}" for k, v in finals.items())
     common.emit("fig3_comm_efficiency", 0.0, derived)
     assert finals["sdm_dsgd_p0.2"][0] <= finals["dsgd_p1.0"][0] * 1.02, derived
     assert finals["sdm_dsgd_p0.2"][1] >= finals["dsgd_p1.0"][1] - 0.01, derived
@@ -50,4 +52,11 @@ def run(comm_budget_elems: int = 60_000_000, gamma: float = 0.05):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--topology", default="er:0.35",
+                    help="gossip graph spec (topology.by_name syntax)")
+    ap.add_argument("--comm-budget", type=int, default=60_000_000)
+    args = ap.parse_args()
+    run(comm_budget_elems=args.comm_budget, topology=args.topology)

@@ -12,12 +12,47 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
+from repro.core import gossip, sparsifier, topology
 from repro.kernels.flash_attn.ops import flash_attention
 from repro.kernels.sdm_update import ref as sdm_ref
 from repro.kernels.sdm_update.sdm_update import LANE, sdm_update_pallas
 
+GOSSIP_TOPOLOGIES = ("ring", "torus", "er:0.35", "star", "complete")
+
+
+def run_gossip_schedules(topologies=GOSSIP_TOPOLOGIES, n_nodes: int = 16,
+                         d: int = 1 << 20, p: float = 0.1):
+    """Structural cost of PermuteSchedule gossip per topology.
+
+    Wall time on CPU is meaningless for collectives; the quantities that
+    matter on the ICI roofline are (a) collective-permute ROUNDS per
+    gossip step (latency term: each round is a serialized permute) and
+    (b) wire BYTES per node per step, dense vs packed fixed-k (bandwidth
+    term — packed must be exactly the p-fraction of dense). mix_dense
+    timing is the single-host reference cost for the same exchange.
+    """
+    kb = sparsifier.num_kept(d, p)
+    for spec in topologies:
+        topo = topology.by_name(spec, n_nodes)
+        sched = gossip.schedule_from_topology(topo)
+        mean_deg = float(np.mean(topo.degree))
+        dense = mean_deg * d * 4
+        packed = mean_deg * kb * 4
+        x = jnp.asarray(np.random.default_rng(0).normal(
+            size=(n_nodes, 256)), jnp.float32)
+        w = jnp.asarray(topo.weights, jnp.float32)
+        us = common.timeit_us(jax.jit(lambda w, x: gossip.mix_dense(w, x)),
+                              w, x, iters=50)
+        common.emit(
+            f"gossip_schedule_{topo.name}", us,
+            f"rounds={sched.n_rounds};mean_degree={mean_deg:.2f};"
+            f"dense_bytes/node/step={dense:.0f};"
+            f"packed_bytes/node/step={packed:.0f};"
+            f"packed_fraction={packed / dense:.4f}")
+
 
 def run():
+    run_gossip_schedules()
     # sdm_update: 7 input + 3 output tensors, one pass each = 10 tensor
     # touches fused; the unfused chain touches ~22 (clip r/w, noise add,
     # mixing axpy chain, mask, scale, 3 state updates).
@@ -63,4 +98,15 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--topology", default=None,
+                    help="bench only this gossip topology "
+                         "(default: the full sweep)")
+    ap.add_argument("--nodes", type=int, default=16)
+    args = ap.parse_args()
+    if args.topology is not None:
+        run_gossip_schedules((args.topology,), n_nodes=args.nodes)
+    else:
+        run()

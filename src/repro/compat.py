@@ -1,0 +1,112 @@
+"""JAX version tolerance layer.
+
+The repo targets the modern public API (`jax.shard_map`,
+`jax.make_mesh(..., axis_types=...)`, `jax.sharding.AxisType`,
+`AbstractMesh(axis_sizes, axis_names)`); older jaxlibs (0.4.x) expose
+the same functionality under `jax.experimental.shard_map.shard_map`
+with `check_rep`/`auto` instead of `check_vma`/`axis_names`, take no
+`axis_types`, and build `AbstractMesh` from a zipped shape tuple. All
+mesh/shard_map construction in this repo goes through these wrappers so
+a single site absorbs the skew.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Set
+
+import jax
+
+__all__ = ["make_mesh", "abstract_mesh", "shard_map", "auto_axis_types",
+           "get_abstract_mesh", "partial_auto_shard_map_broken"]
+
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+_HAS_JAX_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def auto_axis_types(n: int):
+    """(AxisType.Auto,) * n on new JAX, None (ignored) on old JAX."""
+    if _HAS_AXIS_TYPE:
+        return (jax.sharding.AxisType.Auto,) * n
+    return None
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              axis_types=None) -> jax.sharding.Mesh:
+    """jax.make_mesh across versions (axis_types only where supported)."""
+    if axis_types is None:
+        axis_types = auto_axis_types(len(axis_names))
+    try:
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types)
+    except TypeError:
+        return jax.make_mesh(axis_shapes, axis_names)
+
+
+def abstract_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """jax.sharding.AbstractMesh across versions."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(axis_shapes),
+                                         tuple(axis_names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(
+            tuple(zip(axis_names, axis_shapes)))
+
+
+def partial_auto_shard_map_broken(mesh, manual_axes) -> bool:
+    """True where a partial-auto shard_map region cannot compile at all.
+
+    Old jaxlibs fail XLA manual-subgroup checks when partitioning
+    `lax.ppermute` collectives or while-loops traced under shard_map with
+    leftover auto (GSPMD) axes. Callers should fall back to a FULL-manual
+    region — every mesh axis manual, tensor-parallel axes replicated —
+    which is semantically identical (and only slower on real TP meshes).
+    Full-manual regions are unaffected on all versions.
+    """
+    if _HAS_JAX_SHARD_MAP:
+        return False
+    return any(a not in manual_axes for a in mesh.axis_names)
+
+
+def cost_analysis(compiled) -> dict:
+    """compiled.cost_analysis() as a flat dict on every version.
+
+    Old jaxlibs return a one-element list of per-program dicts; new ones
+    return the dict directly.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return dict(cost)
+
+
+def get_abstract_mesh():
+    """The ambient abstract mesh, or None where the concept doesn't exist.
+
+    Callers fall back to binding sharding constraints against the
+    concrete mesh (the pre-abstract-mesh behaviour) on None.
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    return fn() if fn is not None else None
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[Set[str]] = None,
+              check_vma: bool = False):
+    """jax.shard_map across versions.
+
+    ``axis_names`` lists the MANUAL axes (new-API semantics); remaining
+    mesh axes stay auto/GSPMD. On old JAX this maps to the complementary
+    ``auto=`` frozenset and ``check_vma`` to ``check_rep``.
+    """
+    if _HAS_JAX_SHARD_MAP:
+        kwargs = {}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma,
+                             **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    auto: Any = frozenset()
+    if axis_names is not None:
+        auto = frozenset(a for a in mesh.axis_names if a not in axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)

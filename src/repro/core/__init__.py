@@ -5,6 +5,7 @@ from repro.core.sdm_dsgd import (SDMConfig, SDMState, ReferenceSimulator,
                                  transmitted_elements_per_step)
 from repro.core.baselines import (DSGDConfig, DSGDReference, dcdsgd_config,
                                   dsgd_distributed_step)
+from repro.core.gossip import PermuteSchedule, schedule_from_topology
 from repro.core.privacy import (PrivacyParams, PrivacyAccountant, epsilon_sdm,
                                 epsilon_alternative, sigma_for_budget,
                                 max_iterations, SIGMA_SQ_MIN)
@@ -14,7 +15,8 @@ __all__ = [
     "SDMConfig", "SDMState", "ReferenceSimulator", "init_distributed_state",
     "distributed_advance", "distributed_commit",
     "transmitted_elements_per_step", "DSGDConfig", "DSGDReference",
-    "dcdsgd_config", "dsgd_distributed_step", "PrivacyParams",
+    "dcdsgd_config", "dsgd_distributed_step", "PermuteSchedule",
+    "schedule_from_topology", "PrivacyParams",
     "PrivacyAccountant", "epsilon_sdm", "epsilon_alternative",
     "sigma_for_budget", "max_iterations", "SIGMA_SQ_MIN", "topology",
     "theory", "sparsifier", "gossip", "clipping",

@@ -82,25 +82,29 @@ class DSGDReference:
 
 
 def dsgd_distributed_step(state: DSGDState, grads: PyTree, *, base_key: jax.Array,
-                          axis_name, cfg: DSGDConfig, self_weight: float,
-                          neighbor_weight: float) -> DSGDState:
-    """Per-node DSGD step inside shard_map: FULL-state ring exchange.
+                          axis_name, cfg: DSGDConfig,
+                          schedule=None, self_weight: float | None = None,
+                          neighbor_weight: float | None = None,
+                          node_index=None) -> DSGDState:
+    """Per-node DSGD step inside shard_map: FULL-state gossip exchange.
 
     This is the communication baseline for the roofline comparison:
-    collective bytes per round = 2 * d * itemsize (vs p * that for
-    SDM-DSGD packed mode).
+    collective bytes per round = deg * d * itemsize (vs p * that for
+    SDM-DSGD packed mode). ``schedule`` selects the gossip graph; legacy
+    scalar (self_weight, neighbor_weight) callers get the symmetric ring.
     """
-    me = jax.lax.axis_index(axis_name)
+    del neighbor_weight
+    schedule = gossip.resolve_schedule(schedule, axis_name, self_weight)
+    me = gossip._me(axis_name, node_index)
+    sw = schedule.self_weight_of(me)
     noise_key = jax.random.fold_in(
         gossip.node_round_key(base_key, me, state.step), 0x5eed)
     g = _masked_grad(grads, noise_key, cfg.as_sdm())
 
-    x_leaves, treedef = jax.tree.flatten(state.x)
-    mixed = []
-    for x in x_leaves:
-        from_left, from_right = gossip.ring_exchange(x, axis_name)
-        mixed.append(self_weight * x + neighbor_weight * (from_left + from_right))
-    mixed_tree = jax.tree.unflatten(treedef, mixed)
+    mixed_tree = jax.tree.map(
+        lambda x: sw.astype(x.dtype) * x + gossip.exchange(
+            schedule, x, axis_name, node_index=node_index),
+        state.x)
     x = jax.tree.map(lambda m, gr: m - cfg.gamma * gr.astype(m.dtype),
                      mixed_tree, g)
     return DSGDState(x=x, step=state.step + 1)

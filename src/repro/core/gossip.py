@@ -1,39 +1,75 @@
-"""Gossip exchange primitives: dense-W reference and TPU ring collectives.
+"""Gossip exchange primitives: dense-W reference and TPU mesh collectives.
 
-Three interchangeable realizations of "each node sends its (sparsified)
+Interchangeable realizations of "each node sends its (sparsified)
 message to its graph neighbours":
 
 * ``mix_dense``        — reference: einsum with the full (n, n) consensus
                          matrix over a node-stacked leading axis. Used by
                          the single-host simulator and all correctness
                          tests; supports arbitrary topologies (ER graphs).
-* ``ring_exchange``    — distributed: two `jax.lax.ppermute`s over a named
-                         mesh axis (the node axis). Lowers to TPU
-                         `collective-permute`, nearest-neighbour on the
-                         ICI torus. Dense payload (paper-faithful
-                         Bernoulli-masked tensors).
-* ``ring_exchange_packed`` — distributed + communication-real: only the
+* ``exchange``         — distributed, ANY static topology: a compiled
+                         ``PermuteSchedule`` of `jax.lax.ppermute` rounds.
+                         Lowers to TPU `collective-permute`. Dense payload
+                         (paper-faithful Bernoulli-masked tensors).
+* ``exchange_packed`` / ``exchange_packed_rows``
+                       — distributed + communication-real: only the
                          k = ceil(p*d) selected values cross the wire;
                          the index set is regenerated on the receiver from
                          the (round, sender) seed. Collective bytes shrink
                          by exactly p. (DESIGN.md §2.)
+* ``ring_exchange*``   — the original hand-written degree-2 symmetric-ring
+                         specializations, kept as the minimal-latency fast
+                         path and for backward compatibility.
+
+Schedule design
+---------------
+``schedule_from_topology`` compiles a ``Topology`` into a static
+``PermuteSchedule``: the graph's directed edges are grouped by cyclic
+shift s = (receiver - sender) mod n (see
+``topology.shift_decomposition``), and each shift class becomes one
+partial ``ppermute`` whose sources/destinations are exactly that class's
+edges. Receivers that are not a destination in a round get ppermute's
+implicit zeros. Per-edge consensus weights W_ij are applied locally by
+the receiver: round s carries a per-node weight vector
+``w_s[r] = W[r, (r-s) % n]`` (zero on non-edges), embedded as a constant
+and indexed by ``axis_index``. The weighted neighbour sum is therefore
+
+    sum_s w_s[me] * ppermute_s(x)  ==  sum_{j in N_i} W_ij x_j,
+
+with one collective-permute per distinct shift: 2 rounds for the
+symmetric ring, 4 for a 2-D torus, up to n-1 for dense ER graphs — all
+with static shapes, so packed fixed-k payloads work unchanged: the
+shift-s sender of node ``me`` is ``(me - s) % n``, whose index set the
+receiver regenerates from ``node_round_key`` exactly as the ring path
+does. Self-weights W_ii may differ per node (Metropolis–Hastings
+graphs); ``PermuteSchedule.self_weight_of(me)`` resolves them on-mesh.
 
 All distributed functions must be called inside `jax.shard_map` with the
 node axis manual.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import sparsifier
 
 __all__ = [
     "mix_dense",
     "apply_weights_dense",
+    "PermuteSchedule",
+    "ScheduleRound",
+    "schedule_from_topology",
+    "ring_schedule",
+    "resolve_schedule",
+    "exchange",
+    "exchange_packed",
+    "exchange_packed_rows",
     "ring_exchange",
     "ring_weighted_neighbor_sum",
     "ring_exchange_packed",
@@ -55,6 +91,185 @@ def apply_weights_dense(weights: jax.Array, msgs_stack: jax.Array,
     """Weighted neighbour sum sum_{j != i} W_ij msg_j (optionally + W_ii msg_i)."""
     w = weights if include_self else weights - jnp.diag(jnp.diag(weights))
     return jnp.einsum("ij,j...->i...", w, msgs_stack)
+
+
+# --------------------------------------------------------------------------
+# Static permute schedules: any Topology -> ppermute rounds.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleRound:
+    """One ppermute round: all edges with (receiver - sender) % n == shift."""
+
+    shift: int
+    perm: Tuple[Tuple[int, int], ...]       # (src, dst) pairs, partial perm
+    recv_weights: Tuple[float, ...]         # (n,) W[r, (r-shift) % n] or 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PermuteSchedule:
+    """A Topology compiled to static collective-permute rounds.
+
+    Hashable/static: safe to close over in jit/shard_map. ``rounds`` has
+    one entry per distinct cyclic shift present in the adjacency;
+    ``self_weights[i] = W_ii`` (may vary per node, e.g. MH weights).
+    """
+
+    name: str
+    n_nodes: int
+    self_weights: Tuple[float, ...]
+    rounds: Tuple[ScheduleRound, ...]
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.rounds)
+
+    def self_weight_of(self, me) -> jax.Array:
+        """W_ii for the calling node (index with axis_index inside shard_map)."""
+        return jnp.asarray(self.self_weights, jnp.float32)[me]
+
+
+def schedule_from_topology(topo) -> PermuteSchedule:
+    """Compile ``topo`` (a topology.Topology) into a PermuteSchedule."""
+    from repro.core import topology as topology_mod
+
+    adj = np.asarray(topo.adjacency)
+    n = topo.n_nodes
+    rounds = []
+    for shift, pairs in sorted(topology_mod.shift_decomposition(adj).items()):
+        rw = topology_mod.shift_receive_weights(topo, shift)
+        rounds.append(ScheduleRound(
+            shift=shift,
+            perm=tuple((int(a), int(b)) for a, b in pairs),
+            recv_weights=tuple(float(v) for v in rw)))
+    return PermuteSchedule(
+        name=topo.name, n_nodes=n,
+        self_weights=tuple(float(topo.weights[i, i]) for i in range(n)),
+        rounds=tuple(rounds))
+
+
+@functools.lru_cache(maxsize=None)
+def ring_schedule(n: int, self_weight: float | None = None) -> PermuteSchedule:
+    """The symmetric ring as a schedule (2 rounds: shifts +1 and n-1)."""
+    from repro.core import topology as topology_mod
+
+    return schedule_from_topology(topology_mod.ring(n, self_weight))
+
+
+def resolve_schedule(schedule: PermuteSchedule | None, axis_name,
+                     self_weight: float | None = None) -> PermuteSchedule:
+    """Back-compat shim: default to the ring over the full node axis.
+
+    Legacy callers pass scalar (self_weight, neighbor_weight) instead of a
+    schedule; the axis size is static under shard_map tracing, so the ring
+    schedule can be built on the fly.
+    """
+    if schedule is not None:
+        return schedule
+    n = int(jax.lax.psum(1, axis_name))
+    return ring_schedule(n, self_weight)
+
+
+def _me(axis_name, node_index):
+    """The caller's node index: explicit operand, or axis_index collective."""
+    if node_index is not None:
+        return node_index
+    return jax.lax.axis_index(axis_name)
+
+
+def _round_weight(rnd: ScheduleRound, me, dtype) -> jax.Array:
+    return jnp.asarray(rnd.recv_weights, jnp.float32)[me].astype(dtype)
+
+
+def exchange(schedule: PermuteSchedule, x: jax.Array, axis_name,
+             node_index=None) -> jax.Array:
+    """Weighted neighbour sum sum_{j in N_i} W_ij x_j, dense payload.
+
+    One ppermute per schedule round; receivers with no shift-s in-edge get
+    ppermute zeros and a zero weight, so the sum is exact on any graph.
+    ``node_index`` overrides `axis_index` where that collective cannot
+    lower (partial-auto shard_map on older jaxlibs).
+    """
+    me = _me(axis_name, node_index)
+    total = jnp.zeros_like(x)
+    for rnd in schedule.rounds:
+        recv = jax.lax.ppermute(x, axis_name, rnd.perm)
+        total = total + _round_weight(rnd, me, x.dtype) * recv
+    return total
+
+
+def exchange_packed(schedule: PermuteSchedule, d_flat: jax.Array, *,
+                    axis_name, base_key: jax.Array, step: jax.Array,
+                    p: float, block: int = 1,
+                    node_index=None) -> Tuple[jax.Array, jax.Array]:
+    """One packed gossip round on any schedule; returns (own_sparse, nb_sum).
+
+    Per round s only the sender's packed (kb, block) values cross the
+    wire; the receiver regenerates the shift-s sender's index set from
+    ``node_round_key(base_key, (me - s) % n, step)`` and scatters + weighs
+    locally. ``nb_sum = sum_{j in N_i} W_ij S(d_j)`` densified.
+    """
+    dim = d_flat.shape[0]
+    db = sparsifier.block_view(d_flat, block)
+    nb_blocks = db.shape[0]
+    kb = sparsifier.num_kept(nb_blocks, p)
+    scale = nb_blocks / kb
+    n = schedule.n_nodes
+    me = _me(axis_name, node_index)
+
+    my_idx = sparsifier.fixedk_indices(
+        node_round_key(base_key, me, step), nb_blocks, kb)
+    my_vals = jnp.take(db, my_idx, axis=0) * scale   # (kb, block)
+
+    unpack = lambda vals, idx: jnp.zeros_like(db).at[idx].set(
+        vals).reshape(-1)[:dim]
+    own_sparse = unpack(my_vals, my_idx)
+    nb_sum = jnp.zeros_like(own_sparse)
+    for rnd in schedule.rounds:
+        # Wire traffic: only the packed (kb, block) values move.
+        vals = jax.lax.ppermute(my_vals, axis_name, rnd.perm)
+        sender_idx = sparsifier.fixedk_indices(
+            node_round_key(base_key, (me - rnd.shift) % n, step),
+            nb_blocks, kb)
+        w = _round_weight(rnd, me, own_sparse.dtype)
+        nb_sum = nb_sum + w * unpack(vals, sender_idx)
+    return own_sparse, nb_sum
+
+
+def exchange_packed_rows(schedule: PermuteSchedule, d: jax.Array, *,
+                         axis_name, base_key: jax.Array, step: jax.Array,
+                         p: float,
+                         node_index=None) -> Tuple[jax.Array, jax.Array]:
+    """Sharding-aligned packed gossip on any schedule (blocks = rows).
+
+    Same selection semantics as ``ring_exchange_packed_rows`` — the packed
+    payload keeps each leaf's model-axis sharding — generalized to every
+    schedule round.
+    """
+    shape = d.shape
+    cols = shape[-1] if d.ndim > 1 else 1
+    rows = d.size // cols
+    db = d.reshape(rows, cols)
+    kb = sparsifier.num_kept(rows, p)
+    scale = rows / kb
+    n = schedule.n_nodes
+    me = _me(axis_name, node_index)
+
+    my_idx = sparsifier.fixedk_indices(
+        node_round_key(base_key, me, step), rows, kb)
+    my_vals = jnp.take(db, my_idx, axis=0) * scale      # (kb, cols)
+
+    unpack = lambda vals, idx: jnp.zeros_like(db).at[idx].set(
+        vals).reshape(shape)
+    own_sparse = unpack(my_vals, my_idx)
+    nb_sum = jnp.zeros_like(own_sparse)
+    for rnd in schedule.rounds:
+        vals = jax.lax.ppermute(my_vals, axis_name, rnd.perm)
+        sender_idx = sparsifier.fixedk_indices(
+            node_round_key(base_key, (me - rnd.shift) % n, step), rows, kb)
+        w = _round_weight(rnd, me, own_sparse.dtype)
+        nb_sum = nb_sum + w * unpack(vals, sender_idx)
+    return own_sparse, nb_sum
 
 
 # --------------------------------------------------------------------------

@@ -137,8 +137,11 @@ def transmitted_elements_per_step(params: PyTree, cfg: SDMConfig) -> int:
     d = sum(int(x.size) for x in jax.tree.leaves(params))
     if cfg.mode == "fixedk_packed":
         b = cfg.pack_block
+        # kb * b can exceed the leaf size when block_view pads the last
+        # block; pad coordinates are never real payload, so clamp.
         return sum(
-            sparsifier.num_kept(-(-int(x.size) // b), cfg.p) * b
+            min(sparsifier.num_kept(-(-int(x.size) // b), cfg.p) * b,
+                int(x.size))
             for x in jax.tree.leaves(params))
     if cfg.mode == "fixedk_rows":
         total = 0
@@ -244,46 +247,69 @@ class ReferenceSimulator:
 # Distributed per-node step (inside shard_map; node axis manual).
 # ==========================================================================
 
-def init_distributed_state(params: PyTree, self_weight: float) -> SDMState:
+def init_distributed_state(params: PyTree, self_weight) -> SDMState:
     """Per-node state. ``params`` has NO node axis here (each shard owns one).
 
     All nodes must start from IDENTICAL params (standard same-seed init);
     then the initial neighbour sum is s_0 = (1 - W_ii) * x_0, since
     sum_{j != i} W_ij = 1 - W_ii and x_{j,0} = x_0. (The paper starts at
-    x_0 = 0, a special case.)
+    x_0 = 0, a special case.) ``self_weight`` may be a python float or a
+    traced scalar (``schedule.self_weight_of(me)`` inside shard_map, for
+    topologies whose W_ii varies per node).
     """
-    s0 = jax.tree.map(lambda x: (1.0 - self_weight) * x, params)
+    s0 = jax.tree.map(lambda x: ((1.0 - self_weight) * x).astype(x.dtype),
+                      params)
     return SDMState(x=params, s=s0, d=_tree_zeros_like(params),
                     step=jnp.zeros((), jnp.int32))
 
 
+def _sparse_exchange_leaves(d_tree: PyTree, *, schedule, axis_name,
+                            base_key: jax.Array, step: jax.Array,
+                            cfg: SDMConfig,
+                            node_index=None) -> Tuple[PyTree, PyTree]:
+    """Packed per-leaf exchange on a schedule: (own S(d), weighted nb sum)."""
+    d_leaves, treedef = jax.tree.flatten(d_tree)
+    own, nb = [], []
+    for i, d in enumerate(d_leaves):
+        leaf_key = jax.random.fold_in(base_key, i)
+        if cfg.mode == "fixedk_rows":
+            own_sparse, nb_sum = gossip.exchange_packed_rows(
+                schedule, d, axis_name=axis_name, base_key=leaf_key,
+                step=step, p=cfg.p, node_index=node_index)
+        else:
+            own_sparse, nb_sum = gossip.exchange_packed(
+                schedule, d.reshape(-1), axis_name=axis_name,
+                base_key=leaf_key, step=step, p=cfg.p, block=cfg.pack_block,
+                node_index=node_index)
+        own.append(own_sparse.reshape(d.shape).astype(d.dtype))
+        nb.append(nb_sum.reshape(d.shape).astype(d.dtype))
+    return jax.tree.unflatten(treedef, own), jax.tree.unflatten(treedef, nb)
+
+
 def distributed_advance(state: SDMState, *, base_key: jax.Array, axis_name,
-                        cfg: SDMConfig, self_weight: float,
-                        neighbor_weight: float) -> SDMState:
-    """Phase 1 on the mesh: sparsify d, ring-exchange, update x and s."""
-    me = jax.lax.axis_index(axis_name)
+                        cfg: SDMConfig,
+                        schedule: gossip.PermuteSchedule | None = None,
+                        self_weight: float | None = None,
+                        neighbor_weight: float | None = None,
+                        node_index=None) -> SDMState:
+    """Phase 1 on the mesh: sparsify d, schedule-exchange, update x and s.
+
+    ``schedule`` selects the gossip graph; legacy scalar
+    (self_weight, neighbor_weight) callers get the symmetric ring.
+    ``node_index`` (optional sharded operand) replaces the axis_index
+    collective where partial-auto shard_map cannot lower it.
+    """
+    del neighbor_weight  # ring default is fully described by self_weight
+    schedule = gossip.resolve_schedule(schedule, axis_name, self_weight)
+    me = gossip._me(axis_name, node_index)
 
     if cfg.mode in ("fixedk_packed", "fixedk_rows"):
-        new_x, new_s = [], []
-        x_leaves, treedef = jax.tree.flatten(state.x)
-        s_leaves = jax.tree.leaves(state.s)
-        d_leaves = jax.tree.leaves(state.d)
-        for i, (x, s, d) in enumerate(zip(x_leaves, s_leaves, d_leaves)):
-            leaf_key = jax.random.fold_in(base_key, i)
-            if cfg.mode == "fixedk_rows":
-                own_sparse, nb_sum = gossip.ring_exchange_packed_rows(
-                    d, axis_name=axis_name, base_key=leaf_key,
-                    step=state.step, p=cfg.p,
-                    neighbor_weight=neighbor_weight)
-            else:
-                own_sparse, nb_sum = gossip.ring_exchange_packed(
-                    d.reshape(-1), axis_name=axis_name, base_key=leaf_key,
-                    step=state.step, p=cfg.p,
-                    neighbor_weight=neighbor_weight, block=cfg.pack_block)
-            new_x.append(x + own_sparse.reshape(x.shape).astype(x.dtype))
-            new_s.append(s + nb_sum.reshape(s.shape).astype(s.dtype))
-        x = jax.tree.unflatten(treedef, new_x)
-        s = jax.tree.unflatten(treedef, new_s)
+        own, nb = _sparse_exchange_leaves(
+            state.d, schedule=schedule, axis_name=axis_name,
+            base_key=base_key, step=state.step, cfg=cfg,
+            node_index=node_index)
+        x = jax.tree.map(jnp.add, state.x, own)
+        s = jax.tree.map(jnp.add, state.s, nb)
     else:
         # Key schedule fold(fold(fold(base, leaf), node), step) — identical
         # to ReferenceSimulator.advance so the two paths are bit-equal.
@@ -293,14 +319,11 @@ def distributed_advance(state: SDMState, *, base_key: jax.Array, axis_name,
         sd = jax.tree.map(
             lambda k, d: sparsifier.bernoulli_sparsify(k, d, cfg.p),
             leaf_keys, state.d)
-        sd_leaves, treedef = jax.tree.flatten(sd)
-        pairs = [gossip.ring_exchange(v, axis_name) for v in sd_leaves]
-        from_left = jax.tree.unflatten(treedef, [l for l, _ in pairs])
-        from_right = jax.tree.unflatten(treedef, [r for _, r in pairs])
         x = jax.tree.map(jnp.add, state.x, sd)
         s = jax.tree.map(
-            lambda s_, l, r: s_ + neighbor_weight * (l + r),
-            state.s, from_left, from_right)
+            lambda s_, v: s_ + gossip.exchange(schedule, v, axis_name,
+                                               node_index=node_index),
+            state.s, sd)
     return state._replace(x=x, s=s)
 
 
@@ -311,15 +334,18 @@ class SDMFusedState(NamedTuple):
     step: jax.Array
 
 
-def init_fused_state(params: PyTree, self_weight: float) -> SDMFusedState:
-    s0 = jax.tree.map(lambda x: (1.0 - self_weight) * x, params)
+def init_fused_state(params: PyTree, self_weight) -> SDMFusedState:
+    s0 = jax.tree.map(lambda x: ((1.0 - self_weight) * x).astype(x.dtype),
+                      params)
     return SDMFusedState(x=params, s=s0, step=jnp.zeros((), jnp.int32))
 
 
 def distributed_step_fused(state: SDMFusedState, grads: PyTree, *,
                            base_key: jax.Array, axis_name, cfg: SDMConfig,
-                           self_weight: float,
-                           neighbor_weight: float) -> SDMFusedState:
+                           schedule: gossip.PermuteSchedule | None = None,
+                           self_weight: float | None = None,
+                           neighbor_weight: float | None = None,
+                           node_index=None) -> SDMFusedState:
     """Memory-optimized whole-iteration step: commit_t + advance_{t+1} fused.
 
     Identical algorithm to (distributed_advance; grads; distributed_commit)
@@ -330,12 +356,15 @@ def distributed_step_fused(state: SDMFusedState, grads: PyTree, *,
     a 1/3 cut of the dominant memory term. Gradient must be evaluated at
     state.x BEFORE calling (x is already post-advance).
     """
-    me = jax.lax.axis_index(axis_name)
+    del neighbor_weight
+    schedule = gossip.resolve_schedule(schedule, axis_name, self_weight)
+    me = gossip._me(axis_name, node_index)
+    sw = schedule.self_weight_of(me)
     noise_key = jax.random.fold_in(
         gossip.node_round_key(base_key, me, state.step), 0x5eed)
     g = _masked_grad(grads, noise_key, cfg)
     d = jax.tree.map(
-        lambda x, s, gr: (cfg.theta * (self_weight * x + s
+        lambda x, s, gr: (cfg.theta * (sw.astype(x.dtype) * x + s
                                        - cfg.gamma * gr.astype(x.dtype))
                           - cfg.theta * x),
         state.x, state.s, g)
@@ -345,25 +374,12 @@ def distributed_step_fused(state: SDMFusedState, grads: PyTree, *,
     # sparsified by the NEXT iteration's advance (bit-equality preserved).
     sp_step = state.step + 1
     if cfg.mode in ("fixedk_packed", "fixedk_rows"):
-        x_leaves, treedef = jax.tree.flatten(state.x)
-        s_leaves = jax.tree.leaves(state.s)
-        d_leaves = jax.tree.leaves(d)
-        new_x, new_s = [], []
-        for i, (x, s, dd) in enumerate(zip(x_leaves, s_leaves, d_leaves)):
-            leaf_key = jax.random.fold_in(base_key, i)
-            if cfg.mode == "fixedk_rows":
-                own_sparse, nb_sum = gossip.ring_exchange_packed_rows(
-                    dd, axis_name=axis_name, base_key=leaf_key,
-                    step=sp_step, p=cfg.p, neighbor_weight=neighbor_weight)
-            else:
-                own_sparse, nb_sum = gossip.ring_exchange_packed(
-                    dd.reshape(-1), axis_name=axis_name, base_key=leaf_key,
-                    step=sp_step, p=cfg.p, neighbor_weight=neighbor_weight,
-                    block=cfg.pack_block)
-            new_x.append(x + own_sparse.reshape(x.shape).astype(x.dtype))
-            new_s.append(s + nb_sum.reshape(s.shape).astype(s.dtype))
-        x = jax.tree.unflatten(treedef, new_x)
-        s = jax.tree.unflatten(treedef, new_s)
+        own, nb = _sparse_exchange_leaves(
+            d, schedule=schedule, axis_name=axis_name,
+            base_key=base_key, step=sp_step, cfg=cfg,
+            node_index=node_index)
+        x = jax.tree.map(jnp.add, state.x, own)
+        s = jax.tree.map(jnp.add, state.s, nb)
     else:
         leaf_keys = jax.tree.map(
             lambda k: gossip.node_round_key(k, me, sp_step),
@@ -371,29 +387,30 @@ def distributed_step_fused(state: SDMFusedState, grads: PyTree, *,
         sd = jax.tree.map(
             lambda k, dd: sparsifier.bernoulli_sparsify(k, dd, cfg.p),
             leaf_keys, d)
-        sd_leaves, treedef = jax.tree.flatten(sd)
-        pairs = [gossip.ring_exchange(v, axis_name) for v in sd_leaves]
-        from_left = jax.tree.unflatten(treedef, [l for l, _ in pairs])
-        from_right = jax.tree.unflatten(treedef, [r for _, r in pairs])
         x = jax.tree.map(jnp.add, state.x, sd)
         s = jax.tree.map(
-            lambda s_, l, r: s_ + neighbor_weight * (l + r),
-            state.s, from_left, from_right)
+            lambda s_, v: s_ + gossip.exchange(schedule, v, axis_name,
+                                               node_index=node_index),
+            state.s, sd)
     return SDMFusedState(x=x, s=s, step=state.step + 1)
 
 
 def distributed_commit(state: SDMState, grads: PyTree, *, base_key: jax.Array,
                        axis_name, cfg: SDMConfig,
-                       self_weight: float) -> SDMState:
+                       schedule: gossip.PermuteSchedule | None = None,
+                       self_weight: float | None = None,
+                       node_index=None) -> SDMState:
     """Phase 2 on the mesh: masked gradient + generalized mixing update."""
-    me = jax.lax.axis_index(axis_name)
+    schedule = gossip.resolve_schedule(schedule, axis_name, self_weight)
+    me = gossip._me(axis_name, node_index)
+    sw = schedule.self_weight_of(me)
     noise_key = jax.random.fold_in(
         gossip.node_round_key(base_key, me, state.step), 0x5eed)
     g = _masked_grad(grads, noise_key, cfg)
     # W~ x for node i = W_ii x_i + s_i  (s maintained incrementally).
     y = jax.tree.map(
         lambda x, s, gr: ((1.0 - cfg.theta) * x
-                          + cfg.theta * (self_weight * x + s
+                          + cfg.theta * (sw.astype(x.dtype) * x + s
                                          - cfg.gamma * gr.astype(x.dtype))),
         state.x, state.s, g)
     d = jax.tree.map(jnp.subtract, y, state.x)

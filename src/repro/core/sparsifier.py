@@ -26,7 +26,10 @@ leaves).
 """
 from __future__ import annotations
 
+import decimal
 import functools
+import math
+from fractions import Fraction
 from typing import Tuple
 
 import jax
@@ -40,6 +43,9 @@ __all__ = [
     "fixedk_unpack",
     "fixedk_sparsify",
     "sparsifier_variance",
+    "num_kept",
+    "block_view",
+    "block_sparsify",
 ]
 
 
@@ -104,8 +110,20 @@ def fixedk_sparsify(key: jax.Array, x_flat: jax.Array, p: float) -> jax.Array:
 
 @functools.lru_cache(maxsize=None)
 def num_kept(d: int, p: float) -> int:
-    """k = ceil(p * d), at least 1."""
-    return max(1, int(-(-d * p // 1)))
+    """k = ceil(p * d), at least 1, at most d.
+
+    The ceiling is computed in EXACT arithmetic: naive ceil(d * p)
+    overshoots whenever the float product lands epsilon above the true
+    value (e.g. 100 * 0.07 == 7.000000000000001 -> 8), breaking the
+    "exactly k = ceil(p*d)" contract and every byte-accounting consumer
+    — and decimal-rounding workarounds fail again once d*p > ~2e7 where
+    the float ulp exceeds the rounding threshold. ``repr(p)`` is the
+    shortest decimal that round-trips to p, i.e. the number the caller
+    actually wrote; the Fraction of that is exact at any scale. Cached,
+    so the exact-arithmetic cost is paid once per (d, p).
+    """
+    p_exact = Fraction(decimal.Decimal(repr(p)))
+    return min(d, max(1, math.ceil(p_exact * d)))
 
 
 # --------------------------------------------------------------------------

@@ -25,8 +25,11 @@ __all__ = [
     "complete",
     "erdos_renyi",
     "star",
+    "by_name",
     "laplacian_consensus_matrix",
     "metropolis_hastings_weights",
+    "shift_decomposition",
+    "shift_receive_weights",
 ]
 
 
@@ -177,6 +180,83 @@ def erdos_renyi(n: int, p_connect: float = 0.35, seed: int = 0,
                              laplacian_consensus_matrix(adj))
         rng = np.random.default_rng(seed + attempt + 1)
     raise RuntimeError("could not sample a connected ER graph")
+
+
+# --------------------------------------------------------------------------
+# Cyclic-shift decomposition (feeds gossip.PermuteSchedule).
+# --------------------------------------------------------------------------
+#
+# Any simple graph on nodes 0..n-1 splits its edge set by the cyclic
+# difference s = (receiver - sender) mod n. For a fixed s the send pairs
+# {(j, (j+s) % n)} have distinct sources and distinct destinations, so each
+# class is a valid (partial) `jax.lax.ppermute` permutation: nodes missing
+# from the destination list receive zeros. A graph therefore gossips in
+# exactly |{distinct shifts}| collective-permute rounds — 2 for the
+# symmetric ring, 4 for a 2-D torus with rows, cols > 2, up to n-1 for a
+# dense Erdős–Rényi graph.
+
+def shift_decomposition(adjacency: np.ndarray) -> dict[int, list[tuple[int, int]]]:
+    """Group directed edges (sender j -> receiver (j+s) % n) by shift s.
+
+    Returns {shift: [(src, dst), ...]} covering every ordered pair with
+    ``adjacency[dst, src] != 0``; shifts with no edges are omitted.
+    """
+    adj = np.asarray(adjacency)
+    n = adj.shape[0]
+    rounds: dict[int, list[tuple[int, int]]] = {}
+    for s in range(1, n):
+        pairs = [(j, (j + s) % n) for j in range(n) if adj[(j + s) % n, j]]
+        if pairs:
+            rounds[s] = pairs
+    return rounds
+
+
+def shift_receive_weights(topo: "Topology", shift: int) -> np.ndarray:
+    """Per-receiver weight vector for one shift round.
+
+    ``out[r] = W[r, (r - shift) % n]`` when the edge exists, else 0 — the
+    factor a receiver applies to the payload arriving from its shift-s
+    sender (non-edges receive ppermute zeros and a zero weight).
+    """
+    n = topo.n_nodes
+    out = np.zeros((n,), dtype=np.float64)
+    for r in range(n):
+        j = (r - shift) % n
+        if topo.adjacency[r, j]:
+            out[r] = topo.weights[r, j]
+    return out
+
+
+def by_name(spec: str, n_nodes: int, *, self_weight: float | None = None,
+            seed: int = 0) -> Topology:
+    """Parse a CLI topology spec into a Topology on ``n_nodes`` nodes.
+
+    Accepted forms: ``ring``, ``torus`` (auto-factored near-square),
+    ``torusRxC``, ``er`` / ``er:<p_connect>``, ``star``, ``complete``.
+    """
+    spec = spec.strip().lower()
+    if spec == "ring":
+        return ring(n_nodes, self_weight)
+    if spec.startswith("torus"):
+        if spec == "torus":
+            rows = next(r for r in range(int(np.sqrt(n_nodes)), 0, -1)
+                        if n_nodes % r == 0)
+            cols = n_nodes // rows
+        else:
+            rows, cols = (int(v) for v in spec[len("torus"):].split("x"))
+            if rows * cols != n_nodes:
+                raise ValueError(
+                    f"torus {rows}x{cols} has {rows * cols} nodes, "
+                    f"mesh has {n_nodes}")
+        return torus_2d(rows, cols)
+    if spec.startswith("er"):
+        p_connect = float(spec.split(":", 1)[1]) if ":" in spec else 0.35
+        return erdos_renyi(n_nodes, p_connect, seed=seed)
+    if spec == "star":
+        return star(n_nodes)
+    if spec == "complete":
+        return complete(n_nodes)
+    raise ValueError(f"unknown topology spec {spec!r}")
 
 
 def _is_connected(adj: np.ndarray) -> bool:

@@ -58,7 +58,15 @@ def sdm_update(x_tree: PyTree, s_tree: PyTree, nb_tree: PyTree,
     nb, _ = _flatten(nb_tree, block_rows)
     g, _ = _flatten(g_tree, block_rows)
     kb, k1, k2 = jax.random.split(key, 3)
-    bits = lambda k: jax.random.bits(k, x.shape, jnp.uint32)
+    # Draw bits at the canonical LANE-padded size, NOT x.shape: threefry
+    # output depends on the total draw size, so tying the draw to the
+    # block_rows tile padding would make the mask (and the whole
+    # trajectory) change with the kernel's tiling parameter.
+    n_rows = -(-meta[3] // LANE)
+
+    def bits(k: jax.Array) -> jax.Array:
+        b = jax.random.bits(k, (n_rows, LANE), jnp.uint32)
+        return jnp.pad(b, ((0, x.shape[0] - n_rows), (0, 0)))
     fn = sdm_update_pallas if use_kernel else _ref_adapter
     x2, s2, sd = fn(x, s, nb, g, bits(kb), bits(k1), bits(k2), p=p,
                     theta=theta, gamma=gamma, sigma=sigma, clip_c=clip_c,

@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 __all__ = ["make_production_mesh", "make_mesh_by_name", "node_axis_names"]
 
 
@@ -15,8 +17,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 single pod (256 chips) or 2x16x16 two pods (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh_by_name(name: str) -> jax.sharding.Mesh:
@@ -28,8 +29,7 @@ def make_mesh_by_name(name: str) -> jax.sharding.Mesh:
     dims = tuple(int(d) for d in name.split("x"))
     axes = {1: ("data",), 2: ("data", "model"),
             3: ("pod", "data", "model")}[len(dims)]
-    return jax.make_mesh(
-        dims, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+    return compat.make_mesh(dims, axes)
 
 
 def node_axis_names(mesh: jax.sharding.Mesh):

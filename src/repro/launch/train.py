@@ -34,7 +34,13 @@ def main() -> None:
     ap.add_argument("--sigma", type=float, default=0.0)
     ap.add_argument("--clip-c", type=float, default=None)
     ap.add_argument("--gossip-mode", default="bernoulli",
-                    choices=["bernoulli", "fixedk_packed"])
+                    choices=["bernoulli", "fixedk_packed", "fixedk_rows"])
+    ap.add_argument("--topology", default="ring",
+                    help="gossip graph over the node axis: ring | torus | "
+                         "torusRxC | er | er:<p_c> | star | complete "
+                         "(paper §5 uses er:0.35)")
+    ap.add_argument("--topology-seed", type=int, default=0,
+                    help="ER graph sampling seed")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -66,11 +72,15 @@ def main() -> None:
         sdm=SDMConfig(p=args.p, theta=args.theta, gamma=args.gamma,
                       sigma=args.sigma, clip_c=args.clip_c,
                       mode=args.gossip_mode),
+        topology=args.topology,
+        topology_seed=args.topology_seed,
         algorithm=args.algorithm,
         param_dtype=jnp.float32 if args.smoke else jnp.bfloat16)
+    schedule = steps_mod.gossip_schedule(tc, mesh)
 
     print(f"arch={cfg.name} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
-          f"nodes={n_nodes} algo={args.algorithm} p={args.p} theta={args.theta}")
+          f"nodes={n_nodes} algo={args.algorithm} p={args.p} theta={args.theta} "
+          f"topology={schedule.name} gossip_rounds={schedule.n_rounds}")
 
     state = steps_mod.init_distributed_state(tc, mesh,
                                              jax.random.PRNGKey(args.seed))

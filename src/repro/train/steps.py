@@ -24,8 +24,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+import numpy as np
+
+from repro import compat
 from repro.core import baselines as baselines_mod
-from repro.core import sdm_dsgd
+from repro.core import gossip, sdm_dsgd
+from repro.core import topology as topology_mod
 from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.sharding import MeshRules, use_rules
@@ -70,8 +74,9 @@ def serving_rules(node_axes: Tuple[str, ...], *, shard_cache_seq: bool,
 class DistributedTrainConfig:
     model: ModelConfig
     sdm: sdm_dsgd.SDMConfig
-    self_weight: float = 1.0 / 3.0      # ring W_ii
-    neighbor_weight: float = 1.0 / 3.0  # ring W_ij, both neighbours
+    topology: str = "ring"              # spec for topology.by_name
+    topology_seed: int = 0              # ER graph sampling seed
+    self_weight: float = 1.0 / 3.0      # ring W_ii; neighbours get (1-W_ii)/2
     algorithm: str = "sdm_dsgd"         # sdm_dsgd | dsgd | allreduce
     param_dtype: Any = jnp.bfloat16
 
@@ -80,12 +85,38 @@ def _node_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a != "model")
 
 
+def _n_nodes(mesh: Mesh) -> int:
+    n = 1
+    for a in _node_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_schedule(spec: str, seed: int, self_weight: float,
+                       n_nodes: int) -> gossip.PermuteSchedule:
+    topo = topology_mod.by_name(
+        spec, n_nodes,
+        self_weight=self_weight if spec == "ring" else None, seed=seed)
+    return gossip.schedule_from_topology(topo)
+
+
+def gossip_schedule(tc: DistributedTrainConfig, mesh: Mesh
+                    ) -> gossip.PermuteSchedule:
+    """Compile the configured gossip graph for this mesh's node count.
+
+    Memoized: the launcher banner, init_distributed_state, and
+    make_distributed_train all resolve to the SAME schedule object, so
+    ER resampling + the Laplacian eigendecomposition run once and the
+    s_0 self-weights can never desynchronize from the train step's.
+    """
+    return _compiled_schedule(tc.topology, tc.topology_seed,
+                              tc.self_weight, _n_nodes(mesh))
+
+
 def state_shape_dtype(tc: DistributedTrainConfig, mesh: Mesh):
     """ShapeDtypeStructs of the distributed SDMState (for dry-run lowering)."""
-    node_axes = _node_axes(mesh)
-    n_nodes = 1
-    for a in node_axes:
-        n_nodes *= mesh.shape[a]
+    n_nodes = _n_nodes(mesh)
     shapes = transformer.param_shapes(tc.model)
     mk = lambda s: jax.ShapeDtypeStruct((n_nodes,) + tuple(s), tc.param_dtype)
     x = jax.tree.map(mk, shapes,
@@ -123,17 +154,24 @@ def state_shardings(tc: DistributedTrainConfig, mesh: Mesh):
 
 def init_distributed_state(tc: DistributedTrainConfig, mesh: Mesh,
                            key: jax.Array):
-    """Materialize the stacked state (same init on every node)."""
-    node_axes = _node_axes(mesh)
-    n_nodes = 1
-    for a in node_axes:
-        n_nodes *= mesh.shape[a]
+    """Materialize the stacked state (same init on every node).
+
+    s_0[i] = (1 - W_ii) x_0 with the node's OWN self-weight — W_ii varies
+    per node on Metropolis–Hastings graphs (torus/star).
+    """
+    n_nodes = _n_nodes(mesh)
     params = transformer.init_params(key, tc.model, tc.param_dtype)
     stack = jax.tree.map(
         lambda p: jnp.broadcast_to(p[None], (n_nodes,) + p.shape), params)
     if tc.algorithm in ("dsgd", "allreduce"):
         return stack
-    s0 = jax.tree.map(lambda x: (1.0 - tc.self_weight) * x, stack)
+    sw = np.asarray(gossip_schedule(tc, mesh).self_weights, np.float32)
+
+    def s0_leaf(x):
+        w = (1.0 - sw).reshape((n_nodes,) + (1,) * (x.ndim - 1))
+        return (w * x).astype(x.dtype)
+
+    s0 = jax.tree.map(s0_leaf, stack)
     if tc.algorithm == "sdm_dsgd_fused":
         return sdm_dsgd.SDMFusedState(x=stack, s=s0,
                                       step=jnp.zeros((n_nodes,), jnp.int32))
@@ -151,8 +189,14 @@ def make_distributed_train(tc: DistributedTrainConfig, mesh: Mesh,
     """
     cfg = tc.model
     node_axes = _node_axes(mesh)
+    # Old jaxlibs cannot partition ppermute/scan inside a partial-auto
+    # region: run the whole node step fully manual there, replicating the
+    # model axis (no TP) instead of GSPMD-sharding it.
+    full_manual = compat.partial_auto_shard_map_broken(mesh, node_axes)
+    manual_axes = set(mesh.axis_names) if full_manual else set(node_axes)
     axis = node_axes if len(node_axes) > 1 else node_axes[0]
-    inner = MeshRules(mesh, INNER_RULES)
+    inner = None if full_manual else MeshRules(mesh, INNER_RULES)
+    schedule = gossip_schedule(tc, mesh)
     if base_key is None:
         base_key = jax.random.PRNGKey(0)
 
@@ -164,33 +208,35 @@ def make_distributed_train(tc: DistributedTrainConfig, mesh: Mesh,
         loss, grads = jax.value_and_grad(loss_fn)(params)
         return grads, loss
 
-    def node_step(state, tokens, labels, context):
+    def node_step(state, tokens, labels, context, node_ids):
         """Per-node body; runs under shard_map with `axis` manual.
 
         state leaves arrive as (1, ...) (node-stacked, one per shard group);
         tokens/labels/context arrive as the node's local batch slice.
+        node_ids arrives as the node's (1,)-slice of arange(n_nodes) — the
+        node index as DATA, because `axis_index` cannot lower in
+        partial-auto shard_map on older jaxlibs (PartitionId).
         """
         squeeze = lambda t: jax.tree.map(lambda v: jnp.squeeze(v, 0), t)
+        me = jnp.squeeze(node_ids, 0)
 
         with use_rules(inner):
             if tc.algorithm == "sdm_dsgd":
                 state = squeeze(state)
                 state = sdm_dsgd.distributed_advance(
                     state, base_key=base_key, axis_name=axis, cfg=tc.sdm,
-                    self_weight=tc.self_weight,
-                    neighbor_weight=tc.neighbor_weight)
+                    schedule=schedule, node_index=me)
                 grads, loss = local_grads(state.x, tokens, labels, context)
                 state = sdm_dsgd.distributed_commit(
                     state, grads, base_key=base_key, axis_name=axis,
-                    cfg=tc.sdm, self_weight=tc.self_weight)
+                    cfg=tc.sdm, schedule=schedule, node_index=me)
             elif tc.algorithm == "sdm_dsgd_fused":
                 # beyond-paper memory layout: 2 state buffers instead of 3
                 state = squeeze(state)
                 grads, loss = local_grads(state.x, tokens, labels, context)
                 state = sdm_dsgd.distributed_step_fused(
                     state, grads, base_key=base_key, axis_name=axis,
-                    cfg=tc.sdm, self_weight=tc.self_weight,
-                    neighbor_weight=tc.neighbor_weight)
+                    cfg=tc.sdm, schedule=schedule, node_index=me)
             elif tc.algorithm == "dsgd":
                 params = squeeze(state)
                 grads, loss = local_grads(params, tokens, labels, context)
@@ -202,8 +248,7 @@ def make_distributed_train(tc: DistributedTrainConfig, mesh: Mesh,
                     cfg=baselines_mod.DSGDConfig(
                         gamma=tc.sdm.gamma, sigma=tc.sdm.sigma,
                         clip_c=tc.sdm.clip_c),
-                    self_weight=tc.self_weight,
-                    neighbor_weight=tc.neighbor_weight)
+                    schedule=schedule, node_index=me)
                 state = dstate.x
             elif tc.algorithm == "allreduce":
                 # conventional data parallelism: the non-gossip upper bound
@@ -226,15 +271,16 @@ def make_distributed_train(tc: DistributedTrainConfig, mesh: Mesh,
 
     has_context = cfg.family in ("audio", "vlm")
     in_specs = (state_specs, data_spec, data_spec,
-                data_spec if has_context else None)
+                data_spec if has_context else None, P(axis))
+    node_ids = jnp.arange(_n_nodes(mesh), dtype=jnp.int32)
 
     def train_step(state, tokens, labels, context=None):
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             node_step, mesh=mesh,
             in_specs=in_specs,
             out_specs=(state_specs, P()),
-            axis_names=set(node_axes), check_vma=False)
-        return fn(state, tokens, labels, context)
+            axis_names=manual_axes, check_vma=False)
+        return fn(state, tokens, labels, context, node_ids)
 
     return train_step
 

@@ -19,6 +19,7 @@ from repro.checkpoint import save_checkpoint
 from repro.core import (DSGDConfig, DSGDReference, PrivacyAccountant,
                         PrivacyParams, ReferenceSimulator, SDMConfig,
                         sdm_dsgd)
+from repro.core import topology as topology_mod
 from repro.core.topology import Topology
 
 PyTree = Any
@@ -35,7 +36,7 @@ class TrainResult:
 
 def run_decentralized(
     *,
-    topo: Topology,
+    topo: Topology | str,            # Topology, or a topology.by_name spec
     algorithm: str,                  # 'sdm_dsgd' | 'dc_dsgd' | 'dsgd'
     sdm_cfg: SDMConfig,
     params_stack: PyTree,
@@ -51,8 +52,15 @@ def run_decentralized(
     checkpoint_every: int = 0,
     log_every: int = 0,
 ) -> TrainResult:
-    """Generic decentralized training loop over a stacked-node simulator."""
+    """Generic decentralized training loop over a stacked-node simulator.
+
+    ``topo`` may be a spec string ("ring", "er:0.35", "torus", "star",
+    "complete"); the node count is then read off the params stack.
+    """
     t0 = time.time()
+    if isinstance(topo, str):
+        n_nodes = jax.tree.leaves(params_stack)[0].shape[0]
+        topo = topology_mod.by_name(topo, n_nodes, seed=seed)
     if algorithm == "dsgd":
         sim = DSGDReference(topo, DSGDConfig(gamma=sdm_cfg.gamma,
                                              sigma=sdm_cfg.sigma,

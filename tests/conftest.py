@@ -1,0 +1,19 @@
+"""Shared test configuration.
+
+Registers the offline `hypothesis` fallback (helpers/hypothesis_fallback)
+when the real package is not importable, so property-test modules collect
+and run in hermetic containers. With hypothesis installed (the [test]
+extra, as in CI) this is a no-op and the real engine is used.
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent / "helpers"))
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import hypothesis_fallback
+
+    sys.modules["hypothesis"] = hypothesis_fallback
+    sys.modules["hypothesis.strategies"] = hypothesis_fallback.strategies

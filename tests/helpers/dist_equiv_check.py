@@ -2,9 +2,16 @@
 
 Run with 8 fake host devices; prints `MAXERR <float>` lines that
 tests/test_distributed.py asserts on. Must set XLA_FLAGS before jax import.
+
+Usage: dist_equiv_check.py [mode] [topology]
+  mode:     bernoulli | fixedk_packed | fixedk_rows
+  topology: ring8 (default) | torus2x2 | er8 | star4 | complete4 | ...
+            (name prefix selects the family, digits select the node count)
 """
-import os
+import re
 import sys
+
+import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
@@ -13,18 +20,30 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
-from repro.core import baselines, sdm_dsgd, topology  # noqa: E402
+from repro import compat  # noqa: E402
+from repro.core import baselines, gossip, sdm_dsgd, topology  # noqa: E402
 
-N, DIM = 8, 96
 MODE = sys.argv[1] if len(sys.argv) > 1 else "bernoulli"
+TOPO_SPEC = sys.argv[2] if len(sys.argv) > 2 else "ring8"
+
+
+def parse_topology(spec: str) -> topology.Topology:
+    m = re.fullmatch(r"([a-z]+)(\d+(?:x\d+)?)", spec)
+    family, size = m.group(1), m.group(2)
+    if family == "torus":
+        rows, cols = (int(v) for v in size.split("x"))
+        return topology.torus_2d(rows, cols)
+    return topology.by_name(family, int(size))
+
+
+topo = parse_topology(TOPO_SPEC)
+N, DIM = topo.n_nodes, 96
+schedule = gossip.schedule_from_topology(topo)
 
 rng = np.random.default_rng(0)
 A = jnp.asarray(rng.normal(size=(N, 16, DIM)) / 4.0, jnp.float32)
 B = jnp.asarray(rng.normal(size=(N, 16)), jnp.float32)
 
-topo = topology.ring(N)  # self weight 1/3, neighbours 1/3 each
-SELF_W = float(topo.weights[0, 0])
-NB_W = float(topo.weights[0, 1])
 cfg = sdm_dsgd.SDMConfig(p=0.25, theta=0.15, gamma=0.2, sigma=0.0,
                          clip_c=1.0, mode=MODE)
 cfg.validate_against(topo)
@@ -55,33 +74,34 @@ for t in range(STEPS):
     ref_state = sim.commit(ref_state, grads, base_key)
 
 # ---------------- distributed ----------------------------------------------
-mesh = jax.make_mesh((N,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((N,), ("data",))
 
 
 def dist_train(params_stack, a_stack, b_stack):
     def inner(p, a, b):
         p = jax.tree.map(lambda v: jnp.squeeze(v, 0), p)
         a, b = jnp.squeeze(a, 0), jnp.squeeze(b, 0)
-        state = sdm_dsgd.init_distributed_state(p, SELF_W)
+        me = jax.lax.axis_index("data")
+        state = sdm_dsgd.init_distributed_state(
+            p, schedule.self_weight_of(me))
 
         def body(state, _):
             state = sdm_dsgd.distributed_advance(
                 state, base_key=base_key, axis_name="data", cfg=cfg,
-                self_weight=SELF_W, neighbor_weight=NB_W)
+                schedule=schedule)
             g = node_grad(state.x["w"], a, b)
             state = sdm_dsgd.distributed_commit(
                 state, g, base_key=base_key, axis_name="data", cfg=cfg,
-                self_weight=SELF_W)
+                schedule=schedule)
             return state, None
 
         state, _ = jax.lax.scan(body, state, None, length=STEPS)
         return jax.tree.map(lambda v: v[None], state.x)
 
-    return jax.shard_map(inner, mesh=mesh,
-                         in_specs=(P("data"), P("data"), P("data")),
-                         out_specs=P("data"), axis_names={"data"},
-                         check_vma=False)(params_stack, a_stack, b_stack)
+    return compat.shard_map(inner, mesh=mesh,
+                            in_specs=(P("data"), P("data"), P("data")),
+                            out_specs=P("data"), axis_names={"data"},
+                            check_vma=False)(params_stack, a_stack, b_stack)
 
 
 dist_x = jax.jit(dist_train)(params_stack, A, B)
@@ -96,22 +116,23 @@ def dist_train_fused(params_stack, a_stack, b_stack):
     def inner(p, a, b):
         p = jax.tree.map(lambda v: jnp.squeeze(v, 0), p)
         a, b = jnp.squeeze(a, 0), jnp.squeeze(b, 0)
-        state = sdm_dsgd.init_fused_state(p, SELF_W)
+        me = jax.lax.axis_index("data")
+        state = sdm_dsgd.init_fused_state(p, schedule.self_weight_of(me))
 
         def body(state, _):
             g = node_grad(state.x["w"], a, b)
             state = sdm_dsgd.distributed_step_fused(
                 state, g, base_key=base_key, axis_name="data", cfg=cfg,
-                self_weight=SELF_W, neighbor_weight=NB_W)
+                schedule=schedule)
             return state, None
 
         state, _ = jax.lax.scan(body, state, None, length=STEPS)
         return jax.tree.map(lambda v: v[None], state.x)
 
-    return jax.shard_map(inner, mesh=mesh,
-                         in_specs=(P("data"), P("data"), P("data")),
-                         out_specs=P("data"), axis_names={"data"},
-                         check_vma=False)(params_stack, a_stack, b_stack)
+    return compat.shard_map(inner, mesh=mesh,
+                            in_specs=(P("data"), P("data"), P("data")),
+                            out_specs=P("data"), axis_names={"data"},
+                            check_vma=False)(params_stack, a_stack, b_stack)
 
 
 # after STEPS fused steps, x already includes S(d_STEPS); the unfused
@@ -124,3 +145,25 @@ print(f"MAXERR_FUSED {err_f}")
 # HLO must contain collective-permute (the gossip) when lowered.
 hlo = jax.jit(dist_train).lower(params_stack, A, B).compile().as_text()
 print(f"HAS_CPERM {'collective-permute' in hlo}")
+
+# Packed modes: the largest collective-permute payload on the wire must be
+# exactly the fixed-k fraction, not the dense differential.
+if MODE in ("fixedk_packed", "fixedk_rows"):
+    from repro.core import sparsifier
+
+    payload = 0
+    for line in hlo.splitlines():
+        # Result shapes precede the op name; sync lowering emits
+        # `= f32[k,b]{..} collective-permute(`, async emits a tuple
+        # `= (f32[k,b]{..}, f32[k,b]{..}) collective-permute-start(`.
+        # Operand shapes (inside the call parens) must not count, so
+        # only scan the text before the op name.
+        for op in (" collective-permute(", " collective-permute-start("):
+            if op in line:
+                result_part = line.split(op)[0]
+                for shape_str in re.findall(r"f32\[([\d,]*)\]", result_part):
+                    dims = [int(v) for v in shape_str.split(",") if v]
+                    payload = max(payload, int(np.prod(dims or [1])))
+    kb = sparsifier.num_kept(DIM, cfg.p)
+    print(f"WIRE_ELEMS {payload}")
+    print(f"EXPECTED_WIRE_ELEMS {kb}")

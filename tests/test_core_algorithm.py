@@ -135,6 +135,28 @@ def test_transmitted_elements_metric():
     assert sdm_dsgd.transmitted_elements_per_step(params, cfgk) == 20 + 8
 
 
+def test_transmitted_elements_clamped_to_leaf_size():
+    """Pad blocks from block_view must not count as transmitted coords.
+
+    A (5,) leaf with pack_block=4 views as 2 blocks (3 pad zeros); at
+    p=1.0 both blocks are kept so naive accounting says 8 > 5 real
+    coordinates.
+    """
+    params = {"tiny": jnp.zeros((5,))}
+    cfg = sdm_dsgd.SDMConfig(p=1.0, mode="fixedk_packed", pack_block=4)
+    assert sdm_dsgd.transmitted_elements_per_step(params, cfg) == 5
+    # unpadded leaves are unaffected by the clamp
+    params2 = {"even": jnp.zeros((8,))}
+    assert sdm_dsgd.transmitted_elements_per_step(params2, cfg) == 8
+
+
+def test_transmitted_elements_no_float_overshoot():
+    """num_kept fix end-to-end: d=100, p=0.07 transmits 7, not 8."""
+    params = {"w": jnp.zeros((100,))}
+    cfg = sdm_dsgd.SDMConfig(p=0.07, mode="fixedk_packed")
+    assert sdm_dsgd.transmitted_elements_per_step(params, cfg) == 7
+
+
 def test_theta_one_p_one_reduces_to_dsgd():
     """With p=1, theta=1, sigma=0 SDM-DSGD is exactly DSGD (generalization)."""
     topo = topology.ring(N)

@@ -87,6 +87,36 @@ def test_num_kept_properties(d, p):
     assert k >= p * d - 1e-9  # ceil
 
 
+def test_num_kept_exact_ceil_sweep():
+    """k == ceil(p*d) in EXACT arithmetic for every short-decimal p.
+
+    Regression for the float-overshoot bug: 100 * 0.07 ==
+    7.000000000000001 in binary, so a naive ceil returned 8 where the
+    contract says ceil(0.07 * 100) = 7.
+    """
+    import math
+    from fractions import Fraction
+
+    ps = ["0.01", "0.02", "0.05", "0.07", "0.1", "0.125", "0.2", "0.25",
+          "0.3", "1/3", "0.35", "0.5", "0.7", "0.75", "0.9", "0.99", "1.0"]
+    for p_str in ps:
+        p_exact = Fraction(p_str) if "/" in p_str else Fraction(p_str)
+        p = float(p_exact)
+        for d in range(1, 513):
+            expected = max(1, min(d, math.ceil(p_exact * d)))
+            assert sparsifier.num_kept(d, p) == expected, (d, p_str)
+
+
+def test_num_kept_overshoot_regression():
+    assert sparsifier.num_kept(100, 0.07) == 7
+    assert sparsifier.num_kept(1000, 0.07) == 70
+    assert sparsifier.num_kept(100, 0.29) == 29
+    # beyond float precision: 1e8 * 0.07 == 7000000.000000001 and the ulp
+    # there defeats decimal-rounding workarounds; exact arithmetic holds.
+    assert sparsifier.num_kept(100_000_000, 0.07) == 7_000_000
+    assert sparsifier.num_kept(10**12, 0.07) == 7 * 10**10
+
+
 @given(p=st.sampled_from([0.1, 0.25, 0.5, 0.9]),
        seed=st.integers(0, 2**31 - 1))
 @settings(max_examples=30, deadline=None)

@@ -2,6 +2,12 @@
 
 Runs in a subprocess because XLA_FLAGS device-count faking must happen
 before jax initializes (the main test process keeps 1 device).
+
+The ring cases are the historical regression anchor; the torus/ER/star
+cases exercise the PermuteSchedule generalization (ISSUE 1): reference
+and mesh trajectories must agree on any static topology, for dense
+(bernoulli) and packed payloads alike, and packed wire payloads must
+stay at the fixed-k fraction regardless of graph degree.
 """
 import pathlib
 import re
@@ -14,9 +20,10 @@ HELPER = pathlib.Path(__file__).parent / "helpers" / "dist_equiv_check.py"
 SRC = str(pathlib.Path(__file__).parent.parent / "src")
 
 
-def _run(mode: str) -> dict:
+def _run(mode: str, topo: str = "ring8") -> dict:
     out = subprocess.run(
-        [sys.executable, str(HELPER), mode], capture_output=True, text=True,
+        [sys.executable, str(HELPER), mode, topo], capture_output=True,
+        text=True,
         env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
              "HOME": "/root", "JAX_PLATFORMS": "cpu"},
         timeout=600)
@@ -25,13 +32,24 @@ def _run(mode: str) -> dict:
     return vals
 
 
-@pytest.mark.parametrize("mode", ["bernoulli", "fixedk_packed",
-                                  "fixedk_rows"])
-def test_distributed_matches_reference(mode):
-    vals = _run(mode)
+def _check(vals: dict) -> None:
     err, scale = float(vals["MAXERR"]), float(vals["SCALE"])
     assert scale > 0.01  # the run actually moved
     assert err < 1e-4 * max(scale, 1.0), (err, scale)
     assert vals["HAS_CPERM"] == "True"
     # the fused 2-buffer step is the same algorithm (half-step shifted)
     assert float(vals["MAXERR_FUSED"]) < 1e-4 * max(scale, 1.0), vals
+    if "WIRE_ELEMS" in vals:
+        assert vals["WIRE_ELEMS"] == vals["EXPECTED_WIRE_ELEMS"], vals
+
+
+@pytest.mark.parametrize("mode", ["bernoulli", "fixedk_packed",
+                                  "fixedk_rows"])
+def test_distributed_matches_reference(mode):
+    _check(_run(mode))
+
+
+@pytest.mark.parametrize("topo", ["torus2x2", "er8", "star4"])
+@pytest.mark.parametrize("mode", ["bernoulli", "fixedk_packed"])
+def test_arbitrary_topology_matches_reference(mode, topo):
+    _check(_run(mode, topo))

@@ -27,7 +27,8 @@ def _run(arch, shape):
     out = subprocess.run(
         [sys.executable, "-c", SCRIPT.format(arch=arch, shape=shape)],
         capture_output=True, text=True,
-        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": "cpu"},
         timeout=900)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "DRYRUN_OK" in out.stdout
@@ -47,7 +48,8 @@ def test_dryrun_skip_case():
          "'sdm_dsgd','bernoulli',out_root='',verbose=False,probes=False);"
          "assert rec['status']=='skipped', rec; print('SKIP_OK')"],
         capture_output=True, text=True,
-        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": "cpu"},
         timeout=300)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "SKIP_OK" in out.stdout

@@ -4,13 +4,14 @@ import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.sharding import MeshRules, logical, use_rules
 from repro.train.steps import INNER_RULES, outer_rules, serving_rules
 
 
 def _mesh(shape=(1, 1), names=("data", "model")):
     # AbstractMesh: spec construction without real devices
-    return jax.sharding.AbstractMesh(shape, names)
+    return compat.abstract_mesh(shape, names)
 
 
 def test_spec_basic_mapping():
