@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import topology
+from repro.core import gossip, topology
 from repro.data import classification_dataset, node_partitioned_batches
 from repro.models import vision_small
 
@@ -22,10 +22,15 @@ def make_mlr_testbed(seed: int = 0, n_train: int = N_TRAIN,
                      topology_spec: str = "er:0.35"):
     """Paper §5 setup: ER(50, 0.35) graph + MLR on MNIST-shaped data.
 
-    ``topology_spec`` swaps the gossip graph (topology.by_name syntax) so
-    every paper figure can be reproduced on ring/torus/star as well.
+    ``topology_spec`` swaps the gossip graph (gossip.sequence_by_name
+    syntax) so every paper figure can be reproduced on ring/torus/star,
+    the directed dring/der graphs (gradient-push), or a time-varying
+    "matchings:<L>" sequence as well.
     """
-    topo = topology.by_name(topology_spec, N_NODES, seed=seed)
+    if topology_spec.startswith("matchings"):
+        topo = gossip.sequence_by_name(topology_spec, N_NODES, seed=seed)
+    else:
+        topo = topology.by_name(topology_spec, N_NODES, seed=seed)
     (x_tr, y_tr), (x_te, y_te) = classification_dataset(
         N_FEATURES, N_CLASSES, n_train, 2000, seed=seed)
     params0 = vision_small.mlr_init(jax.random.PRNGKey(seed))

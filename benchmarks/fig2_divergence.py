@@ -19,7 +19,7 @@ def run(steps: int = 250, gamma: float = 0.05):
     min_p = theory.dcdsgd_min_p(topo.lambda_n)
     assert 0.2 < min_p, (0.2, min_p)
     dc = baselines.dcdsgd_config(p=0.2, gamma=gamma)
-    res_dc = run_decentralized(topo=topo, algorithm="dc_dsgd", sdm_cfg=dc,
+    res_dc = run_decentralized(topo=topo, algorithm="dc-dsgd", sdm_cfg=dc,
                                params_stack=params, grad_fn=grad_fn,
                                batches=batches, steps=steps)
     results["dc_dsgd_p0.2"] = res_dc.losses
@@ -28,7 +28,7 @@ def run(steps: int = 250, gamma: float = 0.05):
     bound = theory.theta_upper_bound(0.2, topo.lambda_n, gamma, 1.0)
     sdm = sdm_dsgd.SDMConfig(p=0.2, theta=min(0.55, 0.9 * bound), gamma=gamma)
     sdm.validate_against(topo)
-    res_sdm = run_decentralized(topo=topo, algorithm="sdm_dsgd", sdm_cfg=sdm,
+    res_sdm = run_decentralized(topo=topo, algorithm="sdm-dsgd", sdm_cfg=sdm,
                                 params_stack=params, grad_fn=grad_fn,
                                 batches=batches, steps=steps)
     results["sdm_dsgd_p0.2"] = res_sdm.losses

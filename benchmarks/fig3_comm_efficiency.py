@@ -2,52 +2,65 @@
 ELEMENTS for DSGD (p=1), DC-DSGD (p=0.5, theta=1) and SDM-DSGD
 (p=0.2, theta<bound) — the paper's communication-efficiency headline:
 under equal communication budget SDM-DSGD reaches lower loss / higher
-accuracy.
+accuracy. ``--methods`` extends the sweep with any registry method
+(e.g. gradient-push, evaluated on its directed graph).
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks import common
-from repro.core import baselines, sdm_dsgd, theory
+from repro.core import baselines, method as method_mod, sdm_dsgd, theory
 from repro.train.trainer import run_decentralized
+
+# the paper's three curves; extra registry methods attach via --methods
+PAPER_RUNS = ("dsgd", "dc-dsgd", "sdm-dsgd")
+
+
+def _cfg_for(meth_name: str, topo, gamma: float):
+    if meth_name == "dsgd":
+        return sdm_dsgd.SDMConfig(p=1.0, theta=1.0, gamma=gamma)
+    if meth_name == "dc-dsgd":
+        return baselines.dcdsgd_config(p=0.5, gamma=gamma)
+    if meth_name == "sdm-dsgd":
+        lambda_n = topo.lambda_n if hasattr(topo, "lambda_n") else 1.0 / 3.0
+        return sdm_dsgd.SDMConfig(
+            p=0.2, theta=min(0.55, 0.9 * theory.theta_upper_bound(
+                0.2, lambda_n, gamma, 1.0)), gamma=gamma)
+    return sdm_dsgd.SDMConfig(p=1.0, theta=1.0, gamma=gamma)
 
 
 def run(comm_budget_elems: int = 60_000_000, gamma: float = 0.05,
-        topology: str = "er:0.35"):
+        topology: str = "er:0.35", methods=PAPER_RUNS):
     topo, params, grad_fn, eval_fn, batches, m = common.make_mlr_testbed(
         topology_spec=topology)
-    d = sum(int(x.size) for x in __import__("jax").tree.leaves(params)) \
-        // topo.n_nodes
+    import jax
 
-    runs = {
-        "dsgd_p1.0": ("dsgd", sdm_dsgd.SDMConfig(p=1.0, theta=1.0,
-                                                 gamma=gamma)),
-        "dc_dsgd_p0.5": ("dc_dsgd", baselines.dcdsgd_config(p=0.5,
-                                                            gamma=gamma)),
-        "sdm_dsgd_p0.2": ("sdm_dsgd", sdm_dsgd.SDMConfig(
-            p=0.2, theta=min(0.55, 0.9 * theory.theta_upper_bound(
-                0.2, topo.lambda_n, gamma, 1.0)), gamma=gamma)),
-    }
+    per_node = jax.tree.map(lambda x: x[0], params)
     curves = {}
     finals = {}
-    for name, (algo, cfg) in runs.items():
-        per_step = int(round(cfg.p * d)) * topo.n_nodes
+    for name in methods:
+        meth = method_mod.get(name)
+        raw = _cfg_for(meth.name, topo, gamma)
+        cfg = meth.coerce_config(raw)
+        per_step = meth.transmitted_elements(per_node, cfg) * topo.n_nodes
         steps = max(10, comm_budget_elems // per_step)
-        res = run_decentralized(topo=topo, algorithm=algo, sdm_cfg=cfg,
+        res = run_decentralized(topo=topo, algorithm=meth.name, sdm_cfg=cfg,
                                 params_stack=params, grad_fn=grad_fn,
                                 batches=batches, steps=steps,
                                 eval_fn=eval_fn, eval_every=max(steps // 4, 1))
-        curves[name] = (res.comm_elements, res.losses, res.eval_accuracy)
-        finals[name] = (res.losses[-1], res.eval_accuracy[-1])
+        key = meth.name.replace("-", "_")
+        curves[key] = (res.comm_elements, res.losses, res.eval_accuracy)
+        finals[key] = (res.losses[-1], res.eval_accuracy[-1])
 
     # At the SAME communication budget, sparser methods take more steps and
     # end lower (the paper's Fig. 3 ordering).
     derived = f"topo={topo.name};" + ";".join(
         f"{k}:loss={v[0]:.4f},acc={v[1]:.4f}" for k, v in finals.items())
     common.emit("fig3_comm_efficiency", 0.0, derived)
-    assert finals["sdm_dsgd_p0.2"][0] <= finals["dsgd_p1.0"][0] * 1.02, derived
-    assert finals["sdm_dsgd_p0.2"][1] >= finals["dsgd_p1.0"][1] - 0.01, derived
+    if "sdm_dsgd" in finals and "dsgd" in finals:
+        assert finals["sdm_dsgd"][0] <= finals["dsgd"][0] * 1.02, derived
+        assert finals["sdm_dsgd"][1] >= finals["dsgd"][1] - 0.01, derived
     return curves
 
 
@@ -56,7 +69,11 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--topology", default="er:0.35",
-                    help="gossip graph spec (topology.by_name syntax)")
+                    help="gossip graph spec (gossip.sequence_by_name syntax, "
+                         "incl. dring/der/matchings:<L>)")
+    ap.add_argument("--methods", default=",".join(PAPER_RUNS),
+                    help="comma list of method registry names to sweep")
     ap.add_argument("--comm-budget", type=int, default=60_000_000)
     args = ap.parse_args()
-    run(comm_budget_elems=args.comm_budget, topology=args.topology)
+    run(comm_budget_elems=args.comm_budget, topology=args.topology,
+        methods=tuple(args.methods.split(",")))

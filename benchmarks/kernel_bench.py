@@ -17,12 +17,13 @@ from repro.kernels.flash_attn.ops import flash_attention
 from repro.kernels.sdm_update import ref as sdm_ref
 from repro.kernels.sdm_update.sdm_update import LANE, sdm_update_pallas
 
-GOSSIP_TOPOLOGIES = ("ring", "torus", "er:0.35", "star", "complete")
+GOSSIP_TOPOLOGIES = ("ring", "torus", "er:0.35", "star", "complete",
+                     "dring", "der:0.35", "matchings:4")
 
 
 def run_gossip_schedules(topologies=GOSSIP_TOPOLOGIES, n_nodes: int = 16,
                          d: int = 1 << 20, p: float = 0.1):
-    """Structural cost of PermuteSchedule gossip per topology.
+    """Structural cost of (Schedule-Sequence) gossip per topology.
 
     Wall time on CPU is meaningless for collectives; the quantities that
     matter on the ICI roofline are (a) collective-permute ROUNDS per
@@ -30,22 +31,28 @@ def run_gossip_schedules(topologies=GOSSIP_TOPOLOGIES, n_nodes: int = 16,
     (b) wire BYTES per node per step, dense vs packed fixed-k (bandwidth
     term — packed must be exactly the p-fraction of dense). mix_dense
     timing is the single-host reference cost for the same exchange.
+    Directed graphs (dring/der, gradient-push) and time-varying matching
+    sequences report the per-step MEAN degree over one cycle.
     """
     kb = sparsifier.num_kept(d, p)
     for spec in topologies:
-        topo = topology.by_name(spec, n_nodes)
-        sched = gossip.schedule_from_topology(topo)
-        mean_deg = float(np.mean(topo.degree))
+        seq = gossip.sequence_by_name(spec, n_nodes)
+        wstack = seq.weights_stack()
+        # per-step mean in-degree over one cycle (off-diagonal support)
+        off = wstack - np.einsum("lij,ij->lij", wstack,
+                                 np.eye(seq.n_nodes))
+        mean_deg = float(np.mean((np.abs(off) > 1e-12).sum(axis=2)))
         dense = mean_deg * d * 4
         packed = mean_deg * kb * 4
         x = jnp.asarray(np.random.default_rng(0).normal(
             size=(n_nodes, 256)), jnp.float32)
-        w = jnp.asarray(topo.weights, jnp.float32)
+        w = jnp.asarray(wstack[0], jnp.float32)
         us = common.timeit_us(jax.jit(lambda w, x: gossip.mix_dense(w, x)),
                               w, x, iters=50)
         common.emit(
-            f"gossip_schedule_{topo.name}", us,
-            f"rounds={sched.n_rounds};mean_degree={mean_deg:.2f};"
+            f"gossip_schedule_{seq.name}", us,
+            f"rounds={seq.n_rounds};seq_len={seq.length};"
+            f"mean_degree={mean_deg:.2f};"
             f"dense_bytes/node/step={dense:.0f};"
             f"packed_bytes/node/step={packed:.0f};"
             f"packed_fraction={packed / dense:.4f}")

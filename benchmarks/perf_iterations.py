@@ -117,7 +117,7 @@ def run_pair(pair: str, mesh: str = "single_pod",
     rows = []
     for name, hypothesis, kw in spec["variants"]:
         rec = build_case(spec["arch"], spec["shape"], mesh,
-                         kw.get("algorithm", "sdm_dsgd"),
+                         kw.get("method", kw.get("algorithm", "sdm_dsgd")),
                          kw.get("gossip_mode", "fixedk_packed"),
                          out_root="", verbose=False, probes=use_probes,
                          sdm_overrides=kw.get("sdm_overrides"),

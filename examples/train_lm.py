@@ -57,7 +57,7 @@ def main() -> None:
     tc = steps_mod.DistributedTrainConfig(
         model=cfg,
         sdm=SDMConfig(p=0.25, theta=0.5, gamma=0.5, sigma=0.0, clip_c=1.0),
-        algorithm="sdm_dsgd", param_dtype=jnp.float32)
+        method="sdm-dsgd", param_dtype=jnp.float32)
 
     state = steps_mod.init_distributed_state(tc, mesh, jax.random.PRNGKey(0))
     step_fn = jax.jit(steps_mod.make_distributed_train(tc, mesh))

@@ -1,23 +1,36 @@
-"""SDM-DSGD core: the paper's contribution as composable JAX modules."""
+"""SDM-DSGD core: the paper's contribution as composable JAX modules.
+
+``repro.core.method`` is the unified algorithm surface: a string
+registry of Method objects, each carrying its own config dataclass and
+both a stacked reference executor and a shard_map distributed executor
+built from the same (possibly time-varying) gossip schedule.
+"""
 from repro.core.sdm_dsgd import (SDMConfig, SDMState, ReferenceSimulator,
                                  init_distributed_state, distributed_advance,
-                                 distributed_commit,
+                                 distributed_commit, masked_grad,
                                  transmitted_elements_per_step)
 from repro.core.baselines import (DSGDConfig, DSGDReference, dcdsgd_config,
                                   dsgd_distributed_step)
-from repro.core.gossip import PermuteSchedule, schedule_from_topology
+from repro.core.gradient_push import (GradientPushConfig, GradientPushState,
+                                      GradientPushReference)
+from repro.core.gossip import (PermuteSchedule, ScheduleSequence,
+                               schedule_from_topology, sequence_by_name,
+                               sequence_from_topologies)
 from repro.core.privacy import (PrivacyParams, PrivacyAccountant, epsilon_sdm,
                                 epsilon_alternative, sigma_for_budget,
                                 max_iterations, SIGMA_SQ_MIN)
-from repro.core import topology, theory, sparsifier, gossip, clipping
+from repro.core import (topology, theory, sparsifier, gossip, clipping,
+                        method)
 
 __all__ = [
     "SDMConfig", "SDMState", "ReferenceSimulator", "init_distributed_state",
-    "distributed_advance", "distributed_commit",
+    "distributed_advance", "distributed_commit", "masked_grad",
     "transmitted_elements_per_step", "DSGDConfig", "DSGDReference",
-    "dcdsgd_config", "dsgd_distributed_step", "PermuteSchedule",
-    "schedule_from_topology", "PrivacyParams",
+    "dcdsgd_config", "dsgd_distributed_step", "GradientPushConfig",
+    "GradientPushState", "GradientPushReference", "PermuteSchedule",
+    "ScheduleSequence", "schedule_from_topology", "sequence_by_name",
+    "sequence_from_topologies", "PrivacyParams",
     "PrivacyAccountant", "epsilon_sdm", "epsilon_alternative",
     "sigma_for_budget", "max_iterations", "SIGMA_SQ_MIN", "topology",
-    "theory", "sparsifier", "gossip", "clipping",
+    "theory", "sparsifier", "gossip", "clipping", "method",
 ]

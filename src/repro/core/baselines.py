@@ -3,17 +3,23 @@
 * DSGD (Lian et al. 2017; also Nedic-Ozdaglar, Yuan-Ling-Yin):
       x_{i,t+1} = sum_j W_ij x_{j,t} - gamma * g(x_{i,t})
   exchanges the FULL uncompressed state x_i with neighbours every
-  iteration — communication cost d elements/node/iter.
+  iteration — communication cost d elements/node/iter. Because the full
+  state crosses the wire, DSGD is EXACT on time-varying (B-connected)
+  schedule sequences: each step mixes with W(t) directly.
 
 * DC-DSGD (Tang et al. 2018, "Communication compression for decentralized
   training"): communicates compressed differentials like SDM-DSGD but has
   no mixing parameter theta — it is exactly ``SDMConfig(theta=1.0)``
   (Remark 1 / §5). Remark 1 shows it requires
   p > 4(1-lambda_n)^2/(4(1-lambda_n)^2 + (1-|lambda_n|)^2) to converge;
-  Figure 2 demonstrates divergence at p=0.2.
+  Figure 2 demonstrates divergence at p=0.2. In the method registry
+  (repro.core.method) DC-DSGD is literally the SDM-DSGD registration
+  with theta pinned to 1 — no separate implementation exists.
 
 For the §5 "fair comparison", both baselines can also be run with the
-same Gaussian masking noise (``sigma > 0``) and clipping as SDM-DSGD.
+same Gaussian masking noise (``sigma > 0``) and clipping as SDM-DSGD,
+through the shared ``sdm_dsgd.masked_grad`` helper (the former
+``DSGDConfig.as_sdm`` config-conversion shim is gone).
 """
 from __future__ import annotations
 
@@ -24,7 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import gossip
-from repro.core.sdm_dsgd import SDMConfig, _masked_grad
+from repro.core.sdm_dsgd import SDMConfig, masked_grad
 from repro.core.topology import Topology
 
 __all__ = ["DSGDConfig", "DSGDState", "DSGDReference",
@@ -39,11 +45,6 @@ class DSGDConfig:
     sigma: float = 0.0
     clip_c: float | None = None
 
-    def as_sdm(self) -> SDMConfig:
-        """DSGD's noise/clip settings reused through the SDM helpers."""
-        return SDMConfig(p=1.0, theta=1.0, gamma=self.gamma,
-                         sigma=self.sigma, clip_c=self.clip_c)
-
 
 def dcdsgd_config(p: float, gamma: float, sigma: float = 0.0,
                   clip_c: float | None = None) -> SDMConfig:
@@ -57,12 +58,17 @@ class DSGDState(NamedTuple):
 
 
 class DSGDReference:
-    """Stacked single-host DSGD, mirroring ReferenceSimulator's API."""
+    """Stacked single-host DSGD, mirroring ReferenceSimulator's API.
 
-    def __init__(self, topo: Topology, cfg: DSGDConfig):
-        self.topo = topo
+    Accepts a Topology, PermuteSchedule, or time-varying
+    ScheduleSequence — full-state mixing is exact on every round's W(t).
+    """
+
+    def __init__(self, topo, cfg: DSGDConfig):
         self.cfg = cfg
-        self.weights = jnp.asarray(topo.weights, jnp.float32)
+        self.seq = gossip.sequence_of(topo)
+        self._wstack = jnp.asarray(self.seq.weights_stack(), jnp.float32)
+        self.weights = self._wstack[0]
 
     def init(self, params_stack: PyTree) -> DSGDState:
         return DSGDState(x=params_stack, step=jnp.zeros((), jnp.int32))
@@ -70,15 +76,22 @@ class DSGDReference:
     def step(self, state: DSGDState, grad_fn, batch_stack: PyTree,
              key: jax.Array) -> Tuple[DSGDState, PyTree]:
         grads, aux = grad_fn(state.x, batch_stack)
-        g = _masked_grad(grads, key, self.cfg.as_sdm())
+        g = masked_grad(grads, key, sigma=self.cfg.sigma,
+                        clip_c=self.cfg.clip_c)
+        w_t = self._wstack[state.step % self.seq.length]
         x = jax.tree.map(
-            lambda xs, gs: gossip.mix_dense(self.weights, xs)
+            lambda xs, gs: gossip.mix_dense(w_t, xs)
             - self.cfg.gamma * gs.astype(xs.dtype),
             state.x, g)
         return DSGDState(x=x, step=state.step + 1), aux
 
     def consensus_mean(self, state: DSGDState) -> PyTree:
         return jax.tree.map(lambda x: jnp.mean(x, axis=0), state.x)
+
+    consensus = consensus_mean
+
+    def eval_params(self, state: DSGDState) -> PyTree:
+        return state.x
 
 
 def dsgd_distributed_step(state: DSGDState, grads: PyTree, *, base_key: jax.Array,
@@ -90,20 +103,22 @@ def dsgd_distributed_step(state: DSGDState, grads: PyTree, *, base_key: jax.Arra
 
     This is the communication baseline for the roofline comparison:
     collective bytes per round = deg * d * itemsize (vs p * that for
-    SDM-DSGD packed mode). ``schedule`` selects the gossip graph; legacy
-    scalar (self_weight, neighbor_weight) callers get the symmetric ring.
+    SDM-DSGD packed mode). ``schedule`` selects the gossip graph — a
+    PermuteSchedule or a time-varying ScheduleSequence indexed by the
+    state's step counter; legacy scalar (self_weight, neighbor_weight)
+    callers get the symmetric ring.
     """
     del neighbor_weight
-    schedule = gossip.resolve_schedule(schedule, axis_name, self_weight)
+    seq = gossip.resolve_sequence(schedule, axis_name, self_weight)
     me = gossip._me(axis_name, node_index)
-    sw = schedule.self_weight_of(me)
+    sw = seq.self_weight_of(me, state.step)
     noise_key = jax.random.fold_in(
         gossip.node_round_key(base_key, me, state.step), 0x5eed)
-    g = _masked_grad(grads, noise_key, cfg.as_sdm())
+    g = masked_grad(grads, noise_key, sigma=cfg.sigma, clip_c=cfg.clip_c)
 
     mixed_tree = jax.tree.map(
         lambda x: sw.astype(x.dtype) * x + gossip.exchange(
-            schedule, x, axis_name, node_index=node_index),
+            seq, x, axis_name, node_index=node_index, step=state.step),
         state.x)
     x = jax.tree.map(lambda m, gr: m - cfg.gamma * gr.astype(m.dtype),
                      mixed_tree, g)

@@ -64,9 +64,14 @@ __all__ = [
     "apply_weights_dense",
     "PermuteSchedule",
     "ScheduleRound",
+    "ScheduleSequence",
     "schedule_from_topology",
+    "sequence_from_topologies",
+    "sequence_by_name",
+    "ensure_sequence",
     "ring_schedule",
     "resolve_schedule",
+    "resolve_sequence",
     "exchange",
     "exchange_packed",
     "exchange_packed_rows",
@@ -128,6 +133,89 @@ class PermuteSchedule:
         """W_ii for the calling node (index with axis_index inside shard_map)."""
         return jnp.asarray(self.self_weights, jnp.float32)[me]
 
+    def dense_weights(self) -> np.ndarray:
+        """Reconstruct the full (n, n) consensus/push matrix W.
+
+        Inverse of ``schedule_from_topology``: W_ii from ``self_weights``
+        and W[r, (r - s) % n] from round s's receive weights. Reference
+        executors mix with exactly this matrix, so both executors are
+        built from the same schedule object.
+        """
+        n = self.n_nodes
+        w = np.diag(np.asarray(self.self_weights, np.float64))
+        for rnd in self.rounds:
+            for r in range(n):
+                if rnd.recv_weights[r]:
+                    w[r, (r - rnd.shift) % n] = rnd.recv_weights[r]
+        return w
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleSequence:
+    """A (possibly time-varying) gossip schedule: one PermuteSchedule per
+    round, cycled by the iteration counter (B-connected sequences).
+
+    Static graphs are the length-1 special case. Hashable/static like
+    ``PermuteSchedule`` — safe to close over in jit/shard_map; the
+    *traced* step counter picks the active schedule at runtime via
+    ``lax.switch`` in the exchange helpers.
+    """
+
+    name: str
+    n_nodes: int
+    schedules: Tuple[PermuteSchedule, ...]
+
+    def __post_init__(self) -> None:
+        if not self.schedules:
+            raise ValueError("ScheduleSequence needs >= 1 schedule")
+        if any(s.n_nodes != self.n_nodes for s in self.schedules):
+            raise ValueError("all schedules must share n_nodes")
+
+    @property
+    def length(self) -> int:
+        return len(self.schedules)
+
+    @property
+    def n_rounds(self) -> int:
+        """Worst-case collective-permute rounds per gossip step."""
+        return max(s.n_rounds for s in self.schedules)
+
+    def at(self, t: int) -> PermuteSchedule:
+        """The schedule active at (python int) iteration t."""
+        return self.schedules[int(t) % self.length]
+
+    def self_weight_of(self, me, step=None) -> jax.Array:
+        """W_ii(step) for the calling node; ``step`` may be traced."""
+        if self.length == 1 or step is None:
+            return self.schedules[0].self_weight_of(me)
+        table = jnp.asarray([s.self_weights for s in self.schedules],
+                            jnp.float32)          # (L, n)
+        return table[step % self.length, me]
+
+    def weights_stack(self) -> np.ndarray:
+        """(L, n, n) stacked dense matrices (reference-executor mixing)."""
+        return np.stack([s.dense_weights() for s in self.schedules])
+
+
+def ensure_sequence(schedule) -> ScheduleSequence:
+    """Wrap a single PermuteSchedule as a length-1 ScheduleSequence."""
+    if isinstance(schedule, ScheduleSequence):
+        return schedule
+    return ScheduleSequence(name=schedule.name, n_nodes=schedule.n_nodes,
+                            schedules=(schedule,))
+
+
+def sequence_of(topo) -> ScheduleSequence:
+    """Normalize ANY graph argument to a ScheduleSequence.
+
+    Accepts a ScheduleSequence, a PermuteSchedule, or a (Directed)Topology
+    — the single conversion every reference executor and the trainer use,
+    so graph handling cannot drift between them.
+    """
+    if isinstance(topo, (PermuteSchedule, ScheduleSequence)):
+        return ensure_sequence(topo)
+    return ensure_sequence(schedule_from_topology(topo))
+
 
 def schedule_from_topology(topo) -> PermuteSchedule:
     """Compile ``topo`` (a topology.Topology) into a PermuteSchedule."""
@@ -148,6 +236,41 @@ def schedule_from_topology(topo) -> PermuteSchedule:
         rounds=tuple(rounds))
 
 
+def sequence_from_topologies(topos, name: str | None = None
+                             ) -> ScheduleSequence:
+    """Compile a list of topologies into a time-varying ScheduleSequence."""
+    schedules = tuple(schedule_from_topology(t) for t in topos)
+    return ScheduleSequence(
+        name=name or "+".join(s.name for s in schedules)[:64],
+        n_nodes=schedules[0].n_nodes, schedules=schedules)
+
+
+def sequence_by_name(spec: str, n_nodes: int, *,
+                     self_weight: float | None = None,
+                     seed: int = 0) -> ScheduleSequence:
+    """Parse a CLI spec into a ScheduleSequence.
+
+    Static ``topology.by_name`` specs give a length-1 sequence;
+    ``matchings`` / ``matchings:<L>`` gives L random per-round matchings
+    (B-connected time-varying gossip), cycled by the step counter.
+    """
+    from repro.core import topology as topology_mod
+
+    spec = spec.strip().lower()
+    if spec.startswith("matchings") and n_nodes > 1:
+        rounds = int(spec.split(":", 1)[1]) if ":" in spec else 4
+        topos = topology_mod.random_matchings(
+            n_nodes, rounds, seed=seed,
+            self_weight=0.5 if self_weight is None else self_weight)
+        return sequence_from_topologies(
+            topos, name=f"matchings{n_nodes}x{rounds}_s{seed}")
+    if spec.startswith("matchings"):    # n_nodes == 1 degenerate
+        spec = "complete"
+    topo = topology_mod.by_name(spec, n_nodes, self_weight=self_weight,
+                                seed=seed)
+    return ensure_sequence(schedule_from_topology(topo))
+
+
 @functools.lru_cache(maxsize=None)
 def ring_schedule(n: int, self_weight: float | None = None) -> PermuteSchedule:
     """The symmetric ring as a schedule (2 rounds: shifts +1 and n-1)."""
@@ -165,9 +288,28 @@ def resolve_schedule(schedule: PermuteSchedule | None, axis_name,
     schedule can be built on the fly.
     """
     if schedule is not None:
+        if isinstance(schedule, ScheduleSequence):
+            if schedule.length != 1:
+                raise ValueError(
+                    "time-varying sequence passed where a single static "
+                    "schedule is required; use resolve_sequence")
+            return schedule.schedules[0]
         return schedule
     n = int(jax.lax.psum(1, axis_name))
     return ring_schedule(n, self_weight)
+
+
+def resolve_sequence(schedule, axis_name,
+                     self_weight: float | None = None) -> ScheduleSequence:
+    """Normalize PermuteSchedule | ScheduleSequence | None to a sequence.
+
+    ``None`` keeps the legacy behaviour: the symmetric ring over the
+    full node axis with scalar ``self_weight``.
+    """
+    if schedule is None:
+        n = int(jax.lax.psum(1, axis_name))
+        schedule = ring_schedule(n, self_weight)
+    return ensure_sequence(schedule)
 
 
 def _me(axis_name, node_index):
@@ -181,95 +323,140 @@ def _round_weight(rnd: ScheduleRound, me, dtype) -> jax.Array:
     return jnp.asarray(rnd.recv_weights, jnp.float32)[me].astype(dtype)
 
 
-def exchange(schedule: PermuteSchedule, x: jax.Array, axis_name,
-             node_index=None) -> jax.Array:
-    """Weighted neighbour sum sum_{j in N_i} W_ij x_j, dense payload.
+def exchange(schedule, x: jax.Array, axis_name,
+             node_index=None, step=None) -> jax.Array:
+    """Weighted neighbour sum sum_{j in N_i(t)} W_ij(t) x_j, dense payload.
 
     One ppermute per schedule round; receivers with no shift-s in-edge get
     ppermute zeros and a zero weight, so the sum is exact on any graph.
-    ``node_index`` overrides `axis_index` where that collective cannot
-    lower (partial-auto shard_map on older jaxlibs).
+    ``schedule`` may be a single PermuteSchedule or a time-varying
+    ScheduleSequence — the latter needs the (possibly traced) ``step``
+    counter, and lowers to a ``lax.switch`` over the per-round branches so
+    only the active round's permutes execute. ``node_index`` overrides
+    `axis_index` where that collective cannot lower (partial-auto
+    shard_map on older jaxlibs).
     """
+    seq = ensure_sequence(schedule)
     me = _me(axis_name, node_index)
-    total = jnp.zeros_like(x)
-    for rnd in schedule.rounds:
-        recv = jax.lax.ppermute(x, axis_name, rnd.perm)
-        total = total + _round_weight(rnd, me, x.dtype) * recv
-    return total
+
+    def one(sched: PermuteSchedule, v: jax.Array) -> jax.Array:
+        total = jnp.zeros_like(v)
+        for rnd in sched.rounds:
+            recv = jax.lax.ppermute(v, axis_name, rnd.perm)
+            total = total + _round_weight(rnd, me, v.dtype) * recv
+        return total
+
+    if seq.length == 1:
+        return one(seq.schedules[0], x)
+    if step is None:
+        raise ValueError("time-varying ScheduleSequence needs step=")
+    return jax.lax.switch(step % seq.length,
+                          [functools.partial(one, s) for s in seq.schedules],
+                          x)
 
 
-def exchange_packed(schedule: PermuteSchedule, d_flat: jax.Array, *,
+def _batched_sender_indices(schedule: PermuteSchedule, me, *,
+                            base_key: jax.Array, step: jax.Array,
+                            nb: int, kb: int) -> jax.Array:
+    """All this-step senders' index sets from ONE shared uniform draw.
+
+    Every shift round of a step exchanges the same leaf, so the per-step
+    draw is shared: one (R, nb) batched uniform + one batched top_k
+    replaces R separate draw+sort dispatches (one per round). Bit-equal
+    to the per-round regeneration — vmapped PRNG draws and row-batched
+    top_k match the scalar calls exactly — so trajectories are unchanged.
+    Returns (n_rounds, kb) indices, row i for the shift of round i.
+    """
+    n = schedule.n_nodes
+    shifts = jnp.asarray([rnd.shift for rnd in schedule.rounds], jnp.int32)
+    senders = jnp.mod(me - shifts, n)
+    keys = jax.vmap(lambda j: node_round_key(base_key, j, step))(senders)
+    scores = jax.vmap(lambda k: jax.random.uniform(k, (nb,)))(keys)
+    _, idx = jax.lax.top_k(scores, kb)
+    return idx
+
+
+def _packed_exchange(seq: ScheduleSequence, db: jax.Array, unpack, *,
+                     axis_name, base_key: jax.Array, step: jax.Array,
+                     p, node_index) -> Tuple[jax.Array, jax.Array]:
+    """Shared engine for packed gossip on a (2-D block view of a) leaf.
+
+    ``unpack(vals, idx)`` densifies a packed payload back to the leaf's
+    original shape. Payload selection/packing is hoisted OUT of the
+    schedule branches (it depends only on (me, step)), so time-varying
+    sequences pay one packing + one switch over nb-sum branches.
+    """
+    nb_blocks = db.shape[0]
+    kb = sparsifier.num_kept(nb_blocks, p)
+    scale = nb_blocks / kb
+    me = _me(axis_name, node_index)
+
+    my_idx = sparsifier.fixedk_indices(
+        node_round_key(base_key, me, step), nb_blocks, kb)
+    my_vals = jnp.take(db, my_idx, axis=0) * scale   # (kb, block|cols)
+    own_sparse = unpack(my_vals, my_idx)
+
+    def nb_for(sched: PermuteSchedule, vals_out: jax.Array) -> jax.Array:
+        nb_sum = jnp.zeros_like(own_sparse)
+        if not sched.rounds:
+            return nb_sum
+        sender_idx = _batched_sender_indices(
+            sched, me, base_key=base_key, step=step, nb=nb_blocks, kb=kb)
+        for i, rnd in enumerate(sched.rounds):
+            # Wire traffic: only the packed (kb, block) values move.
+            vals = jax.lax.ppermute(vals_out, axis_name, rnd.perm)
+            w = _round_weight(rnd, me, own_sparse.dtype)
+            nb_sum = nb_sum + w * unpack(vals, sender_idx[i])
+        return nb_sum
+
+    if seq.length == 1:
+        return own_sparse, nb_for(seq.schedules[0], my_vals)
+    return own_sparse, jax.lax.switch(
+        step % seq.length,
+        [functools.partial(nb_for, s) for s in seq.schedules], my_vals)
+
+
+def exchange_packed(schedule, d_flat: jax.Array, *,
                     axis_name, base_key: jax.Array, step: jax.Array,
-                    p: float, block: int = 1,
+                    p, block: int = 1,
                     node_index=None) -> Tuple[jax.Array, jax.Array]:
     """One packed gossip round on any schedule; returns (own_sparse, nb_sum).
 
     Per round s only the sender's packed (kb, block) values cross the
     wire; the receiver regenerates the shift-s sender's index set from
-    ``node_round_key(base_key, (me - s) % n, step)`` and scatters + weighs
-    locally. ``nb_sum = sum_{j in N_i} W_ij S(d_j)`` densified.
+    ``node_round_key(base_key, (me - s) % n, step)`` (one batched draw
+    per step shared across rounds) and scatters + weighs locally.
+    ``nb_sum = sum_{j in N_i} W_ij S(d_j)`` densified. Accepts a
+    time-varying ScheduleSequence (round picked by ``step``).
     """
     dim = d_flat.shape[0]
     db = sparsifier.block_view(d_flat, block)
-    nb_blocks = db.shape[0]
-    kb = sparsifier.num_kept(nb_blocks, p)
-    scale = nb_blocks / kb
-    n = schedule.n_nodes
-    me = _me(axis_name, node_index)
-
-    my_idx = sparsifier.fixedk_indices(
-        node_round_key(base_key, me, step), nb_blocks, kb)
-    my_vals = jnp.take(db, my_idx, axis=0) * scale   # (kb, block)
-
     unpack = lambda vals, idx: jnp.zeros_like(db).at[idx].set(
         vals).reshape(-1)[:dim]
-    own_sparse = unpack(my_vals, my_idx)
-    nb_sum = jnp.zeros_like(own_sparse)
-    for rnd in schedule.rounds:
-        # Wire traffic: only the packed (kb, block) values move.
-        vals = jax.lax.ppermute(my_vals, axis_name, rnd.perm)
-        sender_idx = sparsifier.fixedk_indices(
-            node_round_key(base_key, (me - rnd.shift) % n, step),
-            nb_blocks, kb)
-        w = _round_weight(rnd, me, own_sparse.dtype)
-        nb_sum = nb_sum + w * unpack(vals, sender_idx)
-    return own_sparse, nb_sum
+    return _packed_exchange(ensure_sequence(schedule), db, unpack,
+                            axis_name=axis_name, base_key=base_key,
+                            step=step, p=p, node_index=node_index)
 
 
-def exchange_packed_rows(schedule: PermuteSchedule, d: jax.Array, *,
+def exchange_packed_rows(schedule, d: jax.Array, *,
                          axis_name, base_key: jax.Array, step: jax.Array,
-                         p: float,
+                         p,
                          node_index=None) -> Tuple[jax.Array, jax.Array]:
     """Sharding-aligned packed gossip on any schedule (blocks = rows).
 
     Same selection semantics as ``ring_exchange_packed_rows`` — the packed
     payload keeps each leaf's model-axis sharding — generalized to every
-    schedule round.
+    schedule round and to time-varying sequences.
     """
     shape = d.shape
     cols = shape[-1] if d.ndim > 1 else 1
     rows = d.size // cols
     db = d.reshape(rows, cols)
-    kb = sparsifier.num_kept(rows, p)
-    scale = rows / kb
-    n = schedule.n_nodes
-    me = _me(axis_name, node_index)
-
-    my_idx = sparsifier.fixedk_indices(
-        node_round_key(base_key, me, step), rows, kb)
-    my_vals = jnp.take(db, my_idx, axis=0) * scale      # (kb, cols)
-
     unpack = lambda vals, idx: jnp.zeros_like(db).at[idx].set(
         vals).reshape(shape)
-    own_sparse = unpack(my_vals, my_idx)
-    nb_sum = jnp.zeros_like(own_sparse)
-    for rnd in schedule.rounds:
-        vals = jax.lax.ppermute(my_vals, axis_name, rnd.perm)
-        sender_idx = sparsifier.fixedk_indices(
-            node_round_key(base_key, (me - rnd.shift) % n, step), rows, kb)
-        w = _round_weight(rnd, me, own_sparse.dtype)
-        nb_sum = nb_sum + w * unpack(vals, sender_idx)
-    return own_sparse, nb_sum
+    return _packed_exchange(ensure_sequence(schedule), db, unpack,
+                            axis_name=axis_name, base_key=base_key,
+                            step=step, p=p, node_index=node_index)
 
 
 # --------------------------------------------------------------------------

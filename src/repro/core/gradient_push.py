@@ -1,0 +1,138 @@
+"""Gradient-push (stochastic gradient push / DP-CSGP-style) over DIRECTED graphs.
+
+Undirected SDM-DSGD/DSGD need a symmetric doubly-stochastic W — impossible
+to build locally on a directed graph (a node cannot normalize weights it
+receives over links it does not know about). Push-sum (Kempe et al.;
+Nedić–Olshevsky; Assran et al. SGP) fixes this with a COLUMN-stochastic
+push matrix P (every sender splits its mass over its out-edges) plus a
+scalar mass counter w that undergoes the same mixing, so the de-biased
+ratio z = x / w converges to the true average even though P is not
+row-stochastic:
+
+    z_{i,t}     = x_{i,t} / w_{i,t}              # de-biased estimate
+    x_{i,t+1/2} = x_{i,t} - gamma * g_i(z_{i,t}) # local (masked) step
+    x_{i,t+1}   = sum_j P_ij(t) x_{j,t+1/2}      # push values
+    w_{i,t+1}   = sum_j P_ij(t) w_{j,t}          # push mass
+
+Column-stochasticity conserves total mass (sum_i x_i and sum_i w_i are
+invariants), so sum x / sum w is exactly the running average — that is
+the consensus quantity reported. Gaussian masking + clipping reuse the
+shared ``sdm_dsgd.masked_grad`` (the DP flavour per arXiv:2512.13583).
+Full state crosses the wire, so time-varying (B-strongly-connected)
+sequences are exact, like DSGD.
+
+Both executors compile from the same schedule object: the reference
+mixes with ``ScheduleSequence.weights_stack()`` and the distributed
+per-node step runs the identical ``gossip.exchange`` ppermute rounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gossip
+from repro.core.sdm_dsgd import masked_grad
+
+__all__ = ["GradientPushConfig", "GradientPushState", "GradientPushReference",
+           "init_push_state", "gradient_push_distributed_step"]
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientPushConfig:
+    gamma: float = 0.01
+    sigma: float = 0.0
+    clip_c: float | None = None
+
+
+class GradientPushState(NamedTuple):
+    x: PyTree        # push numerator (per-node model mass)
+    w: jax.Array     # push-sum weight (scalar per node; (n,) stacked)
+    step: jax.Array
+
+
+def _debias(x_tree: PyTree, w) -> PyTree:
+    """z = x / w with w broadcast over each leaf's trailing dims."""
+    def one(x):
+        wb = jnp.reshape(w, w.shape + (1,) * (x.ndim - w.ndim))
+        return (x / wb).astype(x.dtype)
+    return jax.tree.map(one, x_tree)
+
+
+class GradientPushReference:
+    """Stacked single-host gradient-push, mirroring ReferenceSimulator."""
+
+    def __init__(self, topo, cfg: GradientPushConfig):
+        self.cfg = cfg
+        self.seq = gossip.sequence_of(topo)
+        self._wstack = jnp.asarray(self.seq.weights_stack(), jnp.float32)
+        self.weights = self._wstack[0]
+
+    def init(self, params_stack: PyTree) -> GradientPushState:
+        n = jax.tree.leaves(params_stack)[0].shape[0]
+        assert n == self.seq.n_nodes, (n, self.seq.n_nodes)
+        return GradientPushState(x=params_stack, w=jnp.ones((n,), jnp.float32),
+                                 step=jnp.zeros((), jnp.int32))
+
+    def step(self, state: GradientPushState, grad_fn, batch_stack: PyTree,
+             key: jax.Array) -> Tuple[GradientPushState, PyTree]:
+        cfg = self.cfg
+        z = _debias(state.x, state.w)
+        grads, aux = grad_fn(z, batch_stack)
+        g = masked_grad(grads, key, sigma=cfg.sigma, clip_c=cfg.clip_c)
+        x_half = jax.tree.map(
+            lambda x, gr: x - cfg.gamma * gr.astype(x.dtype), state.x, g)
+        p_t = self._wstack[state.step % self.seq.length]
+        x = jax.tree.map(lambda v: gossip.mix_dense(p_t, v), x_half)
+        w = p_t @ state.w
+        return GradientPushState(x=x, w=w, step=state.step + 1), aux
+
+    def consensus_mean(self, state: GradientPushState) -> PyTree:
+        """sum_i x_i / sum_i w_i — exact by mass conservation."""
+        return jax.tree.map(
+            lambda x: jnp.sum(x, axis=0) / jnp.sum(state.w), state.x)
+
+    consensus = consensus_mean
+
+    def eval_params(self, state: GradientPushState) -> PyTree:
+        """Per-node de-biased estimates z_i (what training evaluates)."""
+        return _debias(state.x, state.w)
+
+
+def init_push_state(params: PyTree) -> GradientPushState:
+    """Per-node state inside shard_map (params have NO node axis)."""
+    return GradientPushState(x=params, w=jnp.ones((), jnp.float32),
+                             step=jnp.zeros((), jnp.int32))
+
+
+def gradient_push_distributed_step(state: GradientPushState, grads: PyTree, *,
+                                   base_key: jax.Array, axis_name,
+                                   cfg: GradientPushConfig,
+                                   schedule=None,
+                                   node_index=None) -> GradientPushState:
+    """Per-node push step inside shard_map (grads evaluated at z = x / w).
+
+    The scalar mass w rides the same ppermute schedule as the model
+    leaves — one extra () payload per round, negligible on the wire.
+    """
+    seq = gossip.resolve_sequence(schedule, axis_name)
+    me = gossip._me(axis_name, node_index)
+    sw = seq.self_weight_of(me, state.step)
+    noise_key = jax.random.fold_in(
+        gossip.node_round_key(base_key, me, state.step), 0x5eed)
+    g = masked_grad(grads, noise_key, sigma=cfg.sigma, clip_c=cfg.clip_c)
+
+    x_half = jax.tree.map(
+        lambda x, gr: x - cfg.gamma * gr.astype(x.dtype), state.x, g)
+    x = jax.tree.map(
+        lambda v: sw.astype(v.dtype) * v + gossip.exchange(
+            seq, v, axis_name, node_index=node_index, step=state.step),
+        x_half)
+    w = sw * state.w + gossip.exchange(seq, state.w, axis_name,
+                                       node_index=node_index,
+                                       step=state.step)
+    return GradientPushState(x=x, w=w, step=state.step + 1)

@@ -1,0 +1,419 @@
+"""Unified pluggable ``Method`` API: one registry for every algorithm.
+
+The repo grew three divergent algorithm surfaces — ``ReferenceSimulator``,
+the ``distributed_advance/commit/step_fused`` free functions, and the
+``DSGDReference``/``dsgd_distributed_step`` baseline path — and every
+caller (trainer, train steps, dryrun, benchmarks) wired them differently.
+This module collapses them behind one protocol:
+
+    meth = method.get("sdm-dsgd")           # registry lookup (aliases ok)
+    cfg  = meth.coerce_config(cfg_like)     # each method owns its config
+    sim  = meth.make_reference(seq, cfg)    # stacked single-host executor
+    ex   = meth.make_distributed(seq, cfg, axis_name)   # shard_map executor
+
+Both executors are built from the SAME schedule object (a
+``gossip.ScheduleSequence`` — static graphs are the length-1 case,
+time-varying B-connected sequences index by the traced step counter), so
+their mixing matrices can never diverge, and reference-vs-distributed
+parity is testable uniformly across methods x topologies.
+
+Reference executors (stacked, leading node axis) expose::
+
+    init(params_stack) -> state
+    step(state, grad_fn, batch_stack, key) -> (state, aux)
+    consensus(state) -> tree          # the method's consensus estimate
+    eval_params(state) -> tree        # per-node params evaluation runs on
+
+(SDM-style methods additionally expose advance/commit — the two phases
+of Algorithm 1 — which ``step`` composes.)
+
+Distributed executors run INSIDE ``jax.shard_map`` with the node axis
+manual and expose::
+
+    init(params, me) -> state                         # per-node state
+    step(state, grads_at, *, base_key, node_index) -> (state, aux)
+
+``grads_at(params) -> (grads, aux)`` lets each method pick WHERE the
+gradient is evaluated (post-advance x for SDM-DSGD, the de-biased
+z = x / w for gradient-push, ...).
+
+Registered methods:
+
+    sdm-dsgd        the paper's Algorithm 1 (3-buffer x/s/d state)
+    sdm-dsgd-fused  same algorithm, commit+advance fused (2 buffers)
+    dc-dsgd         derived from sdm-dsgd with theta pinned to 1
+    dsgd            full-state gossip baseline (noise/clip shared via
+                    ``masked_grad`` — the old as_sdm shim is gone)
+    gradient-push   push-sum over DIRECTED column-stochastic graphs
+    allreduce       conventional data parallelism (non-gossip bound)
+
+Adding a method = one ``Method(...)`` + ``register(...)`` call; the
+train step factory, trainer, dryrun, CLI ``--method`` axis, and the
+parity test sweep pick it up automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, gossip, gradient_push, sdm_dsgd
+
+__all__ = ["Method", "DistributedExecutor", "register", "get", "names",
+           "normalize", "PARAM", "SCALAR", "COUNTER",
+           "state_shape_dtype", "state_shardings"]
+
+PyTree = Any
+
+# State-field kinds: drive the generic ShapeDtypeStruct / sharding
+# builders in train.steps without per-method special cases.
+PARAM = "param"      # shaped like the parameter tree
+SCALAR = "scalar"    # one f32 per node
+COUNTER = "counter"  # one i32 per node (the iteration counter)
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributedExecutor:
+    """The per-node (inside shard_map) face of a method."""
+
+    init: Callable[[PyTree, Any], Any]          # (params, me) -> state
+    step: Callable[..., Tuple[Any, Any]]        # (state, grads_at, *, base_key, node_index)
+
+
+@dataclasses.dataclass(frozen=True)
+class Method:
+    """A registered decentralized-learning method (see module docstring)."""
+
+    name: str
+    config_cls: type
+    state_cls: type
+    state_fields: Tuple[Tuple[str, str], ...]
+    coerce_config: Callable[[Any], Any]
+    make_reference: Callable[[Any, Any], Any]
+    make_distributed: Callable[[gossip.ScheduleSequence, Any, Any],
+                               DistributedExecutor]
+    init_stacked: Callable[[PyTree, gossip.ScheduleSequence, Any], Any]
+    transmitted_elements: Callable[[PyTree, Any], int]
+    directed: bool = False       # meaningful on directed (push) graphs
+    description: str = ""
+
+
+_REGISTRY: Dict[str, Method] = {}
+
+_ALIASES = {
+    "dcdsgd": "dc-dsgd",
+    "push-sum": "gradient-push",
+    "sgp": "gradient-push",
+    "all-reduce": "allreduce",
+}
+
+
+def normalize(name: str) -> str:
+    """Canonical registry key: lower-case, '_' -> '-', aliases resolved."""
+    key = name.strip().lower().replace("_", "-")
+    return _ALIASES.get(key, key)
+
+
+def register(meth: Method) -> Method:
+    _REGISTRY[meth.name] = meth
+    return meth
+
+
+def get(name: str) -> Method:
+    key = normalize(name)
+    if key not in _REGISTRY:
+        raise KeyError(
+            f"unknown method {name!r}; registered: {', '.join(names())}")
+    return _REGISTRY[key]
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# --------------------------------------------------------------------------
+# Generic state-template builders (used by train.steps and launch.dryrun).
+# --------------------------------------------------------------------------
+
+def state_shape_dtype(meth: Method, x_stack: PyTree):
+    """Stacked-state ShapeDtypeStructs from the stacked params template."""
+    n = jax.tree.leaves(x_stack)[0].shape[0]
+    kw = {}
+    for fname, kind in meth.state_fields:
+        if kind == PARAM:
+            kw[fname] = x_stack
+        elif kind == SCALAR:
+            kw[fname] = jax.ShapeDtypeStruct((n,), jnp.float32)
+        else:
+            kw[fname] = jax.ShapeDtypeStruct((n,), jnp.int32)
+    return meth.state_cls(**kw)
+
+
+def state_shardings(meth: Method, x_shardings: PyTree, node_vec_sharding):
+    """Stacked-state NamedShardings from the params-tree shardings."""
+    kw = {}
+    for fname, kind in meth.state_fields:
+        kw[fname] = x_shardings if kind == PARAM else node_vec_sharding
+    return meth.state_cls(**kw)
+
+
+def _stacked_counter(n: int) -> jax.Array:
+    return jnp.zeros((n,), jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# SDM-DSGD (and its derivations: fused layout, DC-DSGD).
+# --------------------------------------------------------------------------
+
+def _coerce_sdm(cfg) -> sdm_dsgd.SDMConfig:
+    if isinstance(cfg, sdm_dsgd.SDMConfig):
+        return cfg
+    raise TypeError(f"sdm-dsgd needs an SDMConfig, got {type(cfg).__name__}")
+
+
+def _sdm_init_stacked(stack: PyTree, seq: gossip.ScheduleSequence, cfg
+                      ) -> sdm_dsgd.SDMState:
+    n = jax.tree.leaves(stack)[0].shape[0]
+    sw = np.asarray(seq.schedules[0].self_weights, np.float32)
+
+    def s0_leaf(x):
+        w = (1.0 - sw).reshape((n,) + (1,) * (x.ndim - 1))
+        return (w * x).astype(x.dtype)
+
+    return sdm_dsgd.SDMState(
+        x=stack, s=jax.tree.map(s0_leaf, stack),
+        d=jax.tree.map(jnp.zeros_like, stack), step=_stacked_counter(n))
+
+
+def _sdm_distributed(seq: gossip.ScheduleSequence, cfg, axis_name
+                     ) -> DistributedExecutor:
+    def init(params, me):
+        return sdm_dsgd.init_distributed_state(
+            params, seq.self_weight_of(me, 0))
+
+    def step(state, grads_at, *, base_key, node_index=None):
+        state = sdm_dsgd.distributed_advance(
+            state, base_key=base_key, axis_name=axis_name, cfg=cfg,
+            schedule=seq, node_index=node_index)
+        grads, aux = grads_at(state.x)
+        state = sdm_dsgd.distributed_commit(
+            state, grads, base_key=base_key, axis_name=axis_name, cfg=cfg,
+            schedule=seq, node_index=node_index)
+        return state, aux
+
+    return DistributedExecutor(init=init, step=step)
+
+
+def _fused_init_stacked(stack, seq, cfg) -> sdm_dsgd.SDMFusedState:
+    full = _sdm_init_stacked(stack, seq, cfg)
+    return sdm_dsgd.SDMFusedState(x=full.x, s=full.s, step=full.step)
+
+
+def _fused_distributed(seq, cfg, axis_name) -> DistributedExecutor:
+    def init(params, me):
+        return sdm_dsgd.init_fused_state(params, seq.self_weight_of(me, 0))
+
+    def step(state, grads_at, *, base_key, node_index=None):
+        grads, aux = grads_at(state.x)
+        state = sdm_dsgd.distributed_step_fused(
+            state, grads, base_key=base_key, axis_name=axis_name, cfg=cfg,
+            schedule=seq, node_index=node_index)
+        return state, aux
+
+    return DistributedExecutor(init=init, step=step)
+
+
+# --------------------------------------------------------------------------
+# DSGD (full-state baseline) and allreduce (non-gossip upper bound).
+# --------------------------------------------------------------------------
+
+def _coerce_dsgd(cfg) -> baselines.DSGDConfig:
+    if isinstance(cfg, baselines.DSGDConfig):
+        return cfg
+    if isinstance(cfg, sdm_dsgd.SDMConfig):
+        # The single conversion point (sparsity disabled): replaces the
+        # old per-callsite DSGDConfig.as_sdm shim.
+        return baselines.DSGDConfig(gamma=cfg.gamma, sigma=cfg.sigma,
+                                    clip_c=cfg.clip_c)
+    raise TypeError(f"dsgd needs DSGDConfig/SDMConfig, got {type(cfg).__name__}")
+
+
+def _dsgd_init_stacked(stack, seq, cfg) -> baselines.DSGDState:
+    n = jax.tree.leaves(stack)[0].shape[0]
+    return baselines.DSGDState(x=stack, step=_stacked_counter(n))
+
+
+def _dsgd_distributed(seq, cfg, axis_name) -> DistributedExecutor:
+    def init(params, me):
+        return baselines.DSGDState(x=params, step=jnp.zeros((), jnp.int32))
+
+    def step(state, grads_at, *, base_key, node_index=None):
+        grads, aux = grads_at(state.x)
+        state = baselines.dsgd_distributed_step(
+            state, grads, base_key=base_key, axis_name=axis_name, cfg=cfg,
+            schedule=seq, node_index=node_index)
+        return state, aux
+
+    return DistributedExecutor(init=init, step=step)
+
+
+class AllreduceReference:
+    """Stacked conventional data parallelism: SGD on the mean gradient."""
+
+    def __init__(self, topo, cfg: baselines.DSGDConfig):
+        del topo  # no gossip graph
+        self.cfg = cfg
+
+    def init(self, params_stack: PyTree) -> baselines.DSGDState:
+        return baselines.DSGDState(x=params_stack,
+                                   step=jnp.zeros((), jnp.int32))
+
+    def step(self, state, grad_fn, batch_stack, key):
+        del key  # the non-private upper bound: no masking
+        grads, aux = grad_fn(state.x, batch_stack)
+        gbar = jax.tree.map(
+            lambda g: jnp.broadcast_to(jnp.mean(g, axis=0, keepdims=True),
+                                       g.shape), grads)
+        x = jax.tree.map(
+            lambda x, g: x - self.cfg.gamma * g.astype(x.dtype),
+            state.x, gbar)
+        return baselines.DSGDState(x=x, step=state.step + 1), aux
+
+    def consensus_mean(self, state):
+        return jax.tree.map(lambda x: jnp.mean(x, axis=0), state.x)
+
+    consensus = consensus_mean
+
+    def eval_params(self, state):
+        return state.x
+
+
+def _allreduce_distributed(seq, cfg, axis_name) -> DistributedExecutor:
+    def init(params, me):
+        return baselines.DSGDState(x=params, step=jnp.zeros((), jnp.int32))
+
+    def step(state, grads_at, *, base_key, node_index=None):
+        grads, aux = grads_at(state.x)
+        grads = jax.tree.map(lambda g: jax.lax.pmean(g, axis_name), grads)
+        x = jax.tree.map(
+            lambda p, g: p - cfg.gamma * g.astype(p.dtype), state.x, grads)
+        return baselines.DSGDState(x=x, step=state.step + 1), aux
+
+    return DistributedExecutor(init=init, step=step)
+
+
+# --------------------------------------------------------------------------
+# Gradient-push (directed graphs, push-sum de-biasing).
+# --------------------------------------------------------------------------
+
+def _coerce_push(cfg) -> gradient_push.GradientPushConfig:
+    if isinstance(cfg, gradient_push.GradientPushConfig):
+        return cfg
+    if isinstance(cfg, (sdm_dsgd.SDMConfig, baselines.DSGDConfig)):
+        return gradient_push.GradientPushConfig(
+            gamma=cfg.gamma, sigma=cfg.sigma, clip_c=cfg.clip_c)
+    raise TypeError(
+        f"gradient-push needs GradientPushConfig, got {type(cfg).__name__}")
+
+
+def _push_init_stacked(stack, seq, cfg) -> gradient_push.GradientPushState:
+    n = jax.tree.leaves(stack)[0].shape[0]
+    return gradient_push.GradientPushState(
+        x=stack, w=jnp.ones((n,), jnp.float32), step=_stacked_counter(n))
+
+
+def _push_distributed(seq, cfg, axis_name) -> DistributedExecutor:
+    def init(params, me):
+        return gradient_push.init_push_state(params)
+
+    def step(state, grads_at, *, base_key, node_index=None):
+        z = gradient_push._debias(state.x, state.w)
+        grads, aux = grads_at(z)
+        state = gradient_push.gradient_push_distributed_step(
+            state, grads, base_key=base_key, axis_name=axis_name, cfg=cfg,
+            schedule=seq, node_index=node_index)
+        return state, aux
+
+    return DistributedExecutor(init=init, step=step)
+
+
+# --------------------------------------------------------------------------
+# Default registrations.
+# --------------------------------------------------------------------------
+
+def _full_state_elements(params: PyTree, cfg) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+_SDM_FIELDS = (("x", PARAM), ("s", PARAM), ("d", PARAM), ("step", COUNTER))
+
+_SDM = register(Method(
+    name="sdm-dsgd",
+    config_cls=sdm_dsgd.SDMConfig,
+    state_cls=sdm_dsgd.SDMState,
+    state_fields=_SDM_FIELDS,
+    coerce_config=_coerce_sdm,
+    make_reference=sdm_dsgd.ReferenceSimulator,
+    make_distributed=_sdm_distributed,
+    init_stacked=_sdm_init_stacked,
+    transmitted_elements=sdm_dsgd.transmitted_elements_per_step,
+    description="Algorithm 1: sparse differential Gaussian-masking DSGD"))
+
+register(dataclasses.replace(
+    _SDM,
+    name="sdm-dsgd-fused",
+    state_cls=sdm_dsgd.SDMFusedState,
+    state_fields=(("x", PARAM), ("s", PARAM), ("step", COUNTER)),
+    make_distributed=_fused_distributed,
+    init_stacked=_fused_init_stacked,
+    description="SDM-DSGD with commit+advance fused (2 state buffers)"))
+
+# DC-DSGD is DERIVED from the SDM registration — theta pinned to 1, no
+# separate implementation (Remark 1: SDM-DSGD generalizes DC-DSGD).
+register(dataclasses.replace(
+    _SDM,
+    name="dc-dsgd",
+    coerce_config=lambda cfg: dataclasses.replace(_coerce_sdm(cfg), theta=1.0),
+    description="DC-DSGD = SDM-DSGD with theta = 1 (Tang et al. 2018)"))
+
+register(Method(
+    name="dsgd",
+    config_cls=baselines.DSGDConfig,
+    state_cls=baselines.DSGDState,
+    state_fields=(("x", PARAM), ("step", COUNTER)),
+    coerce_config=_coerce_dsgd,
+    make_reference=baselines.DSGDReference,
+    make_distributed=_dsgd_distributed,
+    init_stacked=_dsgd_init_stacked,
+    transmitted_elements=_full_state_elements,
+    description="full-state gossip DSGD (Lian et al. 2017)"))
+
+register(Method(
+    name="gradient-push",
+    config_cls=gradient_push.GradientPushConfig,
+    state_cls=gradient_push.GradientPushState,
+    state_fields=(("x", PARAM), ("w", SCALAR), ("step", COUNTER)),
+    coerce_config=_coerce_push,
+    make_reference=gradient_push.GradientPushReference,
+    make_distributed=_push_distributed,
+    init_stacked=_push_init_stacked,
+    transmitted_elements=lambda params, cfg:
+        _full_state_elements(params, cfg) + 1,   # + the push-sum mass w
+    directed=True,
+    description="push-sum gradient-push over directed column-stochastic "
+                "graphs (SGP / DP-CSGP-style)"))
+
+register(Method(
+    name="allreduce",
+    config_cls=baselines.DSGDConfig,
+    state_cls=baselines.DSGDState,
+    state_fields=(("x", PARAM), ("step", COUNTER)),
+    coerce_config=_coerce_dsgd,
+    make_reference=AllreduceReference,
+    make_distributed=_allreduce_distributed,
+    init_stacked=_dsgd_init_stacked,
+    transmitted_elements=_full_state_elements,
+    description="conventional all-reduce data parallelism (upper bound)"))

@@ -54,7 +54,11 @@ class PrivacyParams:
       m: local dataset size per node.
       tau: subsampling rate (batch fraction); the paper's headline results
          use tau = 1/m (one sample per step).
-      p: sparsifier transmit probability.
+      p: sparsifier transmit probability — a scalar, or a per-node tuple
+         for heterogeneous sparsity budgets. Theorem 1's per-step RDP is
+         linear in p, so with per-node budgets the accountant charges
+         every node the WORST-CASE (max-p) node's leakage: the reported
+         epsilon upper-bounds each node's true spend.
       sigma: Gaussian masking noise std-dev (per coordinate).
       delta: target delta.
     """
@@ -62,12 +66,18 @@ class PrivacyParams:
     G: float
     m: int
     tau: float
-    p: float
+    p: "float | tuple"
     sigma: float
     delta: float = 1e-5
 
     def __post_init__(self) -> None:
-        if not (0.0 < self.p <= 1.0):
+        if isinstance(self.p, (list, tuple)):
+            object.__setattr__(self, "p", tuple(float(v) for v in self.p))
+            if not self.p:
+                raise ValueError("per-node p must be non-empty")
+            if any(not (0.0 < v <= 1.0) for v in self.p):
+                raise ValueError("every per-node p must be in (0, 1]")
+        elif not (0.0 < self.p <= 1.0):
             raise ValueError("p must be in (0, 1]")
         if not (0.0 < self.tau <= 1.0):
             raise ValueError("tau must be in (0, 1]")
@@ -75,6 +85,16 @@ class PrivacyParams:
             raise ValueError("sigma must be >= 0")
         if not (0.0 < self.delta < 1.0):
             raise ValueError("delta must be in (0, 1)")
+
+    @property
+    def p_worst(self) -> float:
+        """The accountant's p: the max-p node dominates the RDP spend."""
+        return max(self.p) if isinstance(self.p, tuple) else self.p
+
+    @property
+    def p_sparsest(self) -> float:
+        """min-p node: dominates the REVERSED design's 1/p leakage."""
+        return min(self.p) if isinstance(self.p, tuple) else self.p
 
 
 def rdp_alpha(eps: float, delta: float) -> float:
@@ -85,12 +105,14 @@ def rdp_alpha(eps: float, delta: float) -> float:
 def per_step_rdp(params: PrivacyParams, alpha: float) -> float:
     """Expected per-step RDP of the released S(d_t) (Theorem 1 proof).
 
-    rho_t = 4 * alpha * p * (tau * G / (m * sigma))^2.
+    rho_t = 4 * alpha * p * (tau * G / (m * sigma))^2, with p the
+    worst-case (max) node budget when p is per-node.
     Requires sigma^2 >= 1/1.25 for the subsampling amplification.
     """
     if params.sigma == 0.0:
         return math.inf
-    return 4.0 * alpha * params.p * (params.tau * params.G / (params.m * params.sigma)) ** 2
+    return 4.0 * alpha * params.p_worst * (
+        params.tau * params.G / (params.m * params.sigma)) ** 2
 
 
 def epsilon_sdm(params: PrivacyParams, T: int, eps_target: float) -> float:
@@ -111,13 +133,15 @@ def epsilon_alternative(params: PrivacyParams, T: int, eps_target: float) -> flo
 
     eps_alt = 4*alpha*T*(tau*G)^2 / (m^2 * sigma^2 * p) + eps_target/2.
     The eps-part exceeds Theorem 1's by exactly 1/p^2 — the paper's
-    co-design argument for randomize-then-sparsify.
+    co-design argument for randomize-then-sparsify. Leakage here scales
+    as 1/p, so with per-node budgets the SPARSEST (min-p) node is the
+    worst case.
     """
     if params.sigma ** 2 < SIGMA_SQ_MIN:
         return math.inf
     alpha = rdp_alpha(eps_target, params.delta)
     rho = 4.0 * alpha * (params.tau * params.G) ** 2 / (
-        params.m ** 2 * params.sigma ** 2 * params.p)
+        params.m ** 2 * params.sigma ** 2 * params.p_sparsest)
     return T * rho + eps_target / 2.0
 
 

@@ -38,7 +38,7 @@ import jax.numpy as jnp
 from repro.core import clipping, gossip, sparsifier
 from repro.core.topology import Topology
 
-__all__ = ["SDMConfig", "SDMState", "ReferenceSimulator",
+__all__ = ["SDMConfig", "SDMState", "ReferenceSimulator", "masked_grad",
            "init_distributed_state", "distributed_advance",
            "distributed_commit", "transmitted_elements_per_step"]
 
@@ -56,9 +56,16 @@ class SDMConfig:
       'fixedk_rows'   — packed payloads over trailing-dim rows: keeps the
                         tensor-parallel sharding of every leaf intact
                         (the production choice; see EXPERIMENTS.md §Perf).
+
+    ``p`` may be a per-node tuple (heterogeneous sparsity budgets, e.g.
+    degree-weighted): node i then transmits with probability p[i].
+    Supported in 'bernoulli' mode only — fixed-k payload shapes are
+    static and must match across the ppermute, so per-node k is
+    impossible on the wire. The privacy accountant uses the worst-case
+    (max-p) node; Lemma-1's theta bound the most restrictive (min-p).
     """
 
-    p: float = 0.2
+    p: "float | Tuple[float, ...]" = 0.2
     theta: float = 0.6
     gamma: float = 0.01
     sigma: float = 0.0
@@ -76,16 +83,49 @@ class SDMConfig:
     error_feedback: bool = False
 
     def __post_init__(self) -> None:
-        if not (0.0 < self.p <= 1.0):
+        if isinstance(self.p, (list, tuple)):
+            object.__setattr__(self, "p", tuple(float(v) for v in self.p))
+            if not self.p:
+                raise ValueError("per-node p must be non-empty")
+            if any(not (0.0 < v <= 1.0) for v in self.p):
+                raise ValueError("every per-node p must be in (0,1]")
+            if self.mode != "bernoulli":
+                raise ValueError(
+                    "heterogeneous per-node p needs mode='bernoulli' "
+                    "(fixed-k wire payloads have static shapes)")
+            if self.error_feedback:
+                raise ValueError(
+                    "error_feedback with per-node p is unsupported")
+        elif not (0.0 < self.p <= 1.0):
             raise ValueError("p in (0,1]")
         if not (0.0 < self.theta <= 1.0):
             raise ValueError("theta in (0,1]")
         if self.mode not in ("bernoulli", "fixedk_packed", "fixedk_rows"):
             raise ValueError(f"unknown mode {self.mode}")
 
+    @property
+    def p_min(self) -> float:
+        """Most restrictive (sparsest) node's p — drives Lemma-1 bounds."""
+        return min(self.p) if isinstance(self.p, tuple) else self.p
+
+    @property
+    def p_max(self) -> float:
+        """Worst-case (densest) node's p — drives the privacy accountant."""
+        return max(self.p) if isinstance(self.p, tuple) else self.p
+
+    def p_of(self, node):
+        """Node's transmit probability: the scalar, or p[node] (traceable)."""
+        if isinstance(self.p, tuple):
+            return jnp.asarray(self.p, jnp.float32)[node]
+        return self.p
+
     def validate_against(self, topo: Topology, L: float = 1.0) -> None:
-        """Assert Lemma 1's theta < 2p/(1 - lambda_n + gamma L)."""
-        bound = 2.0 * self.p / (1.0 - topo.lambda_n + self.gamma * L)
+        """Assert Lemma 1's theta < 2p/(1 - lambda_n + gamma L).
+
+        With per-node p the bound must hold for every node, i.e. for
+        min(p).
+        """
+        bound = 2.0 * self.p_min / (1.0 - topo.lambda_n + self.gamma * L)
         if self.theta >= bound:
             raise ValueError(
                 f"theta={self.theta} >= Lemma-1 bound {bound:.4g} "
@@ -118,29 +158,65 @@ def _noise_like(key: jax.Array, tree: PyTree, sigma: float) -> PyTree:
         ks, tree)
 
 
-def _masked_grad(grads: PyTree, key: jax.Array, cfg: SDMConfig) -> PyTree:
-    """clip (optional, §5 procedure) then Gaussian-mask: g_hat = clip(g) + eta."""
-    if cfg.clip_c is not None:
-        grads = clipping.clip_tree(grads, cfg.clip_c)
-    if cfg.sigma > 0.0:
-        noise = _noise_like(key, grads, cfg.sigma)
+def check_per_node_p(cfg, n_nodes: int) -> None:
+    """Reject a per-node p tuple whose length mismatches the graph.
+
+    Must be called wherever a config first meets a schedule: a too-short
+    tuple would otherwise CLAMP on the distributed gather (every extra
+    node silently reusing the last p — the wrong sparsity AND privacy
+    budget) while the stacked reference vmap would crash, so the two
+    executors would not even agree the config is valid.
+    """
+    if isinstance(getattr(cfg, "p", None), tuple) and len(cfg.p) != n_nodes:
+        raise ValueError(
+            f"per-node p has {len(cfg.p)} entries for {n_nodes} nodes")
+
+
+def masked_grad(grads: PyTree, key: jax.Array, *, sigma: float,
+                clip_c: float | None) -> PyTree:
+    """clip (optional, §5 procedure) then Gaussian-mask: g_hat = clip(g) + eta.
+
+    The single noise/clipping implementation every method (SDM-DSGD,
+    DSGD, DC-DSGD, gradient-push) shares — baselines used to rebuild an
+    SDMConfig just to reach this (``DSGDConfig.as_sdm``, now gone).
+    """
+    if clip_c is not None:
+        grads = clipping.clip_tree(grads, clip_c)
+    if sigma > 0.0:
+        noise = _noise_like(key, grads, sigma)
         grads = jax.tree.map(jnp.add, grads, noise)
     return grads
 
 
-def transmitted_elements_per_step(params: PyTree, cfg: SDMConfig) -> int:
-    """Expected non-zero elements each node transmits per iteration.
+def _masked_grad(grads: PyTree, key: jax.Array, cfg) -> PyTree:
+    return masked_grad(grads, key, sigma=cfg.sigma, clip_c=cfg.clip_c)
+
+
+def transmitted_elements_per_step(params: PyTree, cfg: SDMConfig,
+                                  node: int | None = None) -> int:
+    """Expected non-zero elements one node transmits per iteration.
 
     The paper's Figure-3 communication metric ("non-zero digits"). For
     fixedk mode this is exact; for bernoulli it is the expectation p*d.
+    With heterogeneous per-node p, ``node`` selects whose budget to
+    count; ``node=None`` returns the across-node mean (so callers that
+    multiply by n_nodes still get the network total).
     """
+    if isinstance(cfg.p, tuple):
+        if node is None:
+            per_node = [transmitted_elements_per_step(params, cfg, i)
+                        for i in range(len(cfg.p))]
+            return int(round(sum(per_node) / len(per_node)))
+        p = cfg.p[node]
+    else:
+        p = cfg.p
     d = sum(int(x.size) for x in jax.tree.leaves(params))
     if cfg.mode == "fixedk_packed":
         b = cfg.pack_block
         # kb * b can exceed the leaf size when block_view pads the last
         # block; pad coordinates are never real payload, so clamp.
         return sum(
-            min(sparsifier.num_kept(-(-int(x.size) // b), cfg.p) * b,
+            min(sparsifier.num_kept(-(-int(x.size) // b), p) * b,
                 int(x.size))
             for x in jax.tree.leaves(params))
     if cfg.mode == "fixedk_rows":
@@ -148,9 +224,9 @@ def transmitted_elements_per_step(params: PyTree, cfg: SDMConfig) -> int:
         for x in jax.tree.leaves(params):
             cols = x.shape[-1] if x.ndim > 1 else 1
             rows = int(x.size) // cols
-            total += sparsifier.num_kept(rows, cfg.p) * cols
+            total += sparsifier.num_kept(rows, p) * cols
         return total
-    return int(round(cfg.p * d))
+    return int(round(p * d))
 
 
 # ==========================================================================
@@ -158,19 +234,55 @@ def transmitted_elements_per_step(params: PyTree, cfg: SDMConfig) -> int:
 # ==========================================================================
 
 class ReferenceSimulator:
-    """Single-host n-node simulator for any Topology (paper's experiments)."""
+    """Single-host n-node stacked simulator (the paper's experiments).
 
-    def __init__(self, topo: Topology, cfg: SDMConfig):
-        self.topo = topo
+    Accepts a ``Topology`` / ``DirectedTopology``, a ``PermuteSchedule``,
+    or a time-varying ``ScheduleSequence`` — the reference executor and
+    the distributed executor are built from the SAME schedule object, so
+    their mixing matrices can never diverge.
+
+    Static graphs mix with the exact dense W (``mix_dense``). For a
+    time-varying sequence the weighted neighbour sum ``s`` is tracked
+    INCREMENTALLY with the weights of the round each differential was
+    exchanged in — operationally identical to the distributed executor
+    (which can only ever see weighted increments), and equal to true
+    W(t)-mixing whenever the weights are time-invariant. Full-state
+    methods (DSGD, gradient-push) stay exact on time-varying graphs.
+    """
+
+    def __init__(self, topo, cfg: SDMConfig):
         self.cfg = cfg
-        self.weights = jnp.asarray(topo.weights, jnp.float32)
+        self.seq = gossip.sequence_of(topo)
+        self.topo = None if isinstance(
+            topo, (gossip.PermuteSchedule, gossip.ScheduleSequence)) else topo
+        check_per_node_p(cfg, self.seq.n_nodes)
+        self.time_varying = self.seq.length > 1
+        wstack = self.seq.weights_stack()
+        self._wstack = jnp.asarray(wstack, jnp.float32)   # (L, n, n)
+        self.weights = self._wstack[0]
+
+    @property
+    def n_nodes(self) -> int:
+        return self.seq.n_nodes
+
+    def _weights_at(self, step) -> jax.Array:
+        return self._wstack[step % self.seq.length]
 
     def init(self, params_stack: PyTree) -> SDMState:
         """params_stack leaves have leading dim n (one slice per node)."""
         n = jax.tree.leaves(params_stack)[0].shape[0]
-        assert n == self.topo.n_nodes, (n, self.topo.n_nodes)
+        assert n == self.seq.n_nodes, (n, self.seq.n_nodes)
         e = _tree_zeros_like(params_stack) if self.cfg.error_feedback else None
-        return SDMState(x=params_stack, s=_tree_zeros_like(params_stack),
+        if self.time_varying:
+            # incremental-s bookkeeping starts from the round-0 weights
+            # (the distributed init does the same with (1 - W_ii(0)) x_0).
+            s = jax.tree.map(
+                lambda x: gossip.apply_weights_dense(
+                    self._wstack[0], x, include_self=False).astype(x.dtype),
+                params_stack)
+        else:
+            s = _tree_zeros_like(params_stack)
+        return SDMState(x=params_stack, s=s,
                         d=_tree_zeros_like(params_stack),
                         step=jnp.zeros((), jnp.int32), e=e)
 
@@ -178,7 +290,7 @@ class ReferenceSimulator:
     def advance(self, state: SDMState, key: jax.Array) -> Tuple[SDMState, PyTree]:
         """Returns (state with x <- x + S(d), the S(d) stack)."""
         cfg = self.cfg
-        n = self.topo.n_nodes
+        n = self.seq.n_nodes
 
         if cfg.error_feedback:
             # fold the residual from the previous round into what we send.
@@ -195,6 +307,10 @@ class ReferenceSimulator:
             node_keys = jax.vmap(
                 lambda i: gossip.node_round_key(leaf_key, i, state.step))(jnp.arange(n))
             if cfg.mode == "bernoulli":
+                if isinstance(cfg.p, tuple):
+                    p_vec = jnp.asarray(cfg.p, jnp.float32)
+                    return jax.vmap(sparsifier.bernoulli_sparsify)(
+                        node_keys, d_stack, p_vec)
                 fn = lambda k, v: sparsifier.bernoulli_sparsify(k, v, cfg.p)
             elif cfg.mode == "fixedk_rows":
                 fn = lambda k, v: sparsifier.block_sparsify(
@@ -211,6 +327,16 @@ class ReferenceSimulator:
         x = jax.tree.map(jnp.add, state.x, sd)
         new_e = jax.tree.map(jnp.subtract, d_in, sd) \
             if cfg.error_feedback else state.e
+        if self.time_varying:
+            # fold this round's weighted increments into s — the weights
+            # of the round the increment was EXCHANGED in, exactly what
+            # the distributed executor accumulates.
+            w_t = self._weights_at(state.step)
+            s = jax.tree.map(
+                lambda s_, v: s_ + gossip.apply_weights_dense(
+                    w_t, v, include_self=False).astype(s_.dtype),
+                state.s, sd)
+            return state._replace(x=x, s=s, e=new_e), sd
         return state._replace(x=x, e=new_e), sd
 
     # -- phase 2: local gradient + masking + generalized mixing -----------
@@ -218,7 +344,17 @@ class ReferenceSimulator:
                key: jax.Array) -> SDMState:
         cfg = self.cfg
         g = _masked_grad(grads_stack, key, cfg)
-        mixed = jax.tree.map(lambda x: gossip.mix_dense(self.weights, x), state.x)
+        if self.time_varying:
+            # W~(t) x for node i = W_ii(t) x_i + s_i (s incremental).
+            diag_w = jnp.diagonal(self._weights_at(state.step))
+            mixed = jax.tree.map(
+                lambda x, s: diag_w.reshape(
+                    (self.seq.n_nodes,) + (1,) * (x.ndim - 1)
+                ).astype(x.dtype) * x + s,
+                state.x, state.s)
+        else:
+            mixed = jax.tree.map(
+                lambda x: gossip.mix_dense(self.weights, x), state.x)
         y = jax.tree.map(
             lambda x, m, gr: (1.0 - cfg.theta) * x + cfg.theta * (m - cfg.gamma * gr),
             state.x, mixed, g)
@@ -241,6 +377,14 @@ class ReferenceSimulator:
     def consensus_mean(self, state: SDMState) -> PyTree:
         """xbar_t = (1/n) sum_i x_{i,t} — the quantity Lemma 1 bounds."""
         return jax.tree.map(lambda x: jnp.mean(x, axis=0), state.x)
+
+    # Method-protocol surface (repro.core.method): ``consensus`` is the
+    # per-method consensus estimate, ``eval_params`` the per-node
+    # parameter view evaluation should run on.
+    consensus = consensus_mean
+
+    def eval_params(self, state: SDMState) -> PyTree:
+        return state.x
 
 
 # ==========================================================================
@@ -288,24 +432,27 @@ def _sparse_exchange_leaves(d_tree: PyTree, *, schedule, axis_name,
 
 def distributed_advance(state: SDMState, *, base_key: jax.Array, axis_name,
                         cfg: SDMConfig,
-                        schedule: gossip.PermuteSchedule | None = None,
+                        schedule=None,
                         self_weight: float | None = None,
                         neighbor_weight: float | None = None,
                         node_index=None) -> SDMState:
     """Phase 1 on the mesh: sparsify d, schedule-exchange, update x and s.
 
-    ``schedule`` selects the gossip graph; legacy scalar
-    (self_weight, neighbor_weight) callers get the symmetric ring.
-    ``node_index`` (optional sharded operand) replaces the axis_index
-    collective where partial-auto shard_map cannot lower it.
+    ``schedule`` selects the gossip graph — a PermuteSchedule or a
+    time-varying ScheduleSequence (indexed by the state's step counter);
+    legacy scalar (self_weight, neighbor_weight) callers get the
+    symmetric ring. ``node_index`` (optional sharded operand) replaces
+    the axis_index collective where partial-auto shard_map cannot lower
+    it.
     """
     del neighbor_weight  # ring default is fully described by self_weight
-    schedule = gossip.resolve_schedule(schedule, axis_name, self_weight)
+    seq = gossip.resolve_sequence(schedule, axis_name, self_weight)
+    check_per_node_p(cfg, seq.n_nodes)
     me = gossip._me(axis_name, node_index)
 
     if cfg.mode in ("fixedk_packed", "fixedk_rows"):
         own, nb = _sparse_exchange_leaves(
-            state.d, schedule=schedule, axis_name=axis_name,
+            state.d, schedule=seq, axis_name=axis_name,
             base_key=base_key, step=state.step, cfg=cfg,
             node_index=node_index)
         x = jax.tree.map(jnp.add, state.x, own)
@@ -316,13 +463,15 @@ def distributed_advance(state: SDMState, *, base_key: jax.Array, axis_name,
         leaf_keys = jax.tree.map(
             lambda k: gossip.node_round_key(k, me, state.step),
             _leaf_keys(base_key, state.d))
+        p_me = cfg.p_of(me)
         sd = jax.tree.map(
-            lambda k, d: sparsifier.bernoulli_sparsify(k, d, cfg.p),
+            lambda k, d: sparsifier.bernoulli_sparsify(k, d, p_me),
             leaf_keys, state.d)
         x = jax.tree.map(jnp.add, state.x, sd)
         s = jax.tree.map(
-            lambda s_, v: s_ + gossip.exchange(schedule, v, axis_name,
-                                               node_index=node_index),
+            lambda s_, v: s_ + gossip.exchange(seq, v, axis_name,
+                                               node_index=node_index,
+                                               step=state.step),
             state.s, sd)
     return state._replace(x=x, s=s)
 
@@ -342,7 +491,7 @@ def init_fused_state(params: PyTree, self_weight) -> SDMFusedState:
 
 def distributed_step_fused(state: SDMFusedState, grads: PyTree, *,
                            base_key: jax.Array, axis_name, cfg: SDMConfig,
-                           schedule: gossip.PermuteSchedule | None = None,
+                           schedule=None,
                            self_weight: float | None = None,
                            neighbor_weight: float | None = None,
                            node_index=None) -> SDMFusedState:
@@ -357,9 +506,10 @@ def distributed_step_fused(state: SDMFusedState, grads: PyTree, *,
     state.x BEFORE calling (x is already post-advance).
     """
     del neighbor_weight
-    schedule = gossip.resolve_schedule(schedule, axis_name, self_weight)
+    seq = gossip.resolve_sequence(schedule, axis_name, self_weight)
+    check_per_node_p(cfg, seq.n_nodes)
     me = gossip._me(axis_name, node_index)
-    sw = schedule.self_weight_of(me)
+    sw = seq.self_weight_of(me, state.step)
     noise_key = jax.random.fold_in(
         gossip.node_round_key(base_key, me, state.step), 0x5eed)
     g = _masked_grad(grads, noise_key, cfg)
@@ -371,11 +521,13 @@ def distributed_step_fused(state: SDMFusedState, grads: PyTree, *,
 
     # immediately sparsify + exchange + fold in (the next round's advance).
     # Sparsifier keys use counter step+1: in the unfused flow d_t is
-    # sparsified by the NEXT iteration's advance (bit-equality preserved).
+    # sparsified by the NEXT iteration's advance (bit-equality preserved;
+    # for a time-varying sequence the exchange likewise runs on the
+    # NEXT round's graph).
     sp_step = state.step + 1
     if cfg.mode in ("fixedk_packed", "fixedk_rows"):
         own, nb = _sparse_exchange_leaves(
-            d, schedule=schedule, axis_name=axis_name,
+            d, schedule=seq, axis_name=axis_name,
             base_key=base_key, step=sp_step, cfg=cfg,
             node_index=node_index)
         x = jax.tree.map(jnp.add, state.x, own)
@@ -384,26 +536,28 @@ def distributed_step_fused(state: SDMFusedState, grads: PyTree, *,
         leaf_keys = jax.tree.map(
             lambda k: gossip.node_round_key(k, me, sp_step),
             _leaf_keys(base_key, d))
+        p_me = cfg.p_of(me)
         sd = jax.tree.map(
-            lambda k, dd: sparsifier.bernoulli_sparsify(k, dd, cfg.p),
+            lambda k, dd: sparsifier.bernoulli_sparsify(k, dd, p_me),
             leaf_keys, d)
         x = jax.tree.map(jnp.add, state.x, sd)
         s = jax.tree.map(
-            lambda s_, v: s_ + gossip.exchange(schedule, v, axis_name,
-                                               node_index=node_index),
+            lambda s_, v: s_ + gossip.exchange(seq, v, axis_name,
+                                               node_index=node_index,
+                                               step=sp_step),
             state.s, sd)
     return SDMFusedState(x=x, s=s, step=state.step + 1)
 
 
 def distributed_commit(state: SDMState, grads: PyTree, *, base_key: jax.Array,
                        axis_name, cfg: SDMConfig,
-                       schedule: gossip.PermuteSchedule | None = None,
+                       schedule=None,
                        self_weight: float | None = None,
                        node_index=None) -> SDMState:
     """Phase 2 on the mesh: masked gradient + generalized mixing update."""
-    schedule = gossip.resolve_schedule(schedule, axis_name, self_weight)
+    seq = gossip.resolve_sequence(schedule, axis_name, self_weight)
     me = gossip._me(axis_name, node_index)
-    sw = schedule.self_weight_of(me)
+    sw = seq.self_weight_of(me, state.step)
     noise_key = jax.random.fold_in(
         gossip.node_round_key(base_key, me, state.step), 0x5eed)
     g = _masked_grad(grads, noise_key, cfg)

@@ -54,12 +54,19 @@ def bernoulli_mask(key: jax.Array, shape: Tuple[int, ...], p: float) -> jax.Arra
     return jax.random.bernoulli(key, p=p, shape=shape)
 
 
-def bernoulli_sparsify(key: jax.Array, x: jax.Array, p: float) -> jax.Array:
-    """Paper-faithful S(x): keep each coordinate w.p. p, scale kept by 1/p."""
-    if not 0.0 < p <= 1.0:
-        raise ValueError(f"p must be in (0, 1], got {p}")
-    if p == 1.0:
-        return x
+def bernoulli_sparsify(key: jax.Array, x: jax.Array, p) -> jax.Array:
+    """Paper-faithful S(x): keep each coordinate w.p. p, scale kept by 1/p.
+
+    ``p`` is a python float (static) or a traced scalar — the latter
+    carries a per-node transmit probability (heterogeneous sparsity
+    budgets): the keep-mask is ``uniform < p`` either way, so a node's
+    draws for equal p agree bit-for-bit between the two forms.
+    """
+    if isinstance(p, (int, float)):
+        if not 0.0 < p <= 1.0:
+            raise ValueError(f"p must be in (0, 1], got {p}")
+        if p == 1.0:
+            return x
     mask = bernoulli_mask(key, x.shape, p)
     return jnp.where(mask, x / p, jnp.zeros_like(x))
 

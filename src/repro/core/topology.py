@@ -14,20 +14,25 @@ complete topologies that map directly onto TPU ICI neighbourhoods.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Sequence, Tuple
 
 import numpy as np
 
 __all__ = [
     "Topology",
+    "DirectedTopology",
     "ring",
     "torus_2d",
     "complete",
     "erdos_renyi",
     "star",
+    "directed_ring",
+    "directed_erdos_renyi",
+    "random_matchings",
     "by_name",
     "laplacian_consensus_matrix",
     "metropolis_hastings_weights",
+    "column_stochastic_weights",
     "shift_decomposition",
     "shift_receive_weights",
 ]
@@ -81,6 +86,141 @@ class Topology:
         """The effective mixing matrix W_theta = (1-theta) I + theta W (Eq. 26)."""
         n = self.n_nodes
         return (1.0 - theta) * np.eye(n) + theta * self.weights
+
+
+@dataclasses.dataclass(frozen=True)
+class DirectedTopology:
+    """A directed gossip graph with a COLUMN-stochastic push matrix.
+
+    ``adjacency[i, j] = 1`` means node j pushes to node i; ``weights``
+    is the push-sum matrix P with ``P[i, j]`` the share of j's mass sent
+    to i, so each COLUMN sums to 1 (what a sender distributes sums to
+    one) but rows need not — the asymmetry push-sum de-biasing corrects.
+    Duck-type compatible with ``Topology`` for schedule compilation
+    (``shift_decomposition`` / ``schedule_from_topology``): both read
+    only ``name / n_nodes / adjacency / weights``.
+    """
+
+    name: str
+    n_nodes: int
+    adjacency: np.ndarray  # (n, n) 0/1, zero diagonal; [i, j] = edge j -> i
+    weights: np.ndarray  # (n, n) column-stochastic P
+
+    def __post_init__(self) -> None:
+        w = self.weights
+        if np.any(w < -1e-12):
+            raise ValueError(f"{self.name}: P must be non-negative")
+        if not np.allclose(w.sum(axis=0), 1.0, atol=1e-8):
+            raise ValueError(f"{self.name}: P columns must sum to 1")
+        off_diag = w - np.diag(np.diag(w))
+        support = np.abs(off_diag) > 1e-12
+        if np.any(support & ~self.adjacency.astype(bool)):
+            raise ValueError(f"{self.name}: P uses non-edges")
+
+    @property
+    def degree(self) -> np.ndarray:
+        """Out-degree per node (edges the node pushes along)."""
+        return self.adjacency.sum(axis=0).astype(np.int64)
+
+    def neighbors(self, i: int) -> Sequence[int]:
+        """Out-neighbours of node i (nodes that receive i's pushes)."""
+        return np.nonzero(self.adjacency[:, i])[0].tolist()
+
+
+def column_stochastic_weights(adjacency: np.ndarray) -> np.ndarray:
+    """The standard push-sum matrix: sender j splits its mass uniformly
+    over its out-neighbours and itself, P[i, j] = 1 / (outdeg_j + 1)."""
+    adjacency = np.asarray(adjacency)
+    n = adjacency.shape[0]
+    out_deg = adjacency.sum(axis=0)
+    w = np.zeros((n, n))
+    for j in range(n):
+        share = 1.0 / (out_deg[j] + 1.0)
+        w[np.nonzero(adjacency[:, j])[0], j] = share
+        w[j, j] = share
+    return w
+
+
+def directed_ring(n: int, self_weight: float | None = None) -> DirectedTopology:
+    """One-directional ring: node i pushes only to i+1 (mod n).
+
+    The canonical asymmetric graph — its P is NOT doubly stochastic, so
+    plain mixing is biased and push-sum correction is required.
+    """
+    if n < 2:
+        raise ValueError("directed ring needs n >= 2")
+    adj = np.zeros((n, n), dtype=np.int64)
+    for i in range(n):
+        adj[(i + 1) % n, i] = 1
+    if self_weight is None:
+        w = column_stochastic_weights(adj)
+    else:
+        w = np.eye(n) * self_weight
+        for i in range(n):
+            w[(i + 1) % n, i] = 1.0 - self_weight
+    return DirectedTopology(name=f"dring{n}", n_nodes=n, adjacency=adj,
+                            weights=w)
+
+
+def directed_erdos_renyi(n: int, p_connect: float = 0.35,
+                         seed: int = 0) -> DirectedTopology:
+    """Directed ER graph, strongly connected by construction.
+
+    Each ordered pair (j -> i), i != j, is an edge w.p. ``p_connect``; a
+    directed ring is overlaid so the graph is always strongly connected
+    (push-sum needs B-strong-connectivity). Weights are the uniform
+    column-stochastic split.
+    """
+    rng = np.random.default_rng(seed)
+    adj = (rng.random((n, n)) < p_connect).astype(np.int64)
+    np.fill_diagonal(adj, 0)
+    for i in range(n):          # strong-connectivity backbone
+        adj[(i + 1) % n, i] = 1
+    return DirectedTopology(name=f"der{n}_pc{p_connect}_s{seed}", n_nodes=n,
+                            adjacency=adj,
+                            weights=column_stochastic_weights(adj))
+
+
+def random_matchings(n: int, rounds: int, seed: int = 0,
+                     self_weight: float = 0.5,
+                     ensure_connected: bool = True) -> list[Topology]:
+    """A B-connected time-varying sequence: one random matching per round.
+
+    Each round pairs up a random shuffle of the nodes; a matched pair
+    (a, b) mixes with W_aa = W_bb = ``self_weight`` and
+    W_ab = W_ba = 1 - self_weight; unmatched nodes (odd n) keep W_ii = 1.
+    Every round is symmetric doubly stochastic. With
+    ``ensure_connected`` (and >= 2 rounds) the sequence is resampled
+    until the UNION graph over one cycle is connected — the
+    B-connectivity assumption time-varying consensus needs.
+    """
+    if n < 2:
+        raise ValueError("matchings need n >= 2")
+
+    def sample(rng) -> Tuple[list[Topology], np.ndarray]:
+        out, union = [], np.zeros((n, n), dtype=np.int64)
+        for r in range(rounds):
+            order = rng.permutation(n)
+            adj = np.zeros((n, n), dtype=np.int64)
+            w = np.eye(n)
+            for k in range(0, n - 1, 2):
+                a, b = int(order[k]), int(order[k + 1])
+                adj[a, b] = adj[b, a] = 1
+                w[a, a] = w[b, b] = self_weight
+                w[a, b] = w[b, a] = 1.0 - self_weight
+            union |= adj
+            out.append(Topology(name=f"matching{n}_r{r}", n_nodes=n,
+                                adjacency=adj, weights=w))
+        return out, union
+
+    check = ensure_connected and rounds >= 2 and n > 2
+    for attempt in range(1000):
+        out, union = sample(np.random.default_rng(seed + attempt))
+        if not check or _is_connected(union):
+            return out
+    raise RuntimeError(
+        f"no connected union of {rounds} matchings on {n} nodes "
+        f"within 1000 reseeds")
 
 
 def laplacian_consensus_matrix(adjacency: np.ndarray) -> np.ndarray:
@@ -228,13 +368,24 @@ def shift_receive_weights(topo: "Topology", shift: int) -> np.ndarray:
 
 
 def by_name(spec: str, n_nodes: int, *, self_weight: float | None = None,
-            seed: int = 0) -> Topology:
+            seed: int = 0) -> "Topology | DirectedTopology":
     """Parse a CLI topology spec into a Topology on ``n_nodes`` nodes.
 
     Accepted forms: ``ring``, ``torus`` (auto-factored near-square),
-    ``torusRxC``, ``er`` / ``er:<p_connect>``, ``star``, ``complete``.
+    ``torusRxC``, ``er`` / ``er:<p_connect>``, ``star``, ``complete``,
+    and the directed (column-stochastic, push-sum) graphs ``dring`` and
+    ``der`` / ``der:<p_connect>``. On a single node every spec collapses
+    to the degenerate ``complete(1)`` (W = [[1]], no gossip rounds) so
+    1-device smoke meshes work for every method.
     """
     spec = spec.strip().lower()
+    if n_nodes == 1:
+        return complete(1)
+    if spec == "dring":
+        return directed_ring(n_nodes, self_weight)
+    if spec.startswith("der"):
+        p_connect = float(spec.split(":", 1)[1]) if ":" in spec else 0.35
+        return directed_erdos_renyi(n_nodes, p_connect, seed=seed)
     if spec == "ring":
         return ring(n_nodes, self_weight)
     if spec.startswith("torus"):

@@ -46,19 +46,23 @@ def _probe_cfg(cfg, k: int):
     return dataclasses.replace(cfg, **kw)
 
 
-def build_case(arch: str, shape_name: str, mesh_name: str, algorithm: str,
+def build_case(arch: str, shape_name: str, mesh_name: str, method: str,
                gossip_mode: str, out_root: str, verbose: bool = True,
                probes: bool = True, sdm_overrides: dict | None = None,
                cfg_overrides: dict | None = None,
-               rule_overrides: dict | None = None) -> dict:
+               rule_overrides: dict | None = None, smoke: bool = False,
+               topology: str = "ring") -> dict:
     import jax
 
     from repro import configs
+    from repro.core import method as method_mod
     from repro.launch import shapes as shapes_mod
     from repro.launch.mesh import make_mesh_by_name, node_axis_names
 
+    method = method_mod.normalize(method)
+    method_mod.get(method)   # unknown registrations fail before compiling
     case = shapes_mod.SHAPES[shape_name]
-    cfg = configs.get_config(arch)
+    cfg = configs.get_smoke_config(arch) if smoke else configs.get_config(arch)
     if cfg_overrides:
         cfg = dataclasses.replace(cfg, **cfg_overrides)
     skip = shapes_mod.skip_reason(cfg, case)
@@ -73,19 +77,19 @@ def build_case(arch: str, shape_name: str, mesh_name: str, algorithm: str,
         n_nodes *= mesh.shape[a]
 
     record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
-              "algorithm": algorithm if case.kind == "train" else "serve",
+              "algorithm": method if case.kind == "train" else "serve",
               "n_devices": mesh.size, "status": "ok",
               "n_periods": cfg.n_periods}
-    record.update(_measure(cfg, case, mesh, node_axes, algorithm,
+    record.update(_measure(cfg, case, mesh, node_axes, method,
                            gossip_mode, shape_name, sdm_overrides,
-                           rule_overrides=rule_overrides))
+                           rule_overrides=rule_overrides, topology=topology))
     if probes:
-        p1 = _measure(_probe_cfg(cfg, 1), case, mesh, node_axes, algorithm,
+        p1 = _measure(_probe_cfg(cfg, 1), case, mesh, node_axes, method,
                       gossip_mode, shape_name, sdm_overrides, cost_only=True,
-                      rule_overrides=rule_overrides)
-        p2 = _measure(_probe_cfg(cfg, 2), case, mesh, node_axes, algorithm,
+                      rule_overrides=rule_overrides, topology=topology)
+        p2 = _measure(_probe_cfg(cfg, 2), case, mesh, node_axes, method,
                       gossip_mode, shape_name, sdm_overrides, cost_only=True,
-                      rule_overrides=rule_overrides)
+                      rule_overrides=rule_overrides, topology=topology)
         record["probe1"] = p1
         record["probe2"] = p2
     record["model_params"] = cfg.param_count()
@@ -111,10 +115,11 @@ def build_case(arch: str, shape_name: str, mesh_name: str, algorithm: str,
     return record
 
 
-def _measure(cfg, case, mesh, node_axes, algorithm: str, gossip_mode: str,
+def _measure(cfg, case, mesh, node_axes, method: str, gossip_mode: str,
              shape_name: str, sdm_overrides: dict | None = None,
              cost_only: bool = False,
-             rule_overrides: dict | None = None) -> dict:
+             rule_overrides: dict | None = None,
+             topology: str = "ring") -> dict:
     import jax
     import jax.numpy as jnp
 
@@ -133,7 +138,8 @@ def _measure(cfg, case, mesh, node_axes, algorithm: str, gossip_mode: str,
                       clip_c=5.0, mode=gossip_mode, pack_block=1024)
         sdm_kw.update(sdm_overrides or {})
         tc = steps_mod.DistributedTrainConfig(
-            model=cfg, sdm=SDMConfig(**sdm_kw), algorithm=algorithm)
+            model=cfg, sdm=SDMConfig(**sdm_kw), method=method,
+            topology=topology)
         step = steps_mod.make_distributed_train(tc, mesh)
         state_sds = steps_mod.state_shape_dtype(tc, mesh)
         state_shards = steps_mod.state_shardings(tc, mesh)
@@ -216,10 +222,18 @@ def main() -> int:
     ap.add_argument("--arch", default="all")
     ap.add_argument("--shape", default="all")
     ap.add_argument("--mesh", default="single_pod,multi_pod")
-    ap.add_argument("--algorithm", default="sdm_dsgd",
-                    choices=["sdm_dsgd", "sdm_dsgd_fused", "dsgd", "allreduce"])
+    ap.add_argument("--method", default=None,
+                    help="method registry name (repro.core.method); "
+                         "legacy --algorithm spellings accepted")
+    ap.add_argument("--algorithm", default=None,
+                    help="deprecated alias of --method")
     ap.add_argument("--gossip-mode", default="fixedk_packed",
                     choices=["bernoulli", "fixedk_packed", "fixedk_rows"])
+    ap.add_argument("--topology", default="ring",
+                    help="gossip graph spec (gossip.sequence_by_name)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke configs (CI registration "
+                         "smoke: compiles in seconds)")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--keep-going", action="store_true")
     ap.add_argument("--no-probes", action="store_true",
@@ -229,6 +243,7 @@ def main() -> int:
     from repro import configs
     from repro.launch import shapes as shapes_mod
 
+    method = args.method or args.algorithm or "sdm-dsgd"
     arches = sorted(configs.ALIASES) if args.arch == "all" \
         else args.arch.split(",")
     shape_names = list(shapes_mod.SHAPES) if args.shape == "all" \
@@ -240,9 +255,10 @@ def main() -> int:
         for arch in arches:
             for shape_name in shape_names:
                 try:
-                    build_case(arch, shape_name, mesh_name, args.algorithm,
+                    build_case(arch, shape_name, mesh_name, method,
                                args.gossip_mode, args.out,
-                               probes=not args.no_probes)
+                               probes=not args.no_probes,
+                               smoke=args.smoke, topology=args.topology)
                 except Exception:
                     failures.append((arch, shape_name, mesh_name))
                     traceback.print_exc()

@@ -26,8 +26,12 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=10)
     ap.add_argument("--global-batch", type=int, default=None)
     ap.add_argument("--seq-len", type=int, default=None)
-    ap.add_argument("--algorithm", default="sdm_dsgd",
-                    choices=["sdm_dsgd", "dsgd", "allreduce"])
+    ap.add_argument("--method", default=None,
+                    help="method registry name (repro.core.method): "
+                         "sdm-dsgd | sdm-dsgd-fused | dc-dsgd | dsgd | "
+                         "gradient-push | allreduce")
+    ap.add_argument("--algorithm", default=None,
+                    help="deprecated alias of --method")
     ap.add_argument("--p", type=float, default=0.2)
     ap.add_argument("--theta", type=float, default=0.5)
     ap.add_argument("--gamma", type=float, default=1e-2)
@@ -37,25 +41,30 @@ def main() -> None:
                     choices=["bernoulli", "fixedk_packed", "fixedk_rows"])
     ap.add_argument("--topology", default="ring",
                     help="gossip graph over the node axis: ring | torus | "
-                         "torusRxC | er | er:<p_c> | star | complete "
+                         "torusRxC | er | er:<p_c> | star | complete | "
+                         "dring | der:<p_c> (directed, for gradient-push) | "
+                         "matchings:<L> (time-varying random matchings) "
                          "(paper §5 uses er:0.35)")
     ap.add_argument("--topology-seed", type=int, default=0,
-                    help="ER graph sampling seed")
+                    help="ER graph / matching sampling seed")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     import jax
     import jax.numpy as jnp
-    import numpy as np
 
     from repro import configs
     from repro.checkpoint import save_checkpoint
+    from repro.core import method as method_mod
     from repro.core.sdm_dsgd import SDMConfig
     from repro.data import TokenStream
     from repro.launch.mesh import make_mesh_by_name, node_axis_names
     from repro.train import steps as steps_mod
 
+    meth_name = method_mod.normalize(
+        args.method or args.algorithm or "sdm-dsgd")
+    method_mod.get(meth_name)   # fail fast on unknown registrations
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
            else configs.get_config(args.arch))
     mesh = make_mesh_by_name(args.mesh)
@@ -74,13 +83,14 @@ def main() -> None:
                       mode=args.gossip_mode),
         topology=args.topology,
         topology_seed=args.topology_seed,
-        algorithm=args.algorithm,
+        method=meth_name,
         param_dtype=jnp.float32 if args.smoke else jnp.bfloat16)
-    schedule = steps_mod.gossip_schedule(tc, mesh)
+    sched = steps_mod.gossip_schedule(tc, mesh)
 
     print(f"arch={cfg.name} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
-          f"nodes={n_nodes} algo={args.algorithm} p={args.p} theta={args.theta} "
-          f"topology={schedule.name} gossip_rounds={schedule.n_rounds}")
+          f"nodes={n_nodes} method={meth_name} p={args.p} theta={args.theta} "
+          f"topology={sched.name} gossip_rounds={sched.n_rounds}"
+          + (f" time_varying_L={sched.length}" if sched.length > 1 else ""))
 
     state = steps_mod.init_distributed_state(tc, mesh,
                                              jax.random.PRNGKey(args.seed))

@@ -10,9 +10,12 @@
   * per-node gradient -> coordinate clip -> Gaussian mask -> generalized
     theta-mixing -> sparse differential exchange, exactly Algorithm 1.
 
-Baseline variants (plain DSGD all-state gossip, and conventional
-all-reduce data parallelism) share the same factory so the roofline
-benchmarks compare like-for-like.
+The per-node algorithm is METHOD-GENERIC: ``DistributedTrainConfig.method``
+names a ``repro.core.method`` registry entry (sdm-dsgd, sdm-dsgd-fused,
+dc-dsgd, dsgd, gradient-push, allreduce, ...), and this factory runs its
+shard_map distributed executor — all methods share the same factory so
+the roofline benchmarks compare like-for-like, and adding a method means
+registering it, not editing this file.
 """
 from __future__ import annotations
 
@@ -24,12 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-import numpy as np
-
 from repro import compat
-from repro.core import baselines as baselines_mod
-from repro.core import gossip, sdm_dsgd
-from repro.core import topology as topology_mod
+from repro.core import gossip, method as method_mod
 from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.sharding import MeshRules, use_rules
@@ -72,13 +71,26 @@ def serving_rules(node_axes: Tuple[str, ...], *, shard_cache_seq: bool,
 
 @dataclasses.dataclass(frozen=True)
 class DistributedTrainConfig:
+    """Production train-step configuration.
+
+    ``method`` names a ``repro.core.method`` registry entry (legacy
+    underscore spellings like "sdm_dsgd" normalize transparently).
+    ``sdm`` is the hyper-parameter bag; each method coerces it to its
+    own config dataclass (e.g. DSGD keeps only gamma/sigma/clip_c).
+    """
+
     model: ModelConfig
-    sdm: sdm_dsgd.SDMConfig
-    topology: str = "ring"              # spec for topology.by_name
-    topology_seed: int = 0              # ER graph sampling seed
+    sdm: Any
+    topology: str = "ring"              # spec for gossip.sequence_by_name
+    topology_seed: int = 0              # ER graph / matching sampling seed
     self_weight: float = 1.0 / 3.0      # ring W_ii; neighbours get (1-W_ii)/2
-    algorithm: str = "sdm_dsgd"         # sdm_dsgd | dsgd | allreduce
+    method: str = "sdm-dsgd"            # method registry name
     param_dtype: Any = jnp.bfloat16
+
+    def resolved(self):
+        """(Method, method-native config) for this run."""
+        meth = method_mod.get(self.method)
+        return meth, meth.coerce_config(self.sdm)
 
 
 def _node_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -94,45 +106,42 @@ def _n_nodes(mesh: Mesh) -> int:
 
 @functools.lru_cache(maxsize=None)
 def _compiled_schedule(spec: str, seed: int, self_weight: float,
-                       n_nodes: int) -> gossip.PermuteSchedule:
-    topo = topology_mod.by_name(
+                       n_nodes: int) -> gossip.ScheduleSequence:
+    return gossip.sequence_by_name(
         spec, n_nodes,
         self_weight=self_weight if spec == "ring" else None, seed=seed)
-    return gossip.schedule_from_topology(topo)
 
 
 def gossip_schedule(tc: DistributedTrainConfig, mesh: Mesh
-                    ) -> gossip.PermuteSchedule:
+                    ) -> gossip.ScheduleSequence:
     """Compile the configured gossip graph for this mesh's node count.
 
     Memoized: the launcher banner, init_distributed_state, and
     make_distributed_train all resolve to the SAME schedule object, so
     ER resampling + the Laplacian eigendecomposition run once and the
     s_0 self-weights can never desynchronize from the train step's.
+    Time-varying specs ("matchings:<L>") give a length-L sequence.
     """
     return _compiled_schedule(tc.topology, tc.topology_seed,
                               tc.self_weight, _n_nodes(mesh))
 
 
 def state_shape_dtype(tc: DistributedTrainConfig, mesh: Mesh):
-    """ShapeDtypeStructs of the distributed SDMState (for dry-run lowering)."""
+    """ShapeDtypeStructs of the stacked method state (dry-run lowering)."""
     n_nodes = _n_nodes(mesh)
+    meth, _ = tc.resolved()
     shapes = transformer.param_shapes(tc.model)
     mk = lambda s: jax.ShapeDtypeStruct((n_nodes,) + tuple(s), tc.param_dtype)
     x = jax.tree.map(mk, shapes,
                      is_leaf=lambda v: isinstance(v, tuple) and
                      all(isinstance(e, int) for e in v))
-    if tc.algorithm in ("dsgd", "allreduce"):
-        return x
-    zero = jax.ShapeDtypeStruct((n_nodes,), jnp.int32)
-    if tc.algorithm == "sdm_dsgd_fused":
-        return sdm_dsgd.SDMFusedState(x=x, s=x, step=zero)
-    return sdm_dsgd.SDMState(x=x, s=x, d=x, step=zero)
+    return method_mod.state_shape_dtype(meth, x)
 
 
 def state_shardings(tc: DistributedTrainConfig, mesh: Mesh):
     """NamedShardings for the stacked distributed state."""
     node_axes = _node_axes(mesh)
+    meth, _ = tc.resolved()
     rules = MeshRules(mesh, outer_rules(node_axes))
     axes = transformer.param_axes(tc.model)
     shapes = transformer.param_shapes(tc.model)
@@ -143,41 +152,25 @@ def state_shardings(tc: DistributedTrainConfig, mesh: Mesh):
         return rules.sharding(("batch",) + a, (0,) + tuple(s))
 
     x = jax.tree.map(leaf_sharding, axes, shapes, is_leaf=is_axes)
-    if tc.algorithm in ("dsgd", "allreduce"):
-        return x
-    step = NamedSharding(mesh, P(node_axes if len(node_axes) > 1
-                                 else node_axes[0]))
-    if tc.algorithm == "sdm_dsgd_fused":
-        return sdm_dsgd.SDMFusedState(x=x, s=x, step=step)
-    return sdm_dsgd.SDMState(x=x, s=x, d=x, step=step)
+    node_vec = NamedSharding(mesh, P(node_axes if len(node_axes) > 1
+                                     else node_axes[0]))
+    return method_mod.state_shardings(meth, x, node_vec)
 
 
 def init_distributed_state(tc: DistributedTrainConfig, mesh: Mesh,
                            key: jax.Array):
     """Materialize the stacked state (same init on every node).
 
-    s_0[i] = (1 - W_ii) x_0 with the node's OWN self-weight — W_ii varies
-    per node on Metropolis–Hastings graphs (torus/star).
+    Method-generic: e.g. SDM's s_0[i] = (1 - W_ii(0)) x_0 with the
+    node's OWN self-weight (W_ii varies per node on Metropolis–Hastings
+    graphs), gradient-push's mass w_0 = 1.
     """
     n_nodes = _n_nodes(mesh)
+    meth, cfg = tc.resolved()
     params = transformer.init_params(key, tc.model, tc.param_dtype)
     stack = jax.tree.map(
         lambda p: jnp.broadcast_to(p[None], (n_nodes,) + p.shape), params)
-    if tc.algorithm in ("dsgd", "allreduce"):
-        return stack
-    sw = np.asarray(gossip_schedule(tc, mesh).self_weights, np.float32)
-
-    def s0_leaf(x):
-        w = (1.0 - sw).reshape((n_nodes,) + (1,) * (x.ndim - 1))
-        return (w * x).astype(x.dtype)
-
-    s0 = jax.tree.map(s0_leaf, stack)
-    if tc.algorithm == "sdm_dsgd_fused":
-        return sdm_dsgd.SDMFusedState(x=stack, s=s0,
-                                      step=jnp.zeros((n_nodes,), jnp.int32))
-    zeros = jax.tree.map(jnp.zeros_like, stack)
-    return sdm_dsgd.SDMState(x=stack, s=s0, d=zeros,
-                             step=jnp.zeros((n_nodes,), jnp.int32))
+    return meth.init_stacked(stack, gossip_schedule(tc, mesh), cfg)
 
 
 def make_distributed_train(tc: DistributedTrainConfig, mesh: Mesh,
@@ -196,7 +189,8 @@ def make_distributed_train(tc: DistributedTrainConfig, mesh: Mesh,
     manual_axes = set(mesh.axis_names) if full_manual else set(node_axes)
     axis = node_axes if len(node_axes) > 1 else node_axes[0]
     inner = None if full_manual else MeshRules(mesh, INNER_RULES)
-    schedule = gossip_schedule(tc, mesh)
+    meth, mcfg = tc.resolved()
+    executor = meth.make_distributed(gossip_schedule(tc, mesh), mcfg, axis)
     if base_key is None:
         base_key = jax.random.PRNGKey(0)
 
@@ -221,46 +215,11 @@ def make_distributed_train(tc: DistributedTrainConfig, mesh: Mesh,
         me = jnp.squeeze(node_ids, 0)
 
         with use_rules(inner):
-            if tc.algorithm == "sdm_dsgd":
-                state = squeeze(state)
-                state = sdm_dsgd.distributed_advance(
-                    state, base_key=base_key, axis_name=axis, cfg=tc.sdm,
-                    schedule=schedule, node_index=me)
-                grads, loss = local_grads(state.x, tokens, labels, context)
-                state = sdm_dsgd.distributed_commit(
-                    state, grads, base_key=base_key, axis_name=axis,
-                    cfg=tc.sdm, schedule=schedule, node_index=me)
-            elif tc.algorithm == "sdm_dsgd_fused":
-                # beyond-paper memory layout: 2 state buffers instead of 3
-                state = squeeze(state)
-                grads, loss = local_grads(state.x, tokens, labels, context)
-                state = sdm_dsgd.distributed_step_fused(
-                    state, grads, base_key=base_key, axis_name=axis,
-                    cfg=tc.sdm, schedule=schedule, node_index=me)
-            elif tc.algorithm == "dsgd":
-                params = squeeze(state)
-                grads, loss = local_grads(params, tokens, labels, context)
-                dstate = baselines_mod.DSGDState(
-                    x=params, step=jnp.zeros((), jnp.int32))
-                dstate = baselines_mod.dsgd_distributed_step(
-                    dstate, grads,
-                    base_key=base_key, axis_name=axis,
-                    cfg=baselines_mod.DSGDConfig(
-                        gamma=tc.sdm.gamma, sigma=tc.sdm.sigma,
-                        clip_c=tc.sdm.clip_c),
-                    schedule=schedule, node_index=me)
-                state = dstate.x
-            elif tc.algorithm == "allreduce":
-                # conventional data parallelism: the non-gossip upper bound
-                params = squeeze(state)
-                grads, loss = local_grads(params, tokens, labels, context)
-                grads = jax.tree.map(
-                    lambda g: jax.lax.pmean(g, axis), grads)
-                state = jax.tree.map(
-                    lambda p, g: p - tc.sdm.gamma * g.astype(p.dtype),
-                    params, grads)
-            else:
-                raise ValueError(tc.algorithm)
+            state = squeeze(state)
+            state, loss = executor.step(
+                state,
+                lambda p: local_grads(p, tokens, labels, context),
+                base_key=base_key, node_index=me)
 
         loss = jax.lax.pmean(loss, axis)
         unsqueeze = lambda t: jax.tree.map(lambda v: v[None], t)

@@ -1,9 +1,12 @@
 """Single-host trainer for the paper's experiments (CPU-scale models).
 
-Drives ReferenceSimulator / DSGDReference over node-partitioned batches,
-tracks the paper's two metrics — communicated non-zero elements (Fig. 3's
-x-axis) and the (eps, delta) privacy spend (Table 1) — and handles eval +
-checkpointing. Used by the examples and the paper-figure benchmarks.
+Drives any registered method's stacked reference executor
+(``repro.core.method``) over node-partitioned batches, tracks the
+paper's two metrics — communicated non-zero elements (Fig. 3's x-axis,
+method-aware: full state for DSGD/gradient-push, the sparse fraction
+for SDM-DSGD, heterogeneous per-node budgets supported) and the
+(eps, delta) privacy spend (Table 1) — and handles eval + checkpointing.
+Used by the examples and the paper-figure benchmarks.
 """
 from __future__ import annotations
 
@@ -12,15 +15,10 @@ import time
 from typing import Any, Callable, Dict, Iterator, List, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import save_checkpoint
-from repro.core import (DSGDConfig, DSGDReference, PrivacyAccountant,
-                        PrivacyParams, ReferenceSimulator, SDMConfig,
-                        sdm_dsgd)
-from repro.core import topology as topology_mod
-from repro.core.topology import Topology
+from repro.core import PrivacyAccountant, PrivacyParams, method as method_mod
+from repro.core import gossip
 
 PyTree = Any
 
@@ -36,9 +34,9 @@ class TrainResult:
 
 def run_decentralized(
     *,
-    topo: Topology | str,            # Topology, or a topology.by_name spec
-    algorithm: str,                  # 'sdm_dsgd' | 'dc_dsgd' | 'dsgd'
-    sdm_cfg: SDMConfig,
+    topo,                            # Topology | ScheduleSequence | spec str
+    algorithm: str,                  # method registry name ('sdm_dsgd', ...)
+    sdm_cfg: Any,                    # hyper-params; coerced per method
     params_stack: PyTree,
     grad_fn: Callable,               # (params_stack, batch) -> (grads, loss)
     batches: Iterator,
@@ -52,27 +50,26 @@ def run_decentralized(
     checkpoint_every: int = 0,
     log_every: int = 0,
 ) -> TrainResult:
-    """Generic decentralized training loop over a stacked-node simulator.
+    """Generic decentralized training loop over a stacked-node executor.
 
-    ``topo`` may be a spec string ("ring", "er:0.35", "torus", "star",
-    "complete"); the node count is then read off the params stack.
+    ``algorithm`` is any ``repro.core.method`` registry name (legacy
+    underscore spellings normalize). ``topo`` may be a Topology /
+    DirectedTopology, a ScheduleSequence, or a spec string ("ring",
+    "er:0.35", "dring", "matchings:4", ...); the node count is then read
+    off the params stack.
     """
     t0 = time.time()
+    n_nodes = jax.tree.leaves(params_stack)[0].shape[0]
     if isinstance(topo, str):
-        n_nodes = jax.tree.leaves(params_stack)[0].shape[0]
-        topo = topology_mod.by_name(topo, n_nodes, seed=seed)
-    if algorithm == "dsgd":
-        sim = DSGDReference(topo, DSGDConfig(gamma=sdm_cfg.gamma,
-                                             sigma=sdm_cfg.sigma,
-                                             clip_c=sdm_cfg.clip_c))
-        per_step_elems = sum(int(x.size) for x in
-                             jax.tree.leaves(params_stack)) // topo.n_nodes
+        seq = gossip.sequence_by_name(topo, n_nodes, seed=seed)
     else:
-        # dc_dsgd is SDM with theta=1 — caller encodes it in sdm_cfg.
-        sim = ReferenceSimulator(topo, sdm_cfg)
-        per_node = jax.tree.map(lambda x: x[0], params_stack)
-        per_step_elems = sdm_dsgd.transmitted_elements_per_step(
-            per_node, sdm_cfg)
+        seq = gossip.sequence_of(topo)
+
+    meth = method_mod.get(algorithm)
+    cfg = meth.coerce_config(sdm_cfg)
+    sim = meth.make_reference(seq, cfg)
+    per_node = jax.tree.map(lambda x: x[0], params_stack)
+    per_step_elems = meth.transmitted_elements(per_node, cfg)
 
     state = sim.init(params_stack)
     key = jax.random.PRNGKey(seed)
@@ -89,13 +86,13 @@ def run_decentralized(
         batch = next(batches)
         state, loss = step_fn(state, batch, sub)
         losses.append(float(loss))
-        total_elems += per_step_elems * topo.n_nodes
+        total_elems += per_step_elems * n_nodes
         comm.append(total_elems)
         if accountant is not None:
             accountant.step()
             epss.append(accountant.epsilon)
         if eval_fn is not None and (t + 1) % eval_every == 0:
-            accs.append(float(eval_fn(state.x)))
+            accs.append(float(eval_fn(sim.eval_params(state))))
         if checkpoint_dir and checkpoint_every and \
                 (t + 1) % checkpoint_every == 0:
             save_checkpoint(checkpoint_dir, t + 1, state)

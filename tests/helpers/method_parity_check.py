@@ -1,0 +1,209 @@
+"""Subprocess helper: reference executor == shard_map distributed executor
+for every registered method, on any topology (static / directed /
+time-varying), dense and packed payloads — the table-driven sweep behind
+tests/test_distributed.py.
+
+Run with 8 fake host devices; prints per-case lines
+
+    CASE <id> MAXERR <f> SCALE <f> HAS_CPERM <b> [WIRE_ELEMS <i>
+         EXPECTED_WIRE_ELEMS <i> SORT_COUNT <i> MAX_SORTS <i>]
+
+that the test asserts on. Must set XLA_FLAGS before jax import.
+
+Usage: method_parity_check.py GROUP     (GROUP in CASES)
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import re  # noqa: E402
+import sys  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro import compat  # noqa: E402
+from repro.core import (baselines, gossip, gradient_push, method as  # noqa: E402
+                        method_mod, sdm_dsgd, sparsifier, topology)  # noqa: E402
+
+DIM = 96
+STEPS = 12
+BASE_KEY = jax.random.PRNGKey(42)
+
+# (method, topology spec, gossip mode) — mode "-" for full-state methods.
+# "sdm-dsgd:het" marks the heterogeneous per-node-p variant.
+CASES = {
+    "sdm_core": [
+        ("sdm-dsgd", "ring8", "bernoulli"),
+        ("sdm-dsgd", "ring8", "fixedk_packed"),
+        ("sdm-dsgd", "ring8", "fixedk_rows"),
+        ("sdm-dsgd", "torus2x2", "bernoulli"),
+        ("sdm-dsgd", "torus2x2", "fixedk_packed"),
+        ("sdm-dsgd", "er8", "fixedk_packed"),
+        ("sdm-dsgd", "star4", "bernoulli"),
+    ],
+    "sdm_variants": [
+        ("sdm-dsgd-fused", "ring8", "fixedk_rows"),
+        ("sdm-dsgd-fused", "torus2x2", "fixedk_packed"),
+        ("dc-dsgd", "torus2x2", "bernoulli"),
+        ("dc-dsgd", "ring8", "fixedk_packed"),
+        ("sdm-dsgd", "matchings8x3", "bernoulli"),
+        ("sdm-dsgd", "matchings8x3", "fixedk_packed"),
+        ("sdm-dsgd:het", "ring8", "bernoulli"),
+    ],
+    "baselines": [
+        ("dsgd", "ring8", "-"),
+        ("dsgd", "er8", "-"),
+        ("dsgd", "matchings8x3", "-"),
+        ("gradient-push", "dring8", "-"),
+        ("gradient-push", "der8", "-"),
+        ("allreduce", "ring8", "-"),
+        ("allreduce", "er8", "-"),
+    ],
+}
+
+
+def parse_seq(spec: str) -> gossip.ScheduleSequence:
+    m = re.fullmatch(r"matchings(\d+)x(\d+)", spec)
+    if m:
+        n, rounds = int(m.group(1)), int(m.group(2))
+        return gossip.sequence_from_topologies(
+            topology.random_matchings(n, rounds, seed=0),
+            name=spec)
+    m = re.fullmatch(r"([a-z]+)(\d+(?:x\d+)?)", spec)
+    family, size = m.group(1), m.group(2)
+    if family == "torus":
+        rows, cols = (int(v) for v in size.split("x"))
+        topo = topology.torus_2d(rows, cols)
+    else:
+        topo = topology.by_name(family, int(size))
+    return gossip.ensure_sequence(gossip.schedule_from_topology(topo))
+
+
+def make_cfg(meth_key: str, meth, mode: str, n: int):
+    if meth.config_cls is sdm_dsgd.SDMConfig:
+        p = tuple(0.15 + 0.05 * (i % 4) for i in range(n)) \
+            if meth_key.endswith(":het") else 0.25
+        return meth.coerce_config(sdm_dsgd.SDMConfig(
+            p=p, theta=0.15, gamma=0.2, sigma=0.0, clip_c=1.0, mode=mode))
+    if meth.config_cls is gradient_push.GradientPushConfig:
+        return gradient_push.GradientPushConfig(gamma=0.2)
+    return baselines.DSGDConfig(gamma=0.2)
+
+
+def debias(meth_name: str, x_tree, state):
+    if meth_name == "gradient-push":
+        return gradient_push._debias(x_tree, state.w)
+    return x_tree
+
+
+def run_case(meth_key: str, topo_spec: str, mode: str) -> None:
+    case_id = f"{meth_key}/{topo_spec}/{mode}"
+    meth_name = meth_key.split(":")[0]
+    meth = method_mod.get(meth_name)
+    seq = parse_seq(topo_spec)
+    n = seq.n_nodes
+    cfg = make_cfg(meth_key, meth, mode, n)
+
+    rng = np.random.default_rng(0)
+    a_stack = jnp.asarray(rng.normal(size=(n, 16, DIM)) / 4.0, jnp.float32)
+    b_stack = jnp.asarray(rng.normal(size=(n, 16)), jnp.float32)
+    params0 = jnp.asarray(rng.normal(size=(DIM,)) * 0.1, jnp.float32)
+    params_stack = {"w": jnp.broadcast_to(params0, (n, DIM))}
+
+    def node_grad(w, a, b):
+        r = a @ w - b
+        return {"w": a.T @ r / a.shape[0]}
+
+    def grad_fn_stacked(params, batch):
+        del batch
+        g = jax.vmap(lambda w, a, b: node_grad(w, a, b)["w"])(
+            params["w"], a_stack, b_stack)
+        return {"w": g}, jnp.float32(0.0)
+
+    # ---------------- reference executor -----------------------------
+    sim = meth.make_reference(seq, cfg)
+    state = sim.init(params_stack)
+    sdm_like = hasattr(sim, "advance")
+    for _ in range(STEPS):
+        if sdm_like:
+            # drive the two phases directly with the shared BASE_KEY so
+            # sparsifier seeds match the distributed executor bit-for-bit
+            state, _ = sim.advance(state, BASE_KEY)
+            grads, _ = grad_fn_stacked(state.x, None)
+            state = sim.commit(state, grads, BASE_KEY)
+        else:
+            state, _ = sim.step(state, grad_fn_stacked, None, BASE_KEY)
+    if meth_name == "sdm-dsgd-fused":
+        # the fused distributed state already folded in the NEXT advance
+        state, _ = sim.advance(state, BASE_KEY)
+    ref_x = np.asarray(debias(meth_name, state.x, state)["w"])
+
+    # ---------------- distributed executor ---------------------------
+    mesh = compat.make_mesh((n,), ("data",))
+    ex = meth.make_distributed(seq, cfg, "data")
+
+    def dist_train(params_stack, a_st, b_st):
+        def inner(p, a, b):
+            p = jax.tree.map(lambda v: jnp.squeeze(v, 0), p)
+            a, b = jnp.squeeze(a, 0), jnp.squeeze(b, 0)
+            me = jax.lax.axis_index("data")
+            state = ex.init(p, me)
+
+            def body(state, _):
+                state, _ = ex.step(
+                    state,
+                    lambda pp: (node_grad(pp["w"], a, b), jnp.float32(0.0)),
+                    base_key=BASE_KEY)
+                return state, None
+
+            state, _ = jax.lax.scan(body, state, None, length=STEPS)
+            z = debias(meth_name, state.x, state)
+            return jax.tree.map(lambda v: v[None], z)
+
+        return compat.shard_map(inner, mesh=mesh,
+                                in_specs=(P("data"), P("data"), P("data")),
+                                out_specs=P("data"), axis_names={"data"},
+                                check_vma=False)(params_stack, a_st, b_st)
+
+    compiled = jax.jit(dist_train).lower(params_stack, a_stack,
+                                         b_stack).compile()
+    dist_x = np.asarray(compiled(params_stack, a_stack, b_stack)["w"])
+
+    err = float(np.max(np.abs(dist_x - ref_x)))
+    scale = float(np.max(np.abs(ref_x)))
+    hlo = compiled.as_text()
+    line = (f"CASE {case_id} MAXERR {err} SCALE {scale} "
+            f"HAS_CPERM {'collective-permute' in hlo}")
+
+    if mode in ("fixedk_packed", "fixedk_rows"):
+        payload = 0
+        for hline in hlo.splitlines():
+            # Result shapes precede the op name; sync lowering emits
+            # `= f32[k,b]{..} collective-permute(`, async a tuple form.
+            for op in (" collective-permute(", " collective-permute-start("):
+                if op in hline:
+                    result_part = hline.split(op)[0]
+                    for shape_str in re.findall(r"f32\[([\d,]*)\]",
+                                                result_part):
+                        dims = [int(v) for v in shape_str.split(",") if v]
+                        payload = max(payload, int(np.prod(dims or [1])))
+        kb = sparsifier.num_kept(DIM, cfg.p)
+        # Satellite check: ONE batched sender top_k per (leaf, branch) +
+        # one for the node's own indices — not one sort per shift round.
+        sorts = hlo.count(" sort(") + hlo.count(" sort.")
+        line += (f" WIRE_ELEMS {payload} EXPECTED_WIRE_ELEMS {kb}"
+                 f" SORT_COUNT {sorts} MAX_SORTS {1 + seq.length}")
+    print(line, flush=True)
+
+
+def main() -> None:
+    group = sys.argv[1]
+    for meth_key, topo_spec, mode in CASES[group]:
+        run_case(meth_key, topo_spec, mode)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,13 +20,17 @@ from repro.train import steps as steps_mod  # noqa: E402
 mesh = make_mesh_by_name("2x2")  # data=2 nodes, model=2
 cfg = dataclasses.replace(configs.get_smoke_config("gemma2-2b"), remat=True)
 
-for algorithm in ("sdm_dsgd", "sdm_dsgd_fused", "dsgd", "allreduce"):
+for algorithm in ("sdm_dsgd", "sdm_dsgd_fused", "dsgd", "allreduce",
+                  "gradient-push", "dc-dsgd"):
     tc = steps_mod.DistributedTrainConfig(
         model=cfg,
-        sdm=SDMConfig(p=0.5, theta=0.3, gamma=0.3, sigma=0.0, clip_c=1.0,
+        # dc-dsgd pins theta=1; keep p above Remark 1's validity threshold
+        sdm=SDMConfig(p=0.95 if algorithm == "dc-dsgd" else 0.5,
+                      theta=0.3, gamma=0.3, sigma=0.0, clip_c=1.0,
                       mode="fixedk_rows" if "fused" in algorithm
                       else "bernoulli"),
-        algorithm=algorithm, param_dtype=jnp.float32)
+        topology="dring" if algorithm == "gradient-push" else "ring",
+        method=algorithm, param_dtype=jnp.float32)
     state = steps_mod.init_distributed_state(tc, mesh, jax.random.PRNGKey(0))
     step = jax.jit(steps_mod.make_distributed_train(tc, mesh))
     stream = TokenStream(vocab_size=cfg.vocab_size, batch=4, seq_len=32,

@@ -1,0 +1,248 @@
+"""The unified Method registry: lookup, config coercion, directed
+push-sum consensus, time-varying schedules, heterogeneous per-node p."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (baselines, gossip, gradient_push, method, privacy,
+                        sdm_dsgd, topology)
+
+
+# ---------------------------------------------------------------------------
+# Registry surface.
+# ---------------------------------------------------------------------------
+
+def test_registry_has_required_methods():
+    names = method.names()
+    assert len(names) >= 4
+    for required in ("sdm-dsgd", "sdm-dsgd-fused", "dsgd", "gradient-push"):
+        assert required in names
+    for name in names:
+        m = method.get(name)
+        assert m.config_cls is not None and m.state_cls is not None
+        assert callable(m.make_reference) and callable(m.make_distributed)
+
+
+def test_registry_aliases_and_errors():
+    assert method.get("sdm_dsgd").name == "sdm-dsgd"
+    assert method.get("SDM-DSGD").name == "sdm-dsgd"
+    assert method.get("dc_dsgd").name == "dc-dsgd"
+    assert method.get("push_sum").name == "gradient-push"
+    with pytest.raises(KeyError, match="registered:"):
+        method.get("no-such-method")
+
+
+def test_config_coercion_replaces_as_sdm():
+    """dsgd/dc-dsgd/gradient-push derive their configs from SDMConfig at
+    the registry boundary — the old DSGDConfig.as_sdm shim is gone."""
+    assert not hasattr(baselines.DSGDConfig(), "as_sdm")
+    sdm = sdm_dsgd.SDMConfig(p=0.3, theta=0.4, gamma=0.05, sigma=1.5,
+                             clip_c=2.0)
+    d = method.get("dsgd").coerce_config(sdm)
+    assert isinstance(d, baselines.DSGDConfig)
+    assert (d.gamma, d.sigma, d.clip_c) == (0.05, 1.5, 2.0)
+    # DC-DSGD is the SDM registration with theta pinned to 1
+    dc = method.get("dc-dsgd").coerce_config(sdm)
+    assert isinstance(dc, sdm_dsgd.SDMConfig) and dc.theta == 1.0
+    assert dc.p == 0.3
+    gp = method.get("gradient-push").coerce_config(sdm)
+    assert isinstance(gp, gradient_push.GradientPushConfig)
+    assert gp.sigma == 1.5
+    # already-native configs pass through untouched
+    assert method.get("dsgd").coerce_config(d) is d
+    with pytest.raises(TypeError):
+        method.get("sdm-dsgd").coerce_config(d)
+
+
+def test_state_templates_per_method():
+    x = {"w": jax.ShapeDtypeStruct((4, 7), jnp.float32)}
+    sds = method.state_shape_dtype(method.get("gradient-push"), x)
+    assert sds.w.shape == (4,) and sds.step.shape == (4,)
+    assert sds.x["w"].shape == (4, 7)
+    sds2 = method.state_shape_dtype(method.get("dsgd"), x)
+    assert not hasattr(sds2, "s") and sds2.x["w"].shape == (4, 7)
+
+
+# ---------------------------------------------------------------------------
+# Directed graphs + push-sum de-biasing.
+# ---------------------------------------------------------------------------
+
+def test_directed_topology_column_stochastic():
+    topo = topology.directed_erdos_renyi(7, 0.3, seed=3)
+    w = topo.weights
+    np.testing.assert_allclose(w.sum(axis=0), 1.0, atol=1e-9)
+    # genuinely asymmetric: NOT row-stochastic (what push-sum corrects)
+    assert not np.allclose(w.sum(axis=1), 1.0)
+    with pytest.raises(ValueError, match="columns"):
+        topology.DirectedTopology(name="bad", n_nodes=2,
+                                  adjacency=np.array([[0, 1], [0, 0]]),
+                                  weights=np.array([[1.0, 0.7], [0.0, 0.7]]))
+
+
+def test_push_sum_debiased_mean_converges():
+    """Pure push-sum gossip (gamma=0) on an asymmetric directed graph:
+    every node's de-biased z_i converges to the exact initial average."""
+    topo = topology.directed_erdos_renyi(6, 0.3, seed=2)
+    meth = method.get("gradient-push")
+    sim = meth.make_reference(topo, gradient_push.GradientPushConfig(gamma=0.0))
+    rng = np.random.default_rng(0)
+    stack = {"w": jnp.asarray(rng.normal(size=(6, 5)), jnp.float32)}
+    state = sim.init(stack)
+    zero_grad = lambda p, b: (jax.tree.map(jnp.zeros_like, p), 0.0)
+    key = jax.random.PRNGKey(0)
+    for _ in range(60):
+        state, _ = sim.step(state, zero_grad, None, key)
+    mean0 = np.mean(np.asarray(stack["w"]), axis=0)
+    z = np.asarray(sim.eval_params(state)["w"])
+    # push weights genuinely diverged from 1 (the bias being corrected)...
+    assert np.max(np.abs(np.asarray(state.w) - 1.0)) > 0.1
+    # ...yet every node's de-biased estimate hits the true average
+    assert np.max(np.abs(z - mean0)) < 1e-5
+    # and the mass-conservation invariant holds exactly
+    cons = np.asarray(sim.consensus(state)["w"])
+    np.testing.assert_allclose(cons, mean0, atol=1e-5)
+
+
+def test_plain_mixing_on_directed_graph_is_biased():
+    """Sanity for WHY push-sum exists: averaging x without the w
+    correction on an uneven-out-degree directed graph does not reach
+    the true mean (the constant-degree directed ring happens to be
+    doubly stochastic, so use an asymmetric ER graph)."""
+    topo = topology.directed_erdos_renyi(6, 0.3, seed=2)
+    w = topo.weights
+    assert not np.allclose(w.sum(axis=1), 1.0)
+    x = np.asarray(np.arange(6, dtype=np.float64))
+    for _ in range(300):
+        x = w @ x
+    assert np.max(np.abs(x - 2.5)) > 0.05   # true mean is 2.5
+
+
+# ---------------------------------------------------------------------------
+# Time-varying schedule sequences.
+# ---------------------------------------------------------------------------
+
+def test_schedule_sequence_properties():
+    seq = gossip.sequence_by_name("matchings:3", 8, seed=1)
+    assert seq.length == 3 and seq.n_nodes == 8
+    ws = seq.weights_stack()
+    np.testing.assert_allclose(ws.sum(axis=1), 1.0, atol=1e-9)
+    np.testing.assert_allclose(ws.sum(axis=2), 1.0, atol=1e-9)
+    # the union over one cycle connects the graph with these seeds
+    union = sum((s.dense_weights() != 0).astype(int) for s in seq.schedules)
+    assert topology._is_connected((union - np.diag(np.diag(union)) > 0))
+    # self_weight_of indexes the right round
+    sw = np.asarray([s.self_weights for s in seq.schedules])
+    got = float(seq.self_weight_of(jnp.int32(2), jnp.int32(4)))
+    assert got == pytest.approx(sw[4 % 3, 2])
+
+
+def test_dense_weights_roundtrip():
+    for topo in (topology.ring(6), topology.torus_2d(2, 3),
+                 topology.star(5), topology.directed_ring(6)):
+        sched = gossip.schedule_from_topology(topo)
+        np.testing.assert_allclose(sched.dense_weights(), topo.weights,
+                                   atol=1e-12)
+
+
+def test_static_spec_is_length_one_sequence():
+    seq = gossip.sequence_by_name("ring", 8)
+    assert seq.length == 1
+    assert gossip.ensure_sequence(seq.schedules[0]).length == 1
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous per-node p.
+# ---------------------------------------------------------------------------
+
+def test_sdm_config_per_node_p():
+    cfg = sdm_dsgd.SDMConfig(p=(0.1, 0.2, 0.4), theta=0.05)
+    assert cfg.p_min == 0.1 and cfg.p_max == 0.4
+    assert float(cfg.p_of(2)) == pytest.approx(0.4)
+    with pytest.raises(ValueError, match="bernoulli"):
+        sdm_dsgd.SDMConfig(p=(0.1, 0.2), mode="fixedk_packed")
+    with pytest.raises(ValueError):
+        sdm_dsgd.SDMConfig(p=(0.1, 0.0))
+
+
+def test_per_node_p_length_must_match_graph():
+    """A too-short p tuple must error, not silently clamp on the gather
+    (which would hand every extra node the LAST node's sparsity and
+    privacy budget)."""
+    cfg = sdm_dsgd.SDMConfig(p=(0.2, 0.3), theta=0.1)
+    with pytest.raises(ValueError, match="2 entries for 8 nodes"):
+        method.get("sdm-dsgd").make_reference(topology.ring(8), cfg)
+    sdm_dsgd.check_per_node_p(cfg, 2)        # matching length passes
+    sdm_dsgd.check_per_node_p(sdm_dsgd.SDMConfig(p=0.2), 8)  # scalar: any n
+
+
+def test_transmitted_elements_per_node_p():
+    params = {"a": jnp.zeros((10, 10)), "b": jnp.zeros((37,))}
+    cfg = sdm_dsgd.SDMConfig(p=(0.1, 0.2, 0.3), theta=0.05)
+    per_node = [sdm_dsgd.transmitted_elements_per_step(params, cfg, i)
+                for i in range(3)]
+    assert per_node == [round(0.1 * 137), round(0.2 * 137), round(0.3 * 137)]
+    # node=None: the across-node mean, so total = mean * n as before
+    mean = sdm_dsgd.transmitted_elements_per_step(params, cfg)
+    assert mean == round(sum(per_node) / 3)
+
+
+def test_privacy_accountant_worst_case_p():
+    base = dict(G=5.0, m=100, tau=0.1, sigma=1.2, delta=1e-5)
+    het = privacy.PrivacyParams(p=(0.1, 0.3, 0.2), **base)
+    worst = privacy.PrivacyParams(p=0.3, **base)
+    assert het.p_worst == 0.3
+    alpha = privacy.rdp_alpha(1.0, 1e-5)
+    assert privacy.per_step_rdp(het, alpha) == \
+        pytest.approx(privacy.per_step_rdp(worst, alpha))
+    assert privacy.epsilon_sdm(het, 100, 1.0) == \
+        pytest.approx(privacy.epsilon_sdm(worst, 100, 1.0))
+    # the REVERSED design leaks as 1/p: the sparsest node dominates
+    sparsest = privacy.PrivacyParams(p=0.1, **base)
+    assert privacy.epsilon_alternative(het, 100, 1.0) == \
+        pytest.approx(privacy.epsilon_alternative(sparsest, 100, 1.0))
+    with pytest.raises(ValueError):
+        privacy.PrivacyParams(p=(0.1, 1.2), **base)
+
+
+def test_het_p_reference_training_runs():
+    """End-to-end: per-node budgets through the reference executor."""
+    topo = topology.ring(4)
+    cfg = sdm_dsgd.SDMConfig(p=(0.2, 0.3, 0.4, 0.5), theta=0.25, gamma=0.2)
+    cfg.validate_against(topo)
+    sim = method.get("sdm-dsgd").make_reference(topo, cfg)
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(4, 16, 8)) / 3.0, jnp.float32)
+    x_true = rng.normal(size=(8,))
+    b = jnp.asarray(np.asarray(a) @ x_true
+                    + 0.01 * rng.normal(size=(4, 16)), jnp.float32)
+
+    def grad_fn(params, batch):
+        del batch
+        g = jax.vmap(lambda w, aa, bb: aa.T @ (aa @ w - bb) / 16.0)(
+            params["w"], a, b)
+        loss = jnp.mean((jnp.einsum("nbd,nd->nb", a, params["w"]) - b) ** 2)
+        return {"w": g}, loss
+
+    state = sim.init({"w": jnp.zeros((4, 8))})
+    key = jax.random.PRNGKey(0)
+    step = jax.jit(lambda s, k: sim.step(s, grad_fn, None, k))
+    losses = []
+    for _ in range(300):
+        key, sub = jax.random.split(key)
+        state, loss = step(state, sub)
+        losses.append(float(loss))
+    assert losses[-1] < 0.2 * losses[0]
+
+
+# ---------------------------------------------------------------------------
+# Degenerate single-node mesh (the CI registration smoke path).
+# ---------------------------------------------------------------------------
+
+def test_single_node_topologies_degenerate():
+    for spec in ("ring", "er", "dring", "matchings:3"):
+        seq = gossip.sequence_by_name(spec, 1)
+        assert seq.n_nodes == 1 and seq.schedules[0].n_rounds == 0
+        assert seq.schedules[0].self_weights == (1.0,)

@@ -1,5 +1,6 @@
-"""Production train-step factory executes on a fake 2x2 mesh for all four
-algorithms (sdm_dsgd / fused / dsgd / allreduce) and losses decrease."""
+"""Production train-step factory executes on a fake 2x2 mesh for every
+registered method (sdm-dsgd / fused / dc-dsgd / dsgd / gradient-push /
+allreduce) and losses decrease."""
 import pathlib
 import subprocess
 import sys
@@ -8,11 +9,12 @@ HELPER = pathlib.Path(__file__).parent / "helpers" / "train_step_mesh_check.py"
 SRC = str(pathlib.Path(__file__).parent.parent / "src")
 
 
-def test_all_algorithms_train_on_mesh():
+def test_all_methods_train_on_mesh():
     out = subprocess.run(
         [sys.executable, str(HELPER)], capture_output=True, text=True,
         env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root"},
-        timeout=1200)
+        timeout=1800)
     assert out.returncode == 0, out.stderr[-3000:]
-    for algo in ("sdm_dsgd", "sdm_dsgd_fused", "dsgd", "allreduce"):
+    for algo in ("sdm_dsgd", "sdm_dsgd_fused", "dsgd", "allreduce",
+                 "gradient-push", "dc-dsgd"):
         assert f"ALGO_OK {algo}" in out.stdout, out.stdout
