@@ -44,19 +44,27 @@ def run(comm_budget_elems: int = 60_000_000, gamma: float = 0.05,
         raw = _cfg_for(meth.name, topo, gamma)
         cfg = meth.coerce_config(raw)
         per_step = meth.transmitted_elements(per_node, cfg) * topo.n_nodes
+        per_step_bits = method_mod.transmitted_bits(
+            meth, per_node, cfg) * topo.n_nodes
         steps = max(10, comm_budget_elems // per_step)
         res = run_decentralized(topo=topo, algorithm=meth.name, sdm_cfg=cfg,
                                 params_stack=params, grad_fn=grad_fn,
                                 batches=batches, steps=steps,
                                 eval_fn=eval_fn, eval_every=max(steps // 4, 1))
         key = meth.name.replace("-", "_")
-        curves[key] = (res.comm_elements, res.losses, res.eval_accuracy)
-        finals[key] = (res.losses[-1], res.eval_accuracy[-1])
+        curves[key] = (res.comm_elements, res.comm_bits, res.losses,
+                       res.eval_accuracy)
+        finals[key] = (res.losses[-1], res.eval_accuracy[-1],
+                       res.comm_bits[-1], per_step_bits)
 
     # At the SAME communication budget, sparser methods take more steps and
-    # end lower (the paper's Fig. 3 ordering).
+    # end lower (the paper's Fig. 3 ordering). Wire BITS per step are the
+    # honest axis (index side-channels, quantized widths) next to the
+    # paper's non-zero-element count.
     derived = f"topo={topo.name};" + ";".join(
-        f"{k}:loss={v[0]:.4f},acc={v[1]:.4f}" for k, v in finals.items())
+        f"{k}:loss={v[0]:.4f},acc={v[1]:.4f},"
+        f"bits={v[2]:.3e},bits/step={v[3]:.3e}"
+        for k, v in finals.items())
     common.emit("fig3_comm_efficiency", 0.0, derived)
     if "sdm_dsgd" in finals and "dsgd" in finals:
         assert finals["sdm_dsgd"][0] <= finals["dsgd"][0] * 1.02, derived

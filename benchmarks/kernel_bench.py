@@ -12,7 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.core import gossip, sparsifier, topology
+from repro.core import compressor as compressor_mod, gossip, sparsifier, \
+    topology
 from repro.kernels.flash_attn.ops import flash_attention
 from repro.kernels.sdm_update import ref as sdm_ref
 from repro.kernels.sdm_update.sdm_update import LANE, sdm_update_pallas
@@ -35,6 +36,12 @@ def run_gossip_schedules(topologies=GOSSIP_TOPOLOGIES, n_nodes: int = 16,
     sequences report the per-step MEAN degree over one cycle.
     """
     kb = sparsifier.num_kept(d, p)
+    comp = compressor_mod.make("fixedk", p=p)
+    # exact wire BITS per transmission: value bits + the index
+    # side-channel at ceil(log2 d) per kept element; index_sync is the
+    # repo's seed-regenerated transport (no index traffic).
+    packed_bits_idx = comp.wire_bits((d,))
+    packed_bits_sync = comp.wire_bits((d,), index_sync=True)
     for spec in topologies:
         seq = gossip.sequence_by_name(spec, n_nodes)
         wstack = seq.weights_stack()
@@ -55,7 +62,11 @@ def run_gossip_schedules(topologies=GOSSIP_TOPOLOGIES, n_nodes: int = 16,
             f"mean_degree={mean_deg:.2f};"
             f"dense_bytes/node/step={dense:.0f};"
             f"packed_bytes/node/step={packed:.0f};"
-            f"packed_fraction={packed / dense:.4f}")
+            f"packed_fraction={packed / dense:.4f};"
+            f"packed_bits/node/step={mean_deg * packed_bits_sync:.0f};"
+            f"packed_bits_explicit_idx={mean_deg * packed_bits_idx:.0f};"
+            f"index_overhead_frac="
+            f"{packed_bits_idx / packed_bits_sync - 1.0:.4f}")
 
 
 def run():

@@ -8,7 +8,9 @@ built from the same (possibly time-varying) gossip schedule.
 from repro.core.sdm_dsgd import (SDMConfig, SDMState, ReferenceSimulator,
                                  init_distributed_state, distributed_advance,
                                  distributed_commit, masked_grad,
-                                 transmitted_elements_per_step)
+                                 compressor_of,
+                                 transmitted_elements_per_step,
+                                 transmitted_bits_per_step)
 from repro.core.baselines import (DSGDConfig, DSGDReference, dcdsgd_config,
                                   dsgd_distributed_step)
 from repro.core.gradient_push import (GradientPushConfig, GradientPushState,
@@ -20,17 +22,18 @@ from repro.core.privacy import (PrivacyParams, PrivacyAccountant, epsilon_sdm,
                                 epsilon_alternative, sigma_for_budget,
                                 max_iterations, SIGMA_SQ_MIN)
 from repro.core import (topology, theory, sparsifier, gossip, clipping,
-                        method)
+                        compressor, method)
 
 __all__ = [
     "SDMConfig", "SDMState", "ReferenceSimulator", "init_distributed_state",
     "distributed_advance", "distributed_commit", "masked_grad",
-    "transmitted_elements_per_step", "DSGDConfig", "DSGDReference",
+    "compressor_of", "transmitted_elements_per_step",
+    "transmitted_bits_per_step", "DSGDConfig", "DSGDReference",
     "dcdsgd_config", "dsgd_distributed_step", "GradientPushConfig",
     "GradientPushState", "GradientPushReference", "PermuteSchedule",
     "ScheduleSequence", "schedule_from_topology", "sequence_by_name",
     "sequence_from_topologies", "PrivacyParams",
     "PrivacyAccountant", "epsilon_sdm", "epsilon_alternative",
     "sigma_for_budget", "max_iterations", "SIGMA_SQ_MIN", "topology",
-    "theory", "sparsifier", "gossip", "clipping", "method",
+    "theory", "sparsifier", "gossip", "clipping", "compressor", "method",
 ]

@@ -73,6 +73,7 @@ __all__ = [
     "resolve_schedule",
     "resolve_sequence",
     "exchange",
+    "exchange_payload",
     "exchange_packed",
     "exchange_packed_rows",
     "ring_exchange",
@@ -132,6 +133,20 @@ class PermuteSchedule:
     def self_weight_of(self, me) -> jax.Array:
         """W_ii for the calling node (index with axis_index inside shard_map)."""
         return jnp.asarray(self.self_weights, jnp.float32)[me]
+
+    def neighbor_weight_sums(self) -> Tuple[float, ...]:
+        """Row sums minus the diagonal: sum_{j != i} W_ij per node.
+
+        For doubly stochastic W this is 1 - W_ii; for column-stochastic
+        push matrices rows do NOT sum to 1, so compressed push-sum init
+        (s_0 = sum_{j != i} P_ij x_0) needs the true per-node row sum.
+        """
+        n = self.n_nodes
+        sums = [0.0] * n
+        for rnd in self.rounds:
+            for r in range(n):
+                sums[r] += rnd.recv_weights[r]
+        return tuple(sums)
 
     def dense_weights(self) -> np.ndarray:
         """Reconstruct the full (n, n) consensus/push matrix W.
@@ -355,6 +370,46 @@ def exchange(schedule, x: jax.Array, axis_name,
                           x)
 
 
+def exchange_payload(schedule, payload, decompress, axis_name, *,
+                     step=None, node_index=None) -> jax.Array:
+    """Weighted neighbour sum of DECOMPRESSED compressor payloads.
+
+    The generic transport behind ``repro.core.compressor``: ``payload``
+    is any shape-static pytree (a ``compressor.Payload`` — values,
+    explicit indices, scale scalar), and every leaf crosses the wire
+    as-is via one ppermute per schedule round; the receiver runs
+    ``decompress(recv_payload)`` and weighs locally. Nothing is
+    regenerated from shared seeds, so ANY registered compressor works —
+    packed fixed-k with explicit indices, int8 quantized values, dense
+    masks — at the cost of shipping the index/scale side-channels
+    (``exchange_packed*`` stays the seed-synchronized fast path for the
+    SDM fixed-k modes). Non-destination receivers get ppermute's implicit
+    zero payloads and a zero weight, so the sum is exact on any graph;
+    time-varying sequences index by the traced ``step``.
+    """
+    seq = ensure_sequence(schedule)
+    me = _me(axis_name, node_index)
+    template = decompress(payload)   # shares work with the caller's own
+    #                                  decompress via CSE; defines shape/dtype
+
+    def one(sched: PermuteSchedule, pl) -> jax.Array:
+        total = jnp.zeros_like(template)
+        for rnd in sched.rounds:
+            recv = jax.tree.map(
+                lambda v: jax.lax.ppermute(v, axis_name, rnd.perm), pl)
+            w = _round_weight(rnd, me, total.dtype)
+            total = total + w * decompress(recv)
+        return total
+
+    if seq.length == 1:
+        return one(seq.schedules[0], payload)
+    if step is None:
+        raise ValueError("time-varying ScheduleSequence needs step=")
+    return jax.lax.switch(step % seq.length,
+                          [functools.partial(one, s) for s in seq.schedules],
+                          payload)
+
+
 def _batched_sender_indices(schedule: PermuteSchedule, me, *,
                             base_key: jax.Array, step: jax.Array,
                             nb: int, kb: int) -> jax.Array:
@@ -385,15 +440,30 @@ def _packed_exchange(seq: ScheduleSequence, db: jax.Array, unpack, *,
     original shape. Payload selection/packing is hoisted OUT of the
     schedule branches (it depends only on (me, step)), so time-varying
     sequences pay one packing + one switch over nb-sum branches.
+
+    ``p`` may be a per-node tuple: the payload then pads to
+    k_max = max_i ceil(p_i * n_blocks) — every node draws k_max top-k
+    indices from its seed, zeroes value rows beyond its OWN k_i and
+    scales kept rows by n_blocks/k_i. Top-k indices are distinct, so the
+    zero pad rows scatter onto coordinates the sender did not select
+    (already zero in S(d)) and receivers need no masking: the wire keeps
+    ONE static shape while each node transmits its own budget.
     """
     nb_blocks = db.shape[0]
-    kb = sparsifier.num_kept(nb_blocks, p)
-    scale = nb_blocks / kb
     me = _me(axis_name, node_index)
+    if isinstance(p, tuple):
+        k_table = tuple(sparsifier.num_kept(nb_blocks, pi) for pi in p)
+        kb = max(k_table)
+        kb_me = jnp.asarray(k_table, jnp.int32)[me]
+        scale = (nb_blocks / kb_me.astype(jnp.float32)) \
+            * (jnp.arange(kb)[:, None] < kb_me)
+    else:
+        kb = sparsifier.num_kept(nb_blocks, p)
+        scale = nb_blocks / kb
 
     my_idx = sparsifier.fixedk_indices(
         node_round_key(base_key, me, step), nb_blocks, kb)
-    my_vals = jnp.take(db, my_idx, axis=0) * scale   # (kb, block|cols)
+    my_vals = (jnp.take(db, my_idx, axis=0) * scale).astype(db.dtype)
     own_sparse = unpack(my_vals, my_idx)
 
     def nb_for(sched: PermuteSchedule, vals_out: jax.Array) -> jax.Array:

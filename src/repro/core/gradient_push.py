@@ -18,12 +18,50 @@ Column-stochasticity conserves total mass (sum_i x_i and sum_i w_i are
 invariants), so sum x / sum w is exactly the running average — that is
 the consensus quantity reported. Gaussian masking + clipping reuse the
 shared ``sdm_dsgd.masked_grad`` (the DP flavour per arXiv:2512.13583).
-Full state crosses the wire, so time-varying (B-strongly-connected)
-sequences are exact, like DSGD.
+
+Compressed variant (``GradientPushConfig.compressor`` set): CHOCO/
+DP-CSGP-style error-compensated push-sum, so directed graphs also get
+the p-fraction wire cost. Each node keeps a PUBLIC copy xhat_i that all
+its neighbours replicate, and transmits only the compressed differential
+
+    delta_i = C_contr(x_{i,t+1/2} - xhat_i)           # the ONLY payload
+    xhat_i <- xhat_i + delta_i                        # replicas advance
+    x_{i,t+1} = x_{i,t+1/2} + chi * [(P - I) xhat]_i  # damped consensus
+    w_{i,t+1} = w_{i,t}     + chi * [(P - I) w]_i     # mass, SAME operator
+
+i.e. the consensus correction is computed on the public copies and
+applied with the CHOCO step size ``chi``, while the local compression
+residual (x_half - xhat) stays put and folds into the NEXT differential
+(error compensation — nothing is ever lost, only delayed). Two design
+points both of which are REQUIRED for stability (probed in
+tests/test_compressor.py):
+
+* ``C_contr`` is the CONTRACTIVE form of the selected compressor — the
+  unbiased 1/p amplification is undone by scaling payload values by p
+  (||x - C_contr(x)||^2 <= (1-p)||x||^2); error compensation repairs
+  the bias, while unbiased scaling would amplify the residual loop by
+  sqrt(1/p - 1) per step (divergent for p < 1/2) — the same finding
+  tests/test_error_feedback.py records for SDM's EF extension, and the
+  reason CHOCO-SGP assumes a contractive operator. Quantizers are
+  already norm-contractive and ship unscaled.
+* ``chi`` < 1 damps the consensus feedback of the compression error
+  (undamped chi=1 diverges per-node at aggressive sparsity even with a
+  contractive compressor); the mass w mixes with the SAME damped
+  operator M = I + chi (P - I) so the ratio z = x / w stays de-biased.
+
+M is column-stochastic for any chi (columns: 1 - chi + chi = 1), so
+total mass is conserved exactly: sum x_{t+1} = sum x_half — the
+``consensus`` = sum x / sum w invariant survives compression bit-exactly
+and only the per-node de-bias z_i carries bounded compression noise.
+Receivers track sum_{j != i} P_ij xhat_j incrementally (the ``s`` buffer,
+exactly like SDM's neighbour sum): s_i += sum_j P_ij delta_j as the
+weighted differentials arrive. The uncompressed path is untouched (it is
+exactly chi = 1 with the identity compressor).
 
 Both executors compile from the same schedule object: the reference
 mixes with ``ScheduleSequence.weights_stack()`` and the distributed
-per-node step runs the identical ``gossip.exchange`` ppermute rounds.
+per-node step runs the identical ``gossip.exchange`` /
+``gossip.exchange_payload`` ppermute rounds.
 """
 from __future__ import annotations
 
@@ -33,26 +71,58 @@ from typing import Any, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import gossip
-from repro.core.sdm_dsgd import masked_grad
+from repro.core import compressor as compressor_mod, gossip
+from repro.core.sdm_dsgd import (_leaf_keys, _payload_exchange_leaves,
+                                 masked_grad)
 
 __all__ = ["GradientPushConfig", "GradientPushState", "GradientPushReference",
-           "init_push_state", "gradient_push_distributed_step"]
+           "init_push_state", "init_compressed_push_state",
+           "gradient_push_distributed_step"]
 
 PyTree = Any
 
 
 @dataclasses.dataclass(frozen=True)
 class GradientPushConfig:
+    """Push-sum hyper-parameters.
+
+    ``compressor`` (a ``repro.core.compressor`` spec: 'bernoulli',
+    'fixedk', 'block:<B>', 'qsgd:<bits>', ...) switches on the error-
+    compensated compressed variant with transmit budget ``p``; ``chi``
+    is the CHOCO consensus step size on the public copies (module
+    docstring): chi = 1 recovers undamped mixing (fine for near-lossless
+    quantizers, DIVERGES per-node at aggressive sparsity), the 0.3
+    default is stable for every registered family at p >= 0.25 on the
+    probed graphs.
+    """
+
     gamma: float = 0.01
     sigma: float = 0.0
     clip_c: float | None = None
+    compressor: str | None = None
+    p: "float | Tuple[float, ...]" = 0.2
+    chi: float = 0.3
+
+    def __post_init__(self) -> None:
+        if isinstance(self.p, (list, tuple)):
+            object.__setattr__(self, "p", tuple(float(v) for v in self.p))
+        if not (0.0 < self.chi <= 1.0):
+            raise ValueError("chi in (0, 1]")
+        if self.compressor is not None:
+            compressor_mod.make(self.compressor, p=self.p)  # fail fast
+
+    def make_compressor(self) -> "compressor_mod.Compressor | None":
+        if self.compressor is None:
+            return None
+        return compressor_mod.make(self.compressor, p=self.p)
 
 
 class GradientPushState(NamedTuple):
     x: PyTree        # push numerator (per-node model mass)
     w: jax.Array     # push-sum weight (scalar per node; (n,) stacked)
     step: jax.Array
+    xhat: PyTree = None   # public copy (compressed variant only)
+    s: PyTree = None      # incremental sum_{j != i} P_ij xhat_j (compressed)
 
 
 def _debias(x_tree: PyTree, w) -> PyTree:
@@ -63,6 +133,47 @@ def _debias(x_tree: PyTree, w) -> PyTree:
     return jax.tree.map(one, x_tree)
 
 
+def _check_static_if_compressed(comp, seq: gossip.ScheduleSequence) -> None:
+    """Compressed push-sum requires a STATIC schedule.
+
+    The incremental neighbour sum s_i freezes each differential with the
+    weights of the round it was exchanged in; if P(t)'s diagonal varies
+    across rounds, sum_i x is no longer conserved and the documented
+    consensus invariant silently breaks — so the combination is rejected
+    instead (ROADMAP: a replica-correct variant would re-sync public
+    copies on topology change).
+    """
+    if comp is not None and seq.length > 1:
+        raise ValueError(
+            "compressed gradient-push needs a static schedule (got a "
+            f"time-varying sequence of length {seq.length}); the "
+            "incremental public-copy sum cannot track per-round weights")
+
+
+def _contraction_scale(comp: compressor_mod.Compressor, node=None):
+    """Per-sender factor turning the unbiased compressor contractive.
+
+    Sparsifiers scale kept values by ~1/p for unbiasedness; the error-
+    compensated loop instead needs the contractive form, so the sender
+    multiplies its payload VALUES by its own p before transmitting
+    (receivers then decompress consistently — the factor rides inside
+    the payload). Quantizers are already contractive: factor 1.
+    """
+    if isinstance(comp, compressor_mod.QSGDCompressor):
+        return 1.0
+    if isinstance(comp.p, tuple):
+        return comp.p_of(node)
+    return comp.p
+
+
+def _contract_payload(comp, pl, node=None):
+    scale = _contraction_scale(comp, node)
+    if isinstance(scale, float) and scale == 1.0:
+        return pl
+    return dataclasses.replace(
+        pl, values=(pl.values * scale).astype(pl.values.dtype))
+
+
 class GradientPushReference:
     """Stacked single-host gradient-push, mirroring ReferenceSimulator."""
 
@@ -71,12 +182,25 @@ class GradientPushReference:
         self.seq = gossip.sequence_of(topo)
         self._wstack = jnp.asarray(self.seq.weights_stack(), jnp.float32)
         self.weights = self._wstack[0]
+        self.comp = cfg.make_compressor()
+        _check_static_if_compressed(self.comp, self.seq)
 
     def init(self, params_stack: PyTree) -> GradientPushState:
         n = jax.tree.leaves(params_stack)[0].shape[0]
         assert n == self.seq.n_nodes, (n, self.seq.n_nodes)
-        return GradientPushState(x=params_stack, w=jnp.ones((n,), jnp.float32),
+        base = GradientPushState(x=params_stack,
+                                 w=jnp.ones((n,), jnp.float32),
                                  step=jnp.zeros((), jnp.int32))
+        if self.comp is None:
+            return base
+        # Exact replica bookkeeping: s_0[i] = sum_{j != i} P_ij x_{j,0}.
+        # (The distributed init assumes identical starts and reduces this
+        # to rowsum_i * x_0 — the stacked reference needs no assumption.)
+        s0 = jax.tree.map(
+            lambda x: gossip.apply_weights_dense(
+                self.weights, x, include_self=False).astype(x.dtype),
+            params_stack)
+        return base._replace(xhat=params_stack, s=s0)
 
     def step(self, state: GradientPushState, grad_fn, batch_stack: PyTree,
              key: jax.Array) -> Tuple[GradientPushState, PyTree]:
@@ -87,12 +211,49 @@ class GradientPushReference:
         x_half = jax.tree.map(
             lambda x, gr: x - cfg.gamma * gr.astype(x.dtype), state.x, g)
         p_t = self._wstack[state.step % self.seq.length]
-        x = jax.tree.map(lambda v: gossip.mix_dense(p_t, v), x_half)
-        w = p_t @ state.w
-        return GradientPushState(x=x, w=w, step=state.step + 1), aux
+        if self.comp is None:
+            x = jax.tree.map(lambda v: gossip.mix_dense(p_t, v), x_half)
+            return GradientPushState(x=x, w=p_t @ state.w,
+                                     step=state.step + 1), aux
+
+        # -- compressed: transmit C_contr(x_half - xhat) only --------------
+        n = self.seq.n_nodes
+        comp = self.comp
+
+        def roundtrip_stack(leaf_key, delta_stack):
+            def one(i, v):
+                k = gossip.node_round_key(leaf_key, i, state.step)
+                pl = _contract_payload(comp, comp.compress(k, v, node=i),
+                                       node=i)
+                return comp.decompress(pl).astype(v.dtype)
+            return jax.vmap(one)(jnp.arange(n), delta_stack)
+
+        delta = jax.tree.map(jnp.subtract, x_half, state.xhat)
+        delta_hat = jax.tree.map(roundtrip_stack, _leaf_keys(key, delta),
+                                 delta)
+        xhat = jax.tree.map(jnp.add, state.xhat, delta_hat)
+        # incremental neighbour sum: the weights of the round the
+        # differential was exchanged in (matches the distributed executor;
+        # exact whenever the sequence is static).
+        s = jax.tree.map(
+            lambda s_, dh: s_ + gossip.apply_weights_dense(
+                p_t, dh, include_self=False).astype(s_.dtype),
+            state.s, delta_hat)
+        diag = jnp.diag(p_t)
+        # x <- x_half + chi ((P - I) xhat); mass mixes with the SAME
+        # damped column-stochastic operator so z = x / w stays de-biased.
+        x = jax.tree.map(
+            lambda xh, xp, ss: xh + cfg.chi * (diag.reshape(
+                (n,) + (1,) * (xh.ndim - 1)).astype(xh.dtype) * xp
+                + ss - xp),
+            x_half, xhat, s)
+        w = state.w + cfg.chi * (p_t @ state.w - state.w)
+        return GradientPushState(x=x, w=w, step=state.step + 1,
+                                 xhat=xhat, s=s), aux
 
     def consensus_mean(self, state: GradientPushState) -> PyTree:
-        """sum_i x_i / sum_i w_i — exact by mass conservation."""
+        """sum_i x_i / sum_i w_i — exact by mass conservation (the
+        invariant survives compression, see module docstring)."""
         return jax.tree.map(
             lambda x: jnp.sum(x, axis=0) / jnp.sum(state.w), state.x)
 
@@ -109,6 +270,17 @@ def init_push_state(params: PyTree) -> GradientPushState:
                              step=jnp.zeros((), jnp.int32))
 
 
+def init_compressed_push_state(params: PyTree,
+                               nb_row_sum) -> GradientPushState:
+    """Compressed-variant per-node state. ``nb_row_sum`` is the node's
+    sum_{j != i} P_ij (from ``PermuteSchedule.neighbor_weight_sums()``;
+    may be a traced gather on the node index)."""
+    s0 = jax.tree.map(lambda x: (nb_row_sum * x).astype(x.dtype), params)
+    return GradientPushState(x=params, w=jnp.ones((), jnp.float32),
+                             step=jnp.zeros((), jnp.int32),
+                             xhat=params, s=s0)
+
+
 def gradient_push_distributed_step(state: GradientPushState, grads: PyTree, *,
                                    base_key: jax.Array, axis_name,
                                    cfg: GradientPushConfig,
@@ -118,21 +290,46 @@ def gradient_push_distributed_step(state: GradientPushState, grads: PyTree, *,
 
     The scalar mass w rides the same ppermute schedule as the model
     leaves — one extra () payload per round, negligible on the wire.
+    With ``cfg.compressor`` set only the compressed differential payload
+    crosses the wire for the model leaves (``gossip.exchange_payload``);
+    the mass stays exact.
     """
     seq = gossip.resolve_sequence(schedule, axis_name)
     me = gossip._me(axis_name, node_index)
     sw = seq.self_weight_of(me, state.step)
+    comp = cfg.make_compressor()
+    _check_static_if_compressed(comp, seq)
     noise_key = jax.random.fold_in(
         gossip.node_round_key(base_key, me, state.step), 0x5eed)
     g = masked_grad(grads, noise_key, sigma=cfg.sigma, clip_c=cfg.clip_c)
 
     x_half = jax.tree.map(
         lambda x, gr: x - cfg.gamma * gr.astype(x.dtype), state.x, g)
+    w_push = sw * state.w + gossip.exchange(seq, state.w, axis_name,
+                                            node_index=node_index,
+                                            step=state.step)
+    if comp is None:
+        x = jax.tree.map(
+            lambda v: sw.astype(v.dtype) * v + gossip.exchange(
+                seq, v, axis_name, node_index=node_index, step=state.step),
+            x_half)
+        return GradientPushState(x=x, w=w_push, step=state.step + 1)
+
+    delta = jax.tree.map(jnp.subtract, x_half, state.xhat)
+    # the SAME per-leaf payload transport (and key schedule) SDM's qsgd
+    # path uses, with the contraction applied to each payload pre-wire.
+    delta_hat, nb_sum = _payload_exchange_leaves(
+        delta, comp, schedule=seq, axis_name=axis_name, base_key=base_key,
+        step=state.step, me=me, node_index=node_index,
+        transform=lambda pl: _contract_payload(comp, pl, node=me))
+
+    xhat = jax.tree.map(jnp.add, state.xhat, delta_hat)
+    s = jax.tree.map(jnp.add, state.s, nb_sum)
+    # x <- x_half + chi ((P - I) xhat); mass rides the same damped
+    # operator M = I + chi (P - I) so z = x / w stays de-biased.
     x = jax.tree.map(
-        lambda v: sw.astype(v.dtype) * v + gossip.exchange(
-            seq, v, axis_name, node_index=node_index, step=state.step),
-        x_half)
-    w = sw * state.w + gossip.exchange(seq, state.w, axis_name,
-                                       node_index=node_index,
-                                       step=state.step)
-    return GradientPushState(x=x, w=w, step=state.step + 1)
+        lambda xh, xp, ss: xh + cfg.chi * (sw.astype(xh.dtype) * xp
+                                           + ss - xp),
+        x_half, xhat, s)
+    w = state.w + cfg.chi * (w_push - state.w)
+    return GradientPushState(x=x, w=w, step=state.step + 1, xhat=xhat, s=s)

@@ -60,11 +60,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines, gossip, gradient_push, sdm_dsgd
+from repro.core import (baselines, compressor as compressor_mod, gossip,
+                        gradient_push, sdm_dsgd)
 
 __all__ = ["Method", "DistributedExecutor", "register", "get", "names",
-           "normalize", "PARAM", "SCALAR", "COUNTER",
-           "state_shape_dtype", "state_shardings"]
+           "normalize", "PARAM", "SCALAR", "COUNTER", "state_fields_of",
+           "state_shape_dtype", "state_shardings", "transmitted_bits"]
 
 PyTree = Any
 
@@ -99,6 +100,13 @@ class Method:
     transmitted_elements: Callable[[PyTree, Any], int]
     directed: bool = False       # meaningful on directed (push) graphs
     description: str = ""
+    # Optional config-dependent state layout (e.g. compressed gradient-push
+    # adds xhat/s buffers); None means ``state_fields`` for every config.
+    state_fields_for: "Callable[[Any], Tuple[Tuple[str, str], ...]] | None" \
+        = None
+    # Optional exact wire-bit accounting; None falls back to
+    # transmitted_elements * value_bits (full-precision dense payloads).
+    transmitted_bits_fn: "Callable[[PyTree, Any], int] | None" = None
 
 
 _REGISTRY: Dict[str, Method] = {}
@@ -138,11 +146,35 @@ def names() -> Tuple[str, ...]:
 # Generic state-template builders (used by train.steps and launch.dryrun).
 # --------------------------------------------------------------------------
 
-def state_shape_dtype(meth: Method, x_stack: PyTree):
+def state_fields_of(meth: Method, cfg=None) -> Tuple[Tuple[str, str], ...]:
+    """The method's state layout, possibly config-dependent.
+
+    Compressed gradient-push carries two extra PARAM buffers (public
+    copy + incremental neighbour sum) only when a compressor is
+    configured; ``cfg=None`` keeps the static default layout.
+    """
+    if meth.state_fields_for is not None and cfg is not None:
+        return meth.state_fields_for(cfg)
+    return meth.state_fields
+
+
+def transmitted_bits(meth: Method, params: PyTree, cfg,
+                     value_bits: int = 32) -> int:
+    """Exact wire bits one node transmits per step (Fig-3's honest axis).
+
+    Methods without a registered bits accountant ship full-precision
+    dense payloads: elements * value_bits.
+    """
+    if meth.transmitted_bits_fn is not None:
+        return meth.transmitted_bits_fn(params, cfg)
+    return meth.transmitted_elements(params, cfg) * value_bits
+
+
+def state_shape_dtype(meth: Method, x_stack: PyTree, cfg=None):
     """Stacked-state ShapeDtypeStructs from the stacked params template."""
     n = jax.tree.leaves(x_stack)[0].shape[0]
     kw = {}
-    for fname, kind in meth.state_fields:
+    for fname, kind in state_fields_of(meth, cfg):
         if kind == PARAM:
             kw[fname] = x_stack
         elif kind == SCALAR:
@@ -152,10 +184,11 @@ def state_shape_dtype(meth: Method, x_stack: PyTree):
     return meth.state_cls(**kw)
 
 
-def state_shardings(meth: Method, x_shardings: PyTree, node_vec_sharding):
+def state_shardings(meth: Method, x_shardings: PyTree, node_vec_sharding,
+                    cfg=None):
     """Stacked-state NamedShardings from the params-tree shardings."""
     kw = {}
-    for fname, kind in meth.state_fields:
+    for fname, kind in state_fields_of(meth, cfg):
         kw[fname] = x_shardings if kind == PARAM else node_vec_sharding
     return meth.state_cls(**kw)
 
@@ -312,22 +345,47 @@ def _allreduce_distributed(seq, cfg, axis_name) -> DistributedExecutor:
 def _coerce_push(cfg) -> gradient_push.GradientPushConfig:
     if isinstance(cfg, gradient_push.GradientPushConfig):
         return cfg
-    if isinstance(cfg, (sdm_dsgd.SDMConfig, baselines.DSGDConfig)):
+    if isinstance(cfg, sdm_dsgd.SDMConfig):
+        # An explicit compressor spec on the SDM bag carries over (the
+        # --compressor CLI axis); the legacy mode= spelling does not.
+        return gradient_push.GradientPushConfig(
+            gamma=cfg.gamma, sigma=cfg.sigma, clip_c=cfg.clip_c,
+            compressor=cfg.compressor, p=cfg.p)
+    if isinstance(cfg, baselines.DSGDConfig):
         return gradient_push.GradientPushConfig(
             gamma=cfg.gamma, sigma=cfg.sigma, clip_c=cfg.clip_c)
     raise TypeError(
         f"gradient-push needs GradientPushConfig, got {type(cfg).__name__}")
 
 
+def _push_fields(cfg) -> Tuple[Tuple[str, str], ...]:
+    base = (("x", PARAM), ("w", SCALAR), ("step", COUNTER))
+    if getattr(cfg, "compressor", None):
+        return base + (("xhat", PARAM), ("s", PARAM))
+    return base
+
+
 def _push_init_stacked(stack, seq, cfg) -> gradient_push.GradientPushState:
     n = jax.tree.leaves(stack)[0].shape[0]
-    return gradient_push.GradientPushState(
+    base = gradient_push.GradientPushState(
         x=stack, w=jnp.ones((n,), jnp.float32), step=_stacked_counter(n))
+    if not getattr(cfg, "compressor", None):
+        return base
+    w0 = seq.schedules[0]
+    rs = jnp.asarray(w0.neighbor_weight_sums(), jnp.float32)
+    s0 = jax.tree.map(
+        lambda x: (rs.reshape((n,) + (1,) * (x.ndim - 1)) * x
+                   ).astype(x.dtype), stack)
+    return base._replace(xhat=stack, s=s0)
 
 
 def _push_distributed(seq, cfg, axis_name) -> DistributedExecutor:
     def init(params, me):
-        return gradient_push.init_push_state(params)
+        if not getattr(cfg, "compressor", None):
+            return gradient_push.init_push_state(params)
+        rs = jnp.asarray(seq.schedules[0].neighbor_weight_sums(),
+                         jnp.float32)[me]
+        return gradient_push.init_compressed_push_state(params, rs)
 
     def step(state, grads_at, *, base_key, node_index=None):
         z = gradient_push._debias(state.x, state.w)
@@ -338,6 +396,33 @@ def _push_distributed(seq, cfg, axis_name) -> DistributedExecutor:
         return state, aux
 
     return DistributedExecutor(init=init, step=step)
+
+
+def _node_mean(comp, per_node_fn) -> int:
+    """Across-node mean for per-node p tuples — the SDM accounting
+    convention (network total = mean * n_nodes), so het-p methods share
+    one Fig-3 axis instead of the worst-case node inflating push-sum."""
+    if isinstance(comp.p, tuple):
+        vals = [per_node_fn(i) for i in range(len(comp.p))]
+        return int(round(sum(vals) / len(vals)))
+    return per_node_fn(None)
+
+
+def _push_elements(params: PyTree, cfg) -> int:
+    comp = cfg.make_compressor() if hasattr(cfg, "make_compressor") else None
+    if comp is None:
+        return _full_state_elements(params, cfg) + 1   # + push-sum mass w
+    return _node_mean(comp, lambda i: compressor_mod.tree_wire_elements(
+        comp, params, node=i)) + 1
+
+
+def _push_bits(params: PyTree, cfg) -> int:
+    comp = cfg.make_compressor() if hasattr(cfg, "make_compressor") else None
+    if comp is None:
+        return (_full_state_elements(params, cfg) + 1) * 32
+    # exchange_payload ships explicit indices (no seed regeneration).
+    return _node_mean(comp, lambda i: compressor_mod.tree_wire_bits(
+        comp, params, index_sync=False, node=i)) + 32
 
 
 # --------------------------------------------------------------------------
@@ -360,6 +445,7 @@ _SDM = register(Method(
     make_distributed=_sdm_distributed,
     init_stacked=_sdm_init_stacked,
     transmitted_elements=sdm_dsgd.transmitted_elements_per_step,
+    transmitted_bits_fn=sdm_dsgd.transmitted_bits_per_step,
     description="Algorithm 1: sparse differential Gaussian-masking DSGD"))
 
 register(dataclasses.replace(
@@ -396,15 +482,17 @@ register(Method(
     config_cls=gradient_push.GradientPushConfig,
     state_cls=gradient_push.GradientPushState,
     state_fields=(("x", PARAM), ("w", SCALAR), ("step", COUNTER)),
+    state_fields_for=_push_fields,
     coerce_config=_coerce_push,
     make_reference=gradient_push.GradientPushReference,
     make_distributed=_push_distributed,
     init_stacked=_push_init_stacked,
-    transmitted_elements=lambda params, cfg:
-        _full_state_elements(params, cfg) + 1,   # + the push-sum mass w
+    transmitted_elements=_push_elements,
+    transmitted_bits_fn=_push_bits,
     directed=True,
     description="push-sum gradient-push over directed column-stochastic "
-                "graphs (SGP / DP-CSGP-style)"))
+                "graphs (SGP / DP-CSGP-style); --compressor switches on "
+                "CHOCO-style error-compensated compressed payloads"))
 
 register(Method(
     name="allreduce",

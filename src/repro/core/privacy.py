@@ -86,6 +86,23 @@ class PrivacyParams:
         if not (0.0 < self.delta < 1.0):
             raise ValueError("delta must be in (0, 1)")
 
+    @classmethod
+    def from_compressor(cls, comp, *, G: float, m: int, tau: float,
+                        sigma: float, delta: float = 1e-5
+                        ) -> "PrivacyParams":
+        """Accountant parameters with the release probability READ OFF
+        the compressor (``repro.core.compressor``).
+
+        Sparsifying compressors release each coordinate w.p. p — the
+        factor Theorem 1 multiplies into the per-step RDP; quantizers
+        (qsgd) release every coordinate (``release_probability == 1``),
+        so quantization buys wire bits but no subsampling amplification.
+        Per-node tuples pass through: the accountant charges the
+        worst-case (max-p) node as always.
+        """
+        return cls(G=G, m=m, tau=tau, p=comp.release_probability,
+                   sigma=sigma, delta=delta)
+
     @property
     def p_worst(self) -> float:
         """The accountant's p: the max-p node dominates the RDP spend."""

@@ -35,12 +35,13 @@ from typing import Any, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import clipping, gossip, sparsifier
+from repro.core import clipping, compressor as compressor_mod, gossip
 from repro.core.topology import Topology
 
 __all__ = ["SDMConfig", "SDMState", "ReferenceSimulator", "masked_grad",
            "init_distributed_state", "distributed_advance",
-           "distributed_commit", "transmitted_elements_per_step"]
+           "distributed_commit", "compressor_of",
+           "transmitted_elements_per_step", "transmitted_bits_per_step"]
 
 PyTree = Any
 
@@ -49,20 +50,31 @@ PyTree = Any
 class SDMConfig:
     """Hyper-parameters of Algorithm 1.
 
-    mode:
+    ``compressor``, when set, is a ``repro.core.compressor`` spec that
+    SELECTS the wire format by name (the preferred axis; ``mode`` is
+    derived from it): 'bernoulli' | 'fixedk[:block]' | 'block:<B>' |
+    'rows' | 'qsgd[:bits]'. ``compressor_of(cfg)`` resolves either
+    spelling to the Compressor object that owns sensitivity and
+    wire-cost accounting.
+
+    mode (legacy spelling, still accepted):
       'bernoulli'     — paper-faithful i.i.d. Bernoulli(p) masking, dense payloads.
       'fixedk_packed' — seed-synchronized fixed-k packed payloads over flat
                         pack_block-coordinate blocks (TPU adaptation).
       'fixedk_rows'   — packed payloads over trailing-dim rows: keeps the
                         tensor-parallel sharding of every leaf intact
                         (the production choice; see EXPERIMENTS.md §Perf).
+      'qsgd'          — QSGD stochastic quantization of the differential
+                        (qsgd_bits levels; int8 wire payload via the
+                        generic gossip.exchange_payload transport).
 
     ``p`` may be a per-node tuple (heterogeneous sparsity budgets, e.g.
     degree-weighted): node i then transmits with probability p[i].
-    Supported in 'bernoulli' mode only — fixed-k payload shapes are
-    static and must match across the ppermute, so per-node k is
-    impossible on the wire. The privacy accountant uses the worst-case
-    (max-p) node; Lemma-1's theta bound the most restrictive (min-p).
+    Supported in 'bernoulli' and 'fixedk_packed' modes — fixed-k wire
+    payloads pad to the max-k across nodes (zero rows beyond a node's
+    own k), so one static ppermute shape serves every budget. The
+    privacy accountant uses the worst-case (max-p) node; Lemma-1's theta
+    bound the most restrictive (min-p).
     """
 
     p: "float | Tuple[float, ...]" = 0.2
@@ -72,6 +84,8 @@ class SDMConfig:
     clip_c: float | None = None
     mode: str = "bernoulli"
     pack_block: int = 1   # fixedk granularity (coords per transmitted block)
+    compressor: str | None = None   # compressor spec; overrides mode
+    qsgd_bits: int = 8    # quantizer levels (mode='qsgd')
     # BEYOND-PAPER extension (off by default = paper-faithful): carry the
     # unsent compression residual e = d - S(d) into the next round's
     # differential (error feedback a la Stich et al. [20], which the paper
@@ -83,16 +97,44 @@ class SDMConfig:
     error_feedback: bool = False
 
     def __post_init__(self) -> None:
+        if self.compressor is not None:
+            # single source of truth: parse through the registry factories
+            # and read (mode, pack_block, qsgd_bits) off the object, so
+            # per-family defaults cannot drift from compressor.make.
+            comp = compressor_mod.make(self.compressor, p=self.p)
+            if isinstance(comp, compressor_mod.QSGDCompressor):
+                object.__setattr__(self, "mode", "qsgd")
+                object.__setattr__(self, "qsgd_bits", comp.bits)
+            elif isinstance(comp, compressor_mod.RowsCompressor):
+                object.__setattr__(self, "mode", "fixedk_rows")
+            elif isinstance(comp, compressor_mod.FixedKCompressor):
+                object.__setattr__(self, "mode", "fixedk_packed")
+                object.__setattr__(self, "pack_block", comp.block)
+            elif isinstance(comp, compressor_mod.BernoulliCompressor):
+                object.__setattr__(self, "mode", "bernoulli")
+            else:
+                # any other registered family rides the generic
+                # exchange_payload transport — "adding a compressor"
+                # needs no SDM-side mapping.
+                object.__setattr__(self, "mode", "payload")
+        if self.error_feedback and self.mode in ("qsgd", "payload"):
+            # EF undoes the sparsifiers' 1/p amplification by scaling the
+            # transmitted update by p; quantizers/generic payloads have
+            # no such factor, so the scale would silently discard (1-p)
+            # of every update.
+            raise ValueError("error_feedback is a sparsifier-path "
+                             f"extension; unsupported with mode={self.mode!r}")
         if isinstance(self.p, (list, tuple)):
             object.__setattr__(self, "p", tuple(float(v) for v in self.p))
             if not self.p:
                 raise ValueError("per-node p must be non-empty")
             if any(not (0.0 < v <= 1.0) for v in self.p):
                 raise ValueError("every per-node p must be in (0,1]")
-            if self.mode != "bernoulli":
+            if self.mode not in ("bernoulli", "fixedk_packed"):
                 raise ValueError(
-                    "heterogeneous per-node p needs mode='bernoulli' "
-                    "(fixed-k wire payloads have static shapes)")
+                    "heterogeneous per-node p needs mode='bernoulli' or "
+                    "'fixedk_packed' (pad-to-max-k payloads); "
+                    f"got mode={self.mode!r}")
             if self.error_feedback:
                 raise ValueError(
                     "error_feedback with per-node p is unsupported")
@@ -100,8 +142,11 @@ class SDMConfig:
             raise ValueError("p in (0,1]")
         if not (0.0 < self.theta <= 1.0):
             raise ValueError("theta in (0,1]")
-        if self.mode not in ("bernoulli", "fixedk_packed", "fixedk_rows"):
+        if self.mode not in ("bernoulli", "fixedk_packed", "fixedk_rows",
+                             "qsgd", "payload"):
             raise ValueError(f"unknown mode {self.mode}")
+        if self.mode == "payload" and not self.compressor:
+            raise ValueError("mode='payload' needs a compressor spec")
 
     @property
     def p_min(self) -> float:
@@ -172,6 +217,28 @@ def check_per_node_p(cfg, n_nodes: int) -> None:
             f"per-node p has {len(cfg.p)} entries for {n_nodes} nodes")
 
 
+def compressor_of(cfg) -> compressor_mod.Compressor:
+    """The Compressor object a config's wire format resolves to.
+
+    Whether the config was built with ``compressor='...'`` or the legacy
+    ``mode=`` spelling, this is the single point where sdm_dsgd selects
+    a compressor BY NAME from the registry — sensitivity
+    (``release_probability``) and wire-cost (``wire_elements`` /
+    ``wire_bits``) accounting live on the returned object.
+    """
+    if cfg.mode == "bernoulli":
+        return compressor_mod.BernoulliCompressor(p=cfg.p)
+    if cfg.mode == "fixedk_packed":
+        return compressor_mod.FixedKCompressor(p=cfg.p, block=cfg.pack_block)
+    if cfg.mode == "fixedk_rows":
+        return compressor_mod.RowsCompressor(p=cfg.p)
+    if cfg.mode == "qsgd":
+        return compressor_mod.QSGDCompressor(bits=cfg.qsgd_bits)
+    if cfg.mode == "payload":   # any registered family, generic transport
+        return compressor_mod.make(cfg.compressor, p=cfg.p)
+    raise ValueError(f"unknown mode {cfg.mode}")
+
+
 def masked_grad(grads: PyTree, key: jax.Array, *, sigma: float,
                 clip_c: float | None) -> PyTree:
     """clip (optional, §5 procedure) then Gaussian-mask: g_hat = clip(g) + eta.
@@ -202,31 +269,38 @@ def transmitted_elements_per_step(params: PyTree, cfg: SDMConfig,
     count; ``node=None`` returns the across-node mean (so callers that
     multiply by n_nodes still get the network total).
     """
-    if isinstance(cfg.p, tuple):
+    if isinstance(cfg.p, tuple) and cfg.mode != "qsgd":
         if node is None:
             per_node = [transmitted_elements_per_step(params, cfg, i)
                         for i in range(len(cfg.p))]
             return int(round(sum(per_node) / len(per_node)))
-        p = cfg.p[node]
-    else:
-        p = cfg.p
-    d = sum(int(x.size) for x in jax.tree.leaves(params))
-    if cfg.mode == "fixedk_packed":
-        b = cfg.pack_block
-        # kb * b can exceed the leaf size when block_view pads the last
-        # block; pad coordinates are never real payload, so clamp.
-        return sum(
-            min(sparsifier.num_kept(-(-int(x.size) // b), p) * b,
-                int(x.size))
-            for x in jax.tree.leaves(params))
-    if cfg.mode == "fixedk_rows":
-        total = 0
-        for x in jax.tree.leaves(params):
-            cols = x.shape[-1] if x.ndim > 1 else 1
-            rows = int(x.size) // cols
-            total += sparsifier.num_kept(rows, p) * cols
-        return total
-    return int(round(p * d))
+    comp = compressor_of(cfg)
+    return compressor_mod.tree_wire_elements(comp, params, node=node)
+
+
+def transmitted_bits_per_step(params: PyTree, cfg: SDMConfig,
+                              node: int | None = None, *,
+                              value_bits: int = 32,
+                              index_sync: bool = True) -> int:
+    """Exact WIRE BITS one node transmits per iteration.
+
+    The honest companion to the element count: packed formats also need
+    an index side-channel at ceil(log2 d) bits per kept element — unless
+    both endpoints regenerate index sets from the shared seed
+    (``index_sync=True``, the repo's gossip transport), which removes
+    index traffic entirely; quantizers ship every coordinate but at
+    qsgd_bits instead of ``value_bits``. ``node=None`` with per-node p
+    returns the across-node mean (network total = mean * n_nodes).
+    """
+    if isinstance(cfg.p, tuple) and cfg.mode != "qsgd" and node is None:
+        per_node = [transmitted_bits_per_step(params, cfg, i,
+                                              value_bits=value_bits,
+                                              index_sync=index_sync)
+                    for i in range(len(cfg.p))]
+        return int(round(sum(per_node) / len(per_node)))
+    comp = compressor_of(cfg)
+    return compressor_mod.tree_wire_bits(comp, params, value_bits=value_bits,
+                                         index_sync=index_sync, node=node)
 
 
 # ==========================================================================
@@ -303,23 +377,22 @@ class ReferenceSimulator:
             d_in = state.d
         ef_scale = cfg.p if cfg.error_feedback else 1.0
 
+        # The compressor roundtrip (compress -> decompress) IS the
+        # sparsifier S(.) each node applies before transmitting; the
+        # registry object replaces the old hand-rolled mode branches and
+        # draws the exact same bits (same key schedule, same selection
+        # primitives), so trajectories are unchanged.
+        comp = compressor_of(cfg)
+
         def sparsify_stack(leaf_key: jax.Array, d_stack: jax.Array) -> jax.Array:
             node_keys = jax.vmap(
                 lambda i: gossip.node_round_key(leaf_key, i, state.step))(jnp.arange(n))
-            if cfg.mode == "bernoulli":
-                if isinstance(cfg.p, tuple):
-                    p_vec = jnp.asarray(cfg.p, jnp.float32)
-                    return jax.vmap(sparsifier.bernoulli_sparsify)(
-                        node_keys, d_stack, p_vec)
-                fn = lambda k, v: sparsifier.bernoulli_sparsify(k, v, cfg.p)
-            elif cfg.mode == "fixedk_rows":
-                fn = lambda k, v: sparsifier.block_sparsify(
-                    k, v.reshape(-1), cfg.p,
-                    v.shape[-1] if v.ndim > 1 else 1).reshape(v.shape)
-            else:
-                fn = lambda k, v: sparsifier.block_sparsify(
-                    k, v.reshape(-1), cfg.p, cfg.pack_block).reshape(v.shape)
-            return jax.vmap(fn)(node_keys, d_stack)
+
+            def one(i, k, v):
+                pl = comp.compress(k, v, node=i)
+                return comp.decompress(pl).astype(v.dtype)
+
+            return jax.vmap(one)(jnp.arange(n), node_keys, d_stack)
 
         sd = jax.tree.map(sparsify_stack, _leaf_keys(key, d_in), d_in)
         if cfg.error_feedback and ef_scale != 1.0:
@@ -430,6 +503,38 @@ def _sparse_exchange_leaves(d_tree: PyTree, *, schedule, axis_name,
     return jax.tree.unflatten(treedef, own), jax.tree.unflatten(treedef, nb)
 
 
+def _payload_exchange_leaves(d_tree: PyTree,
+                             comp: compressor_mod.Compressor, *,
+                             schedule, axis_name, base_key: jax.Array,
+                             step: jax.Array, me,
+                             node_index=None,
+                             transform=None) -> Tuple[PyTree, PyTree]:
+    """Generic compressor-payload exchange: (own x_hat, weighted nb sum).
+
+    The payload pytree (values/indices/scale) crosses the wire as-is via
+    ``gossip.exchange_payload`` — the transport any registered compressor
+    (e.g. the int8 QSGD quantizer) rides without a bespoke packed path.
+    Key schedule matches ``_sparse_exchange_leaves`` / the reference
+    executor: fold(fold(fold(base, leaf), node), step). ``transform``
+    optionally rewrites each payload before it ships (compressed
+    push-sum applies its contraction scaling there) — the ONE shared
+    implementation of the per-leaf transport.
+    """
+    d_leaves, treedef = jax.tree.flatten(d_tree)
+    own, nb = [], []
+    for i, d in enumerate(d_leaves):
+        key = gossip.node_round_key(
+            jax.random.fold_in(base_key, i), me, step)
+        pl = comp.compress(key, d, node=me)
+        if transform is not None:
+            pl = transform(pl)
+        own.append(comp.decompress(pl).astype(d.dtype))
+        nb.append(gossip.exchange_payload(
+            schedule, pl, comp.decompress, axis_name, step=step,
+            node_index=node_index).astype(d.dtype))
+    return jax.tree.unflatten(treedef, own), jax.tree.unflatten(treedef, nb)
+
+
 def distributed_advance(state: SDMState, *, base_key: jax.Array, axis_name,
                         cfg: SDMConfig,
                         schedule=None,
@@ -455,24 +560,29 @@ def distributed_advance(state: SDMState, *, base_key: jax.Array, axis_name,
             state.d, schedule=seq, axis_name=axis_name,
             base_key=base_key, step=state.step, cfg=cfg,
             node_index=node_index)
-        x = jax.tree.map(jnp.add, state.x, own)
-        s = jax.tree.map(jnp.add, state.s, nb)
+    elif cfg.mode in ("qsgd", "payload"):
+        own, nb = _payload_exchange_leaves(
+            state.d, compressor_of(cfg), schedule=seq, axis_name=axis_name,
+            base_key=base_key, step=state.step, me=me,
+            node_index=node_index)
     else:
         # Key schedule fold(fold(fold(base, leaf), node), step) — identical
         # to ReferenceSimulator.advance so the two paths are bit-equal.
+        comp = compressor_of(cfg)
         leaf_keys = jax.tree.map(
             lambda k: gossip.node_round_key(k, me, state.step),
             _leaf_keys(base_key, state.d))
-        p_me = cfg.p_of(me)
-        sd = jax.tree.map(
-            lambda k, d: sparsifier.bernoulli_sparsify(k, d, p_me),
+        own = jax.tree.map(
+            lambda k, d: comp.decompress(
+                comp.compress(k, d, node=me)).astype(d.dtype),
             leaf_keys, state.d)
-        x = jax.tree.map(jnp.add, state.x, sd)
-        s = jax.tree.map(
-            lambda s_, v: s_ + gossip.exchange(seq, v, axis_name,
-                                               node_index=node_index,
-                                               step=state.step),
-            state.s, sd)
+        nb = jax.tree.map(
+            lambda v: gossip.exchange(seq, v, axis_name,
+                                      node_index=node_index,
+                                      step=state.step),
+            own)
+    x = jax.tree.map(jnp.add, state.x, own)
+    s = jax.tree.map(jnp.add, state.s, nb)
     return state._replace(x=x, s=s)
 
 
@@ -530,22 +640,27 @@ def distributed_step_fused(state: SDMFusedState, grads: PyTree, *,
             d, schedule=seq, axis_name=axis_name,
             base_key=base_key, step=sp_step, cfg=cfg,
             node_index=node_index)
-        x = jax.tree.map(jnp.add, state.x, own)
-        s = jax.tree.map(jnp.add, state.s, nb)
+    elif cfg.mode in ("qsgd", "payload"):
+        own, nb = _payload_exchange_leaves(
+            d, compressor_of(cfg), schedule=seq, axis_name=axis_name,
+            base_key=base_key, step=sp_step, me=me,
+            node_index=node_index)
     else:
+        comp = compressor_of(cfg)
         leaf_keys = jax.tree.map(
             lambda k: gossip.node_round_key(k, me, sp_step),
             _leaf_keys(base_key, d))
-        p_me = cfg.p_of(me)
-        sd = jax.tree.map(
-            lambda k, dd: sparsifier.bernoulli_sparsify(k, dd, p_me),
+        own = jax.tree.map(
+            lambda k, dd: comp.decompress(
+                comp.compress(k, dd, node=me)).astype(dd.dtype),
             leaf_keys, d)
-        x = jax.tree.map(jnp.add, state.x, sd)
-        s = jax.tree.map(
-            lambda s_, v: s_ + gossip.exchange(seq, v, axis_name,
-                                               node_index=node_index,
-                                               step=sp_step),
-            state.s, sd)
+        nb = jax.tree.map(
+            lambda v: gossip.exchange(seq, v, axis_name,
+                                      node_index=node_index,
+                                      step=sp_step),
+            own)
+    x = jax.tree.map(jnp.add, state.x, own)
+    s = jax.tree.map(jnp.add, state.s, nb)
     return SDMFusedState(x=x, s=s, step=state.step + 1)
 
 

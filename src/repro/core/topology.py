@@ -30,6 +30,9 @@ __all__ = [
     "directed_erdos_renyi",
     "random_matchings",
     "by_name",
+    "placement_cost",
+    "greedy_placement",
+    "apply_placement",
     "laplacian_consensus_matrix",
     "metropolis_hastings_weights",
     "column_stochastic_weights",
@@ -320,6 +323,90 @@ def erdos_renyi(n: int, p_connect: float = 0.35, seed: int = 0,
                              laplacian_consensus_matrix(adj))
         rng = np.random.default_rng(seed + attempt + 1)
     raise RuntimeError("could not sample a connected ER graph")
+
+
+# --------------------------------------------------------------------------
+# Schedule-aware placement: renumber nodes to hug the ICI ring.
+# --------------------------------------------------------------------------
+#
+# A ppermute round moves each edge's payload across the PHYSICAL
+# interconnect; on a 1-D ICI ring the payload between devices a and b
+# traverses min(|a-b|, n-|a-b|) hops, and every hop beyond the first is
+# a store-and-forward through an intermediate device (serialized
+# latency + doubled link occupancy). The gossip graph is LOGICAL — the
+# mapping of logical node i to physical device order[i] is ours to
+# choose, so high-traffic shifts should land on nearest-neighbour
+# permutations. ``greedy_placement`` hill-climbs over pairwise swaps of
+# the assignment and by construction never returns a placement worse
+# than the identity (ROADMAP's "schedule-aware placement" item).
+
+def placement_cost(adjacency: np.ndarray,
+                   order: np.ndarray | None = None) -> int:
+    """Extra (non-nearest-neighbour) ICI ring hops per gossip step.
+
+    ``order[i]`` is the physical device logical node i is placed on;
+    identity when omitted. Each directed edge (j -> i) costs
+    ``ring_distance(order[i], order[j]) - 1`` extra hops, so a graph
+    whose every edge lands on physically adjacent devices costs 0.
+    """
+    adj = np.asarray(adjacency)
+    n = adj.shape[0]
+    pos = np.arange(n) if order is None else np.asarray(order)
+    if sorted(pos.tolist()) != list(range(n)):
+        raise ValueError("order must be a permutation of range(n)")
+    rows, cols = np.nonzero(adj)
+    dist = np.abs(pos[rows] - pos[cols])
+    dist = np.minimum(dist, n - dist)
+    return int(np.sum(dist - 1))
+
+
+def greedy_placement(topo_or_adj, max_passes: int = 8) -> np.ndarray:
+    """Greedy pairwise-swap renumbering minimizing ``placement_cost``.
+
+    Accepts a Topology/DirectedTopology or a raw adjacency matrix.
+    Hill-climbs: repeatedly applies the single swap with the best cost
+    reduction until a pass finds none (or ``max_passes`` passes ran).
+    Monotone by construction — the returned placement NEVER costs more
+    than the identity, so already-optimal layouts (ring, torus rows on a
+    matching ICI) are left at their optimum.
+    """
+    adj = np.asarray(getattr(topo_or_adj, "adjacency", topo_or_adj))
+    n = adj.shape[0]
+    order = np.arange(n)
+    best = placement_cost(adj, order)
+    for _ in range(max_passes):
+        improved = False
+        for a in range(n - 1):
+            for b in range(a + 1, n):
+                order[a], order[b] = order[b], order[a]
+                cost = placement_cost(adj, order)
+                if cost < best:
+                    best = cost
+                    improved = True
+                else:
+                    order[a], order[b] = order[b], order[a]
+        if not improved or best == 0:
+            break
+    return order
+
+
+def apply_placement(topo, order: np.ndarray):
+    """Renumber a (Directed)Topology: logical node i -> index order[i].
+
+    Returns the same topology type with adjacency and weights permuted
+    consistently (A'[order[i], order[j]] = A[i, j]), so the spectrum —
+    and therefore every convergence quantity — is untouched; only the
+    cyclic-shift decomposition (and hence the ppermute hop pattern)
+    changes.
+    """
+    order = np.asarray(order)
+    n = topo.n_nodes
+    perm = np.empty(n, dtype=np.int64)
+    perm[order] = np.arange(n)   # row/col gather: new index k holds old perm[k]
+    adj = np.asarray(topo.adjacency)[np.ix_(perm, perm)]
+    w = np.asarray(topo.weights)[np.ix_(perm, perm)]
+    return dataclasses.replace(topo, name=f"{topo.name}_placed",
+                               adjacency=adj, weights=w)
 
 
 # --------------------------------------------------------------------------

@@ -51,7 +51,8 @@ def build_case(arch: str, shape_name: str, mesh_name: str, method: str,
                probes: bool = True, sdm_overrides: dict | None = None,
                cfg_overrides: dict | None = None,
                rule_overrides: dict | None = None, smoke: bool = False,
-               topology: str = "ring") -> dict:
+               topology: str = "ring",
+               compressor: str | None = None) -> dict:
     import jax
 
     from repro import configs
@@ -82,14 +83,17 @@ def build_case(arch: str, shape_name: str, mesh_name: str, method: str,
               "n_periods": cfg.n_periods}
     record.update(_measure(cfg, case, mesh, node_axes, method,
                            gossip_mode, shape_name, sdm_overrides,
-                           rule_overrides=rule_overrides, topology=topology))
+                           rule_overrides=rule_overrides, topology=topology,
+                           compressor=compressor))
     if probes:
         p1 = _measure(_probe_cfg(cfg, 1), case, mesh, node_axes, method,
                       gossip_mode, shape_name, sdm_overrides, cost_only=True,
-                      rule_overrides=rule_overrides, topology=topology)
+                      rule_overrides=rule_overrides, topology=topology,
+                      compressor=compressor)
         p2 = _measure(_probe_cfg(cfg, 2), case, mesh, node_axes, method,
                       gossip_mode, shape_name, sdm_overrides, cost_only=True,
-                      rule_overrides=rule_overrides, topology=topology)
+                      rule_overrides=rule_overrides, topology=topology,
+                      compressor=compressor)
         record["probe1"] = p1
         record["probe2"] = p2
     record["model_params"] = cfg.param_count()
@@ -119,7 +123,8 @@ def _measure(cfg, case, mesh, node_axes, method: str, gossip_mode: str,
              shape_name: str, sdm_overrides: dict | None = None,
              cost_only: bool = False,
              rule_overrides: dict | None = None,
-             topology: str = "ring") -> dict:
+             topology: str = "ring",
+             compressor: str | None = None) -> dict:
     import jax
     import jax.numpy as jnp
 
@@ -135,7 +140,8 @@ def _measure(cfg, case, mesh, node_axes, method: str, gossip_mode: str,
     if case.kind == "train":
         cfg = dataclasses.replace(cfg, remat=True)
         sdm_kw = dict(p=0.1, theta=0.25, gamma=1e-3, sigma=1.0,
-                      clip_c=5.0, mode=gossip_mode, pack_block=1024)
+                      clip_c=5.0, mode=gossip_mode, pack_block=1024,
+                      compressor=compressor)
         sdm_kw.update(sdm_overrides or {})
         tc = steps_mod.DistributedTrainConfig(
             model=cfg, sdm=SDMConfig(**sdm_kw), method=method,
@@ -228,7 +234,11 @@ def main() -> int:
     ap.add_argument("--algorithm", default=None,
                     help="deprecated alias of --method")
     ap.add_argument("--gossip-mode", default="fixedk_packed",
-                    choices=["bernoulli", "fixedk_packed", "fixedk_rows"])
+                    choices=["bernoulli", "fixedk_packed", "fixedk_rows",
+                             "qsgd"])
+    ap.add_argument("--compressor", default=None,
+                    help="wire compressor spec (repro.core.compressor); "
+                         "overrides --gossip-mode, reaches gradient-push")
     ap.add_argument("--topology", default="ring",
                     help="gossip graph spec (gossip.sequence_by_name)")
     ap.add_argument("--smoke", action="store_true",
@@ -258,7 +268,8 @@ def main() -> int:
                     build_case(arch, shape_name, mesh_name, method,
                                args.gossip_mode, args.out,
                                probes=not args.no_probes,
-                               smoke=args.smoke, topology=args.topology)
+                               smoke=args.smoke, topology=args.topology,
+                               compressor=args.compressor)
                 except Exception:
                     failures.append((arch, shape_name, mesh_name))
                     traceback.print_exc()

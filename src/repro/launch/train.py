@@ -38,7 +38,14 @@ def main() -> None:
     ap.add_argument("--sigma", type=float, default=0.0)
     ap.add_argument("--clip-c", type=float, default=None)
     ap.add_argument("--gossip-mode", default="bernoulli",
-                    choices=["bernoulli", "fixedk_packed", "fixedk_rows"])
+                    choices=["bernoulli", "fixedk_packed", "fixedk_rows",
+                             "qsgd"])
+    ap.add_argument("--compressor", default=None,
+                    help="wire compressor spec (repro.core.compressor): "
+                         "bernoulli | fixedk[:block] | block:<B> | rows | "
+                         "qsgd[:bits]; overrides --gossip-mode; for "
+                         "gradient-push switches on error-compensated "
+                         "compressed push-sum")
     ap.add_argument("--topology", default="ring",
                     help="gossip graph over the node axis: ring | torus | "
                          "torusRxC | er | er:<p_c> | star | complete | "
@@ -76,11 +83,12 @@ def main() -> None:
     batch = args.global_batch or max(n_nodes, 2 * n_nodes)
     seq = args.seq_len or 64 if args.smoke else 4096
 
+    sdm_cfg = SDMConfig(p=args.p, theta=args.theta, gamma=args.gamma,
+                        sigma=args.sigma, clip_c=args.clip_c,
+                        mode=args.gossip_mode, compressor=args.compressor)
     tc = steps_mod.DistributedTrainConfig(
         model=cfg,
-        sdm=SDMConfig(p=args.p, theta=args.theta, gamma=args.gamma,
-                      sigma=args.sigma, clip_c=args.clip_c,
-                      mode=args.gossip_mode),
+        sdm=sdm_cfg,
         topology=args.topology,
         topology_seed=args.topology_seed,
         method=meth_name,
@@ -89,6 +97,7 @@ def main() -> None:
 
     print(f"arch={cfg.name} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
           f"nodes={n_nodes} method={meth_name} p={args.p} theta={args.theta} "
+          f"compressor={args.compressor or sdm_cfg.mode} "
           f"topology={sched.name} gossip_rounds={sched.n_rounds}"
           + (f" time_varying_L={sched.length}" if sched.length > 1 else ""))
 

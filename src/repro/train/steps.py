@@ -129,19 +129,19 @@ def gossip_schedule(tc: DistributedTrainConfig, mesh: Mesh
 def state_shape_dtype(tc: DistributedTrainConfig, mesh: Mesh):
     """ShapeDtypeStructs of the stacked method state (dry-run lowering)."""
     n_nodes = _n_nodes(mesh)
-    meth, _ = tc.resolved()
+    meth, mcfg = tc.resolved()
     shapes = transformer.param_shapes(tc.model)
     mk = lambda s: jax.ShapeDtypeStruct((n_nodes,) + tuple(s), tc.param_dtype)
     x = jax.tree.map(mk, shapes,
                      is_leaf=lambda v: isinstance(v, tuple) and
                      all(isinstance(e, int) for e in v))
-    return method_mod.state_shape_dtype(meth, x)
+    return method_mod.state_shape_dtype(meth, x, mcfg)
 
 
 def state_shardings(tc: DistributedTrainConfig, mesh: Mesh):
     """NamedShardings for the stacked distributed state."""
     node_axes = _node_axes(mesh)
-    meth, _ = tc.resolved()
+    meth, mcfg = tc.resolved()
     rules = MeshRules(mesh, outer_rules(node_axes))
     axes = transformer.param_axes(tc.model)
     shapes = transformer.param_shapes(tc.model)
@@ -154,7 +154,7 @@ def state_shardings(tc: DistributedTrainConfig, mesh: Mesh):
     x = jax.tree.map(leaf_sharding, axes, shapes, is_leaf=is_axes)
     node_vec = NamedSharding(mesh, P(node_axes if len(node_axes) > 1
                                      else node_axes[0]))
-    return method_mod.state_shardings(meth, x, node_vec)
+    return method_mod.state_shardings(meth, x, node_vec, mcfg)
 
 
 def init_distributed_state(tc: DistributedTrainConfig, mesh: Mesh,

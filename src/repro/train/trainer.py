@@ -27,6 +27,8 @@ PyTree = Any
 class TrainResult:
     losses: List[float]
     comm_elements: List[int]     # cumulative non-zero elements transmitted
+    comm_bits: List[int]         # cumulative wire bits (compressor-exact:
+    #                              index side-channels, quantized widths)
     epsilons: List[float]
     eval_accuracy: List[float]
     wall_s: float
@@ -70,6 +72,7 @@ def run_decentralized(
     sim = meth.make_reference(seq, cfg)
     per_node = jax.tree.map(lambda x: x[0], params_stack)
     per_step_elems = meth.transmitted_elements(per_node, cfg)
+    per_step_bits = method_mod.transmitted_bits(meth, per_node, cfg)
 
     state = sim.init(params_stack)
     key = jax.random.PRNGKey(seed)
@@ -79,15 +82,18 @@ def run_decentralized(
     def step_fn(state, batch, key):
         return sim.step(state, grad_fn, batch, key)
 
-    losses, comm, epss, accs = [], [], [], []
+    losses, comm, bits, epss, accs = [], [], [], [], []
     total_elems = 0
+    total_bits = 0
     for t in range(steps):
         key, sub = jax.random.split(key)
         batch = next(batches)
         state, loss = step_fn(state, batch, sub)
         losses.append(float(loss))
         total_elems += per_step_elems * n_nodes
+        total_bits += per_step_bits * n_nodes
         comm.append(total_elems)
+        bits.append(total_bits)
         if accountant is not None:
             accountant.step()
             epss.append(accountant.epsilon)
@@ -103,5 +109,6 @@ def run_decentralized(
             if accs:
                 msg += f" acc {accs[-1]:.4f}"
             print(msg, flush=True)
-    return TrainResult(losses=losses, comm_elements=comm, epsilons=epss,
-                       eval_accuracy=accs, wall_s=time.time() - t0)
+    return TrainResult(losses=losses, comm_elements=comm, comm_bits=bits,
+                       epsilons=epss, eval_accuracy=accs,
+                       wall_s=time.time() - t0)

@@ -33,7 +33,10 @@ STEPS = 12
 BASE_KEY = jax.random.PRNGKey(42)
 
 # (method, topology spec, gossip mode) — mode "-" for full-state methods.
-# "sdm-dsgd:het" marks the heterogeneous per-node-p variant.
+# "sdm-dsgd:het" marks the heterogeneous per-node-p variant. For
+# gradient-push a non-"-" mode is a COMPRESSOR SPEC (repro.core.compressor):
+# the error-compensated compressed push-sum variant rides the generic
+# exchange_payload transport. "qsgd" cases exercise the int8 quantizer.
 CASES = {
     "sdm_core": [
         ("sdm-dsgd", "ring8", "bernoulli"),
@@ -62,7 +65,20 @@ CASES = {
         ("allreduce", "ring8", "-"),
         ("allreduce", "er8", "-"),
     ],
+    "compressed": [
+        ("gradient-push", "dring8", "bernoulli"),
+        ("gradient-push", "dring8", "fixedk"),
+        ("gradient-push", "der8", "fixedk"),
+        ("gradient-push", "der8", "qsgd"),
+        ("sdm-dsgd", "ring8", "qsgd"),
+        ("sdm-dsgd:het", "ring8", "fixedk_packed"),
+        ("sdm-dsgd:het", "torus2x2", "fixedk_packed"),
+    ],
 }
+
+# wire bits per element of each HLO dtype that can cross a permute
+DTYPE_BITS = {"f32": 32, "bf16": 16, "f16": 16, "s32": 32, "u32": 32,
+              "s8": 8, "u8": 8, "pred": 8}
 
 
 def parse_seq(spec: str) -> gossip.ScheduleSequence:
@@ -89,7 +105,10 @@ def make_cfg(meth_key: str, meth, mode: str, n: int):
         return meth.coerce_config(sdm_dsgd.SDMConfig(
             p=p, theta=0.15, gamma=0.2, sigma=0.0, clip_c=1.0, mode=mode))
     if meth.config_cls is gradient_push.GradientPushConfig:
-        return gradient_push.GradientPushConfig(gamma=0.2)
+        # a non-"-" mode is a compressor spec: the error-compensated
+        # compressed push-sum variant
+        return gradient_push.GradientPushConfig(
+            gamma=0.2, compressor=None if mode == "-" else mode, p=0.25)
     return baselines.DSGDConfig(gamma=0.2)
 
 
@@ -178,24 +197,50 @@ def run_case(meth_key: str, topo_spec: str, mode: str) -> None:
     line = (f"CASE {case_id} MAXERR {err} SCALE {scale} "
             f"HAS_CPERM {'collective-permute' in hlo}")
 
-    if mode in ("fixedk_packed", "fixedk_rows"):
-        payload = 0
+    def permute_payloads():
+        """(f32_elems, bits) of every collective-permute result in the HLO."""
+        out = []
         for hline in hlo.splitlines():
             # Result shapes precede the op name; sync lowering emits
             # `= f32[k,b]{..} collective-permute(`, async a tuple form.
             for op in (" collective-permute(", " collective-permute-start("):
                 if op in hline:
                     result_part = hline.split(op)[0]
-                    for shape_str in re.findall(r"f32\[([\d,]*)\]",
-                                                result_part):
+                    f32_elems, bits = 0, 0
+                    for dt, shape_str in re.findall(
+                            r"(f32|bf16|f16|s32|u32|s8|u8|pred)\[([\d,]*)\]",
+                            result_part):
                         dims = [int(v) for v in shape_str.split(",") if v]
-                        payload = max(payload, int(np.prod(dims or [1])))
-        kb = sparsifier.num_kept(DIM, cfg.p)
+                        elems = int(np.prod(dims or [1]))
+                        if dt == "f32":
+                            f32_elems = max(f32_elems, elems)
+                        bits += elems * DTYPE_BITS[dt]
+                    out.append((f32_elems, bits))
+        return out
+
+    if mode in ("fixedk_packed", "fixedk_rows"):
+        payload = max((p_ for p_, _ in permute_payloads()), default=0)
+        # het-p pads the wire payload to the max-k across nodes
+        p_worst = max(cfg.p) if isinstance(cfg.p, tuple) else cfg.p
+        kb = sparsifier.num_kept(DIM, p_worst)
         # Satellite check: ONE batched sender top_k per (leaf, branch) +
         # one for the node's own indices — not one sort per shift round.
         sorts = hlo.count(" sort(") + hlo.count(" sort.")
         line += (f" WIRE_ELEMS {payload} EXPECTED_WIRE_ELEMS {kb}"
                  f" SORT_COUNT {sorts} MAX_SORTS {1 + seq.length}")
+    elif mode.split(":")[0] in ("fixedk", "block", "qsgd"):
+        # compressed gradient-push / sdm qsgd: the exchange_payload
+        # transport. Assert the largest single wire payload stays at the
+        # compressed size: k*32 value bits for fixed-k (indices ship as a
+        # separate equal-sized s32 leaf — the explicit index overhead),
+        # 8 bits/coord for the int8 quantizer. (bernoulli ships the dense
+        # masked tensor, nothing to bound.)
+        max_bits = max((b for _, b in permute_payloads()), default=0)
+        if mode.split(":")[0] == "qsgd":
+            exp_bits = DIM * 8
+        else:
+            exp_bits = sparsifier.num_kept(DIM, 0.25) * 32
+        line += f" WIRE_BITS {max_bits} MAX_WIRE_BITS {exp_bits}"
     print(line, flush=True)
 
 

@@ -71,3 +71,63 @@ def test_dcdsgd_threshold_monotone():
     assert ths == sorted(ths, reverse=True)
     # p = 0.2 is below the threshold for typical graphs -> DC-DSGD invalid
     assert theory.dcdsgd_min_p(TOPOS["er50"].lambda_n) > 0.2
+
+
+# ---------------------------------------------------------------------------
+# Schedule-aware placement (ICI ring hop minimization).
+# ---------------------------------------------------------------------------
+
+def test_placement_cost_ring_is_zero():
+    """Every ring edge lands on physically adjacent devices: 0 extra hops."""
+    assert topology.placement_cost(TOPOS["ring8"].adjacency) == 0
+    # and greedy never leaves the optimum
+    order = topology.greedy_placement(TOPOS["ring8"])
+    assert topology.placement_cost(TOPOS["ring8"].adjacency, order) == 0
+
+
+@pytest.mark.parametrize("topo_fn", [
+    lambda: topology.ring(8),
+    lambda: topology.torus_2d(2, 4),
+    lambda: topology.torus_2d(4, 4),
+    lambda: topology.erdos_renyi(10, 0.35, seed=1),
+    lambda: topology.star(8),
+    lambda: topology.directed_ring(8),
+])
+def test_greedy_placement_never_increases_hops(topo_fn):
+    """The ISSUE's contract: greedy renumbering is monotone — hop count
+    never increases vs the identity placement, on any graph."""
+    topo = topo_fn()
+    identity = topology.placement_cost(topo.adjacency)
+    order = topology.greedy_placement(topo)
+    assert topology.placement_cost(topo.adjacency, order) <= identity
+
+
+def test_greedy_placement_recovers_shuffled_ring():
+    """A randomly renumbered ring costs extra hops; greedy must find a
+    placement at (or near) the physical-ring optimum of zero."""
+    rng = np.random.default_rng(3)
+    shuffled = topology.apply_placement(topology.ring(8), rng.permutation(8))
+    assert topology.placement_cost(shuffled.adjacency) > 0
+    order = topology.greedy_placement(shuffled)
+    assert topology.placement_cost(shuffled.adjacency, order) == 0
+
+
+def test_apply_placement_preserves_spectrum_and_validity():
+    topo = topology.torus_2d(2, 4)
+    order = np.random.default_rng(0).permutation(8)
+    placed = topology.apply_placement(topo, order)   # __post_init__ validates
+    np.testing.assert_allclose(placed.eigenvalues, topo.eigenvalues,
+                               atol=1e-9)
+    assert placed.beta == pytest.approx(topo.beta)
+    # the edge (i, j) maps to (order[i], order[j])
+    adj = np.asarray(topo.adjacency)
+    padj = np.asarray(placed.adjacency)
+    for i in range(8):
+        for j in range(8):
+            assert padj[order[i], order[j]] == adj[i, j]
+
+
+def test_placement_cost_rejects_non_permutation():
+    with pytest.raises(ValueError, match="permutation"):
+        topology.placement_cost(TOPOS["ring8"].adjacency,
+                                np.array([0, 1, 1, 3, 4, 5, 6, 7]))

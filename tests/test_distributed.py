@@ -15,11 +15,19 @@ Coverage per group:
   baselines     — full-state DSGD (incl. a time-varying sequence),
                   gradient-push on DIRECTED graphs (push-sum
                   de-biasing), and allreduce.
+  compressed    — the Compressor layer: error-compensated compressed
+                  gradient-push (bernoulli/fixedk payloads over
+                  dring/der via the generic exchange_payload transport),
+                  the int8 QSGD quantizer (sdm + push-sum), and
+                  heterogeneous per-node p in fixed-k mode
+                  (pad-to-max-k payloads).
 
 Packed cases additionally assert the wire payload stays at the fixed-k
-fraction regardless of graph degree, and that sender index sets come
-from the per-step BATCHED draw (sort count bounded by schedules, not by
-shift rounds).
+fraction regardless of graph degree (max-k across nodes for het-p), and
+that sender index sets come from the per-step BATCHED draw (sort count
+bounded by schedules, not by shift rounds). Compressed-payload cases
+assert the largest single collective-permute payload stays at the
+compressed bit size (k*32 for fixed-k values, 8 bits/coord for qsgd).
 """
 import pathlib
 import re
@@ -53,7 +61,8 @@ def _run_group(group: str) -> list[dict]:
     return cases
 
 
-@pytest.mark.parametrize("group", ["sdm_core", "sdm_variants", "baselines"])
+@pytest.mark.parametrize("group", ["sdm_core", "sdm_variants", "baselines",
+                                   "compressed"])
 def test_method_parity_sweep(group):
     cases = _run_group(group)
     for c in cases:
@@ -65,3 +74,7 @@ def test_method_parity_sweep(group):
         if "WIRE_ELEMS" in c:
             assert c["WIRE_ELEMS"] == c["EXPECTED_WIRE_ELEMS"], c
             assert int(c["SORT_COUNT"]) <= int(c["MAX_SORTS"]), c
+        if "WIRE_BITS" in c:
+            # compressed payloads: biggest single permute stays at the
+            # compressed size (<= p * dense + the separate index leaf)
+            assert 0 < int(c["WIRE_BITS"]) <= int(c["MAX_WIRE_BITS"]), c

@@ -39,6 +39,36 @@ def test_dryrun_decode_case():
     _run("rwkv6-3b", "long_500k")   # cheapest decode case
 
 
+PAIR_SCRIPT = """
+from repro.launch.dryrun import build_case
+rec = build_case("gemma2-2b", "train_4k", "1x1", {method!r}, "bernoulli",
+                 out_root="", verbose=False, probes=False, smoke=True,
+                 compressor={comp!r})
+assert rec["status"] == "ok", rec
+print("PAIR_OK", {method!r}, {comp!r})
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method,comp", [
+    ("gradient-push", "fixedk"),     # compressed push-sum state templates
+    ("sdm-dsgd", "qsgd:8"),          # int8 payload transport
+    ("sdm-dsgd-fused", "block:128"), # block granularity through the fused step
+    ("dsgd", "fixedk"),              # compressor ignored by full-state methods
+])
+def test_dryrun_method_compressor_pair(method, comp):
+    """The CI (method x compressor) loop's representative pairs: every
+    pair must at least lower + compile on the 1-device smoke mesh."""
+    out = subprocess.run(
+        [sys.executable, "-c", PAIR_SCRIPT.format(method=method, comp=comp)],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": "cpu"},
+        timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "PAIR_OK" in out.stdout
+
+
 @pytest.mark.slow
 def test_dryrun_skip_case():
     out = subprocess.run(

@@ -161,8 +161,12 @@ def test_sdm_config_per_node_p():
     cfg = sdm_dsgd.SDMConfig(p=(0.1, 0.2, 0.4), theta=0.05)
     assert cfg.p_min == 0.1 and cfg.p_max == 0.4
     assert float(cfg.p_of(2)) == pytest.approx(0.4)
-    with pytest.raises(ValueError, match="bernoulli"):
-        sdm_dsgd.SDMConfig(p=(0.1, 0.2), mode="fixedk_packed")
+    # fixed-k modes now take per-node p too (pad-to-max-k payloads)...
+    cfg_k = sdm_dsgd.SDMConfig(p=(0.1, 0.2), mode="fixedk_packed")
+    assert cfg_k.p_max == 0.2
+    # ...but rows mode keeps static per-leaf row counts
+    with pytest.raises(ValueError, match="pad-to-max-k"):
+        sdm_dsgd.SDMConfig(p=(0.1, 0.2), mode="fixedk_rows")
     with pytest.raises(ValueError):
         sdm_dsgd.SDMConfig(p=(0.1, 0.0))
 
