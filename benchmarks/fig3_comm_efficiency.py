@@ -43,9 +43,10 @@ def run(comm_budget_elems: int = 60_000_000, gamma: float = 0.05,
         meth = method_mod.get(name)
         raw = _cfg_for(meth.name, topo, gamma)
         cfg = meth.coerce_config(raw)
-        per_step = meth.transmitted_elements(per_node, cfg) * topo.n_nodes
+        per_step = method_mod.transmitted_elements(
+            meth, per_node, cfg, seq=topo) * topo.n_nodes
         per_step_bits = method_mod.transmitted_bits(
-            meth, per_node, cfg) * topo.n_nodes
+            meth, per_node, cfg, seq=topo) * topo.n_nodes
         steps = max(10, comm_budget_elems // per_step)
         res = run_decentralized(topo=topo, algorithm=meth.name, sdm_cfg=cfg,
                                 params_stack=params, grad_fn=grad_fn,

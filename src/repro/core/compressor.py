@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from fractions import Fraction
 from typing import Any, Callable, Dict, Tuple
 
 import jax
@@ -65,8 +66,11 @@ __all__ = [
     "names",
     "register",
     "index_bits",
+    "node_mean_exact",
     "tree_wire_elements",
     "tree_wire_bits",
+    "tree_wire_elements_exact",
+    "tree_wire_bits_exact",
 ]
 
 
@@ -192,12 +196,15 @@ class Compressor:
     # Exact (possibly fractional) per-leaf expectations, so tree-level
     # accounting rounds ONCE over the whole tree instead of per leaf
     # (round(p*d_total), the paper's Fig-3 convention) — deterministic
-    # compressors just return their integer counts.
-    def wire_elements_exact(self, shape, node=None) -> float:
+    # compressors just return their integer counts; probabilistic ones
+    # return exact ``Fraction``s (p parsed via repr, so 0.3 * d is 3d/10
+    # and cross-node means in het-p accounting cannot drift by float
+    # rounding).
+    def wire_elements_exact(self, shape, node=None) -> "Fraction | float":
         return float(self.wire_elements(shape, node=node))
 
     def wire_bits_exact(self, shape, *, value_bits=32, index_sync=False,
-                        node=None) -> float:
+                        node=None) -> "Fraction | float":
         return float(self.wire_bits(shape, value_bits=value_bits,
                                     index_sync=index_sync, node=node))
 
@@ -227,14 +234,14 @@ class BernoulliCompressor(Compressor):
     def decompress(self, payload: Payload) -> jax.Array:
         return payload.values
 
-    def wire_elements_exact(self, shape, node=None) -> float:
-        return self._p_static(node) * math.prod(shape)
+    def wire_elements_exact(self, shape, node=None) -> Fraction:
+        return Fraction(repr(self._p_static(node))) * math.prod(shape)
 
     def wire_elements(self, shape, node=None) -> int:
         return int(round(self.wire_elements_exact(shape, node)))
 
     def wire_bits_exact(self, shape, *, value_bits=32, index_sync=False,
-                        node=None) -> float:
+                        node=None) -> Fraction:
         d = int(math.prod(shape))
         per = value_bits + (0 if index_sync else index_bits(d))
         return self.wire_elements_exact(shape, node) * per
@@ -482,22 +489,58 @@ def make(spec: str, p: "float | Tuple[float, ...]" = 0.2) -> Compressor:
 # Tree-level accounting helpers.
 # ==========================================================================
 
+def node_mean_exact(p, per_node_fn) -> "Fraction | float":
+    """Across-node EXACT mean of per-node accounting expectations.
+
+    The het-p Fig-3 convention (network total = mean * n_nodes), shared
+    by SDM and push-sum accounting: with a per-node ``p`` tuple the mean
+    is taken over the UNrounded per-node values so the caller can fold
+    in further exact factors (schedule degree) and round ONCE — a
+    per-node round followed by a rounded mean can drift +-1 element from
+    the tree-level round(p * d_total) convention. Scalar ``p`` calls
+    ``per_node_fn(None)`` straight through.
+    """
+    if isinstance(p, tuple):
+        vals = [per_node_fn(i) for i in range(len(p))]
+        return sum(vals) / len(vals)
+    return per_node_fn(None)
+
+
+def tree_wire_elements_exact(comp: Compressor, params,
+                             node: int | None = None) -> "Fraction | float":
+    """UNrounded informative elements per step over a pytree.
+
+    Fractional expectations (bernoulli) sum EXACTLY across leaves
+    (Fractions); callers fold in any further exact factors (across-node
+    het-p means, per-link schedule degree) before rounding ONCE.
+    """
+    return sum(comp.wire_elements_exact(tuple(x.shape), node=node)
+               for x in jax.tree.leaves(params))
+
+
 def tree_wire_elements(comp: Compressor, params, node: int | None = None
                        ) -> int:
     """Informative elements one node transmits per step over a pytree.
 
-    Fractional expectations (bernoulli) sum EXACTLY across leaves and
-    round once — round(p * d_total), the paper's Fig-3 convention —
-    while packed/quantized counts are already integers per leaf.
+    Rounds the exact sum once — round(p * d_total), the paper's Fig-3
+    convention — while packed/quantized counts are already integers.
     """
-    return int(round(sum(comp.wire_elements_exact(tuple(x.shape), node=node)
-                         for x in jax.tree.leaves(params))))
+    return int(round(tree_wire_elements_exact(comp, params, node=node)))
+
+
+def tree_wire_bits_exact(comp: Compressor, params, *, value_bits: int = 32,
+                         index_sync: bool = False,
+                         node: int | None = None) -> "Fraction | float":
+    """UNrounded wire bits per step over a pytree (see elements variant)."""
+    return sum(
+        comp.wire_bits_exact(tuple(x.shape), value_bits=value_bits,
+                             index_sync=index_sync, node=node)
+        for x in jax.tree.leaves(params))
 
 
 def tree_wire_bits(comp: Compressor, params, *, value_bits: int = 32,
                    index_sync: bool = False, node: int | None = None) -> int:
     """Exact wire bits one node transmits per step over a pytree."""
-    return int(round(sum(
-        comp.wire_bits_exact(tuple(x.shape), value_bits=value_bits,
-                             index_sync=index_sync, node=node)
-        for x in jax.tree.leaves(params))))
+    return int(round(tree_wire_bits_exact(comp, params,
+                                          value_bits=value_bits,
+                                          index_sync=index_sync, node=node)))

@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from fractions import Fraction
 from typing import Sequence, Tuple
 
 import jax
@@ -65,6 +66,13 @@ __all__ = [
     "PermuteSchedule",
     "ScheduleRound",
     "ScheduleSequence",
+    "UnionRound",
+    "UnionSchedule",
+    "union_schedule",
+    "needs_replicas",
+    "weight_invariant",
+    "mean_out_degree",
+    "replica_recv_weights",
     "schedule_from_topology",
     "sequence_from_topologies",
     "sequence_by_name",
@@ -76,6 +84,10 @@ __all__ = [
     "exchange_payload",
     "exchange_packed",
     "exchange_packed_rows",
+    "union_exchange",
+    "union_exchange_payload",
+    "union_exchange_packed",
+    "union_exchange_packed_rows",
     "ring_exchange",
     "ring_weighted_neighbor_sum",
     "ring_exchange_packed",
@@ -286,6 +298,248 @@ def sequence_by_name(spec: str, n_nodes: int, *,
     return ensure_sequence(schedule_from_topology(topo))
 
 
+# --------------------------------------------------------------------------
+# Union schedules: the replica-correct transport for time-varying sequences.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class UnionRound:
+    """One ppermute round of the UNION graph of a schedule sequence.
+
+    ``perm`` carries every directed edge with this cyclic shift that
+    appears in ANY round of the sequence; ``recv_weights[t][r]`` is the
+    weight W^{(t)}[r, (r - shift) % n] the edge carries at sequence
+    position t (zero when the edge is inactive that round — the payload
+    still crosses so the receiver's replica stays exact).
+    """
+
+    shift: int
+    perm: Tuple[Tuple[int, int], ...]
+    recv_weights: Tuple[Tuple[float, ...], ...]     # (L, n)
+
+
+@dataclasses.dataclass(frozen=True)
+class UnionSchedule:
+    """The union graph of a ScheduleSequence compiled to ppermute rounds.
+
+    The transport of the replica-correct time-varying executors: payloads
+    cross EVERY union edge EVERY round (so receivers see every increment
+    and per-neighbour public-copy replicas are exact by construction),
+    while the mixing weights vary with the sequence position. Delivery is
+    round-invariant, so no ``lax.switch`` is needed on this path — only
+    the (step % L)-indexed weight gather depends on the traced step.
+
+    Each round contributes at most one in-neighbour per node (the shift-s
+    sender of ``me`` is ``(me - s) % n``), so ``n_replicas`` replica
+    slots — one per union round, "tagged by sender round-position" —
+    index every possible in-neighbour with one static shape.
+    """
+
+    name: str
+    n_nodes: int
+    length: int
+    rounds: Tuple[UnionRound, ...]
+
+    @property
+    def n_replicas(self) -> int:
+        """Replica slots per node: one per union shift round."""
+        return len(self.rounds)
+
+    def mean_out_degree(self) -> Fraction:
+        """Mean (over nodes) union out-degree — payload transmissions per
+        node per gossip step on the replica transport (same every round)."""
+        edges = sum(len(rnd.perm) for rnd in self.rounds)
+        return Fraction(edges, self.n_nodes)
+
+
+@functools.lru_cache(maxsize=None)
+def union_schedule(seq: ScheduleSequence) -> UnionSchedule:
+    """Compile the union graph of ``seq`` with per-position edge weights."""
+    seq = ensure_sequence(seq)
+    n = seq.n_nodes
+    edges_by_shift: dict = {}
+    for sched in seq.schedules:
+        shifts = [rnd.shift for rnd in sched.rounds]
+        if len(shifts) != len(set(shifts)):
+            # the per-position weight table below keys on (shift, t); two
+            # same-shift rounds in one schedule would silently drop one
+            # round's weights (the static executors SUM deliveries per
+            # round, so they accept such schedules — we must not diverge
+            # silently). Factory schedules (shift_decomposition) are safe.
+            raise ValueError(
+                f"union_schedule: schedule {sched.name!r} has duplicate "
+                f"shifts {shifts}; merge same-shift rounds first")
+        for rnd in sched.rounds:
+            edges_by_shift.setdefault(rnd.shift, set()).update(rnd.perm)
+    rounds = []
+    for shift in sorted(edges_by_shift):
+        rw = []
+        for sched in seq.schedules:
+            w_t = (0.0,) * n
+            for rnd in sched.rounds:
+                if rnd.shift == shift:
+                    w_t = rnd.recv_weights
+            rw.append(tuple(w_t))
+        rounds.append(UnionRound(
+            shift=shift,
+            perm=tuple(sorted(edges_by_shift[shift])),
+            recv_weights=tuple(rw)))
+    return UnionSchedule(name=f"union({seq.name})", n_nodes=n,
+                         length=seq.length, rounds=tuple(rounds))
+
+
+@functools.lru_cache(maxsize=None)
+def weight_invariant(seq: ScheduleSequence) -> bool:
+    """True when every round of the sequence mixes with the SAME dense W.
+
+    Then incremental neighbour-sum bookkeeping is exact (the weights an
+    increment was folded with never differ from the current round's) and
+    the replica transport is unnecessary.
+    """
+    ws = seq.weights_stack()
+    return all(np.array_equal(ws[0], w) for w in ws[1:])
+
+
+def needs_replicas(seq) -> bool:
+    """Whether differential methods need per-neighbour replicas on ``seq``.
+
+    Static schedules (and weight-invariant sequences) keep the
+    incremental-``s`` fast path — byte-for-byte the pre-replica
+    trajectories; genuinely time-varying weights need exact public-copy
+    replicas for true W(t)-mixing.
+    """
+    seq = ensure_sequence(seq)
+    return seq.length > 1 and not weight_invariant(seq)
+
+
+def mean_out_degree(seq, *, union: bool = False,
+                    node: "int | None" = None) -> Fraction:
+    """Mean-over-rounds directed out-degree of the transport.
+
+    The per-link wire-accounting factor: how many copies of its payload a
+    node puts on the wire per gossip step — 2 for the symmetric ring, 1
+    for perfect-matching rounds, the union-graph degree for the replica
+    transport (``union=True``: every union edge carries the payload every
+    round). ``node=None`` averages over nodes (the network-mean
+    accounting convention); ``node=i`` counts node i's OWN out-edges
+    (out-degree varies per node on e.g. star graphs). Exact Fraction so
+    tree-level accounting can round ONCE.
+    """
+    seq = ensure_sequence(seq)
+
+    def count(perm) -> int:
+        if node is None:
+            return len(perm)
+        return sum(1 for src, _ in perm if src == node)
+
+    denom = 1 if node is not None else seq.n_nodes
+    if union:
+        u = union_schedule(seq)
+        return Fraction(sum(count(rnd.perm) for rnd in u.rounds), denom)
+    total = sum(sum(count(rnd.perm) for rnd in s.rounds)
+                for s in seq.schedules)
+    return Fraction(total, denom * seq.length)
+
+
+def replica_recv_weights(useq: UnionSchedule, me, step) -> jax.Array:
+    """(n_replicas,) weights W_{me, sender_k}(step) for the replica slots.
+
+    ``me`` and ``step`` may be traced; the (R, L, n) weight table is a
+    closed-over constant, so this lowers to one gather — no collectives,
+    no ``lax.switch``.
+    """
+    table = jnp.asarray([rnd.recv_weights for rnd in useq.rounds],
+                        jnp.float32)            # (R, L, n)
+    return table[:, step % useq.length, me]
+
+
+def union_exchange(useq: UnionSchedule, x: jax.Array, axis_name) -> jax.Array:
+    """ppermute ``x`` over every union round; (n_replicas, *x.shape) stack.
+
+    Row k is the increment received from the shift-s_k sender (ppermute's
+    implicit zeros where the union graph has no such in-edge — the slot's
+    weight is zero at every sequence position, so the unused replica is
+    never read).
+    """
+    return jnp.stack([jax.lax.ppermute(x, axis_name, rnd.perm)
+                      for rnd in useq.rounds])
+
+
+def union_exchange_payload(useq: UnionSchedule, payload, decompress,
+                           axis_name) -> jax.Array:
+    """Decompressed per-slot increments of a compressor payload.
+
+    The replica-transport sibling of ``exchange_payload``: the payload
+    pytree crosses every union round and the receiver decompresses each
+    round's delivery SEPARATELY (tagged by round position) instead of
+    folding a weighted sum — the caller adds row k onto replica slot k.
+    """
+    outs = []
+    for rnd in useq.rounds:
+        recv = jax.tree.map(
+            lambda v: jax.lax.ppermute(v, axis_name, rnd.perm), payload)
+        outs.append(decompress(recv))
+    return jnp.stack(outs)
+
+
+def _union_packed_exchange(useq: UnionSchedule, db: jax.Array, unpack, *,
+                           axis_name, base_key: jax.Array, step: jax.Array,
+                           p, node_index) -> Tuple[jax.Array, jax.Array]:
+    """Packed replica transport on a (2-D block view of a) leaf.
+
+    Selection/packing/scaling share ``_packed_selection`` with the
+    static ``_packed_exchange`` transport (same keys, same pad-to-max-k
+    heterogeneous-p payloads), but each union round's received values
+    are unpacked into their OWN increment row instead of a weighted sum
+    — one batched sender top_k per (leaf, step) regardless of sequence
+    length.
+    """
+    nb_blocks = db.shape[0]
+    me = _me(axis_name, node_index)
+    kb, my_idx, my_vals = _packed_selection(db, p, me, base_key=base_key,
+                                            step=step)
+    own_sparse = unpack(my_vals, my_idx)
+
+    sender_idx = _batched_sender_indices(
+        useq, me, base_key=base_key, step=step, nb=nb_blocks, kb=kb)
+    incr = jnp.stack([
+        unpack(jax.lax.ppermute(my_vals, axis_name, rnd.perm),
+               sender_idx[i])
+        for i, rnd in enumerate(useq.rounds)])
+    return own_sparse, incr
+
+
+def union_exchange_packed(useq: UnionSchedule, d_flat: jax.Array, *,
+                          axis_name, base_key: jax.Array, step: jax.Array,
+                          p, block: int = 1,
+                          node_index=None) -> Tuple[jax.Array, jax.Array]:
+    """Replica-transport packed gossip; returns (own_sparse, (R, dim) incr)."""
+    dim = d_flat.shape[0]
+    db = sparsifier.block_view(d_flat, block)
+    unpack = lambda vals, idx: jnp.zeros_like(db).at[idx].set(
+        vals).reshape(-1)[:dim]
+    return _union_packed_exchange(useq, db, unpack, axis_name=axis_name,
+                                  base_key=base_key, step=step, p=p,
+                                  node_index=node_index)
+
+
+def union_exchange_packed_rows(useq: UnionSchedule, d: jax.Array, *,
+                               axis_name, base_key: jax.Array,
+                               step: jax.Array, p,
+                               node_index=None
+                               ) -> Tuple[jax.Array, jax.Array]:
+    """Sharding-aligned packed replica transport (blocks = rows)."""
+    shape = d.shape
+    cols = shape[-1] if d.ndim > 1 else 1
+    rows = d.size // cols
+    db = d.reshape(rows, cols)
+    unpack = lambda vals, idx: jnp.zeros_like(db).at[idx].set(
+        vals).reshape(shape)
+    return _union_packed_exchange(useq, db, unpack, axis_name=axis_name,
+                                  base_key=base_key, step=step, p=p,
+                                  node_index=node_index)
+
+
 @functools.lru_cache(maxsize=None)
 def ring_schedule(n: int, self_weight: float | None = None) -> PermuteSchedule:
     """The symmetric ring as a schedule (2 rounds: shifts +1 and n-1)."""
@@ -431,15 +685,14 @@ def _batched_sender_indices(schedule: PermuteSchedule, me, *,
     return idx
 
 
-def _packed_exchange(seq: ScheduleSequence, db: jax.Array, unpack, *,
-                     axis_name, base_key: jax.Array, step: jax.Array,
-                     p, node_index) -> Tuple[jax.Array, jax.Array]:
-    """Shared engine for packed gossip on a (2-D block view of a) leaf.
+def _packed_selection(db: jax.Array, p, me, *, base_key: jax.Array,
+                      step: jax.Array) -> Tuple[int, jax.Array, jax.Array]:
+    """Sender-side packed payload selection: (kb, my_idx, my_vals).
 
-    ``unpack(vals, idx)`` densifies a packed payload back to the leaf's
-    original shape. Payload selection/packing is hoisted OUT of the
-    schedule branches (it depends only on (me, step)), so time-varying
-    sequences pay one packing + one switch over nb-sum branches.
+    The ONE implementation shared by the static (``_packed_exchange``)
+    and the replica/union (``_union_packed_exchange``) transports, so
+    their bit-equality contract (same keys, same pad-to-max-k payloads)
+    cannot desynchronize.
 
     ``p`` may be a per-node tuple: the payload then pads to
     k_max = max_i ceil(p_i * n_blocks) — every node draws k_max top-k
@@ -450,7 +703,6 @@ def _packed_exchange(seq: ScheduleSequence, db: jax.Array, unpack, *,
     ONE static shape while each node transmits its own budget.
     """
     nb_blocks = db.shape[0]
-    me = _me(axis_name, node_index)
     if isinstance(p, tuple):
         k_table = tuple(sparsifier.num_kept(nb_blocks, pi) for pi in p)
         kb = max(k_table)
@@ -460,10 +712,27 @@ def _packed_exchange(seq: ScheduleSequence, db: jax.Array, unpack, *,
     else:
         kb = sparsifier.num_kept(nb_blocks, p)
         scale = nb_blocks / kb
-
     my_idx = sparsifier.fixedk_indices(
         node_round_key(base_key, me, step), nb_blocks, kb)
     my_vals = (jnp.take(db, my_idx, axis=0) * scale).astype(db.dtype)
+    return kb, my_idx, my_vals
+
+
+def _packed_exchange(seq: ScheduleSequence, db: jax.Array, unpack, *,
+                     axis_name, base_key: jax.Array, step: jax.Array,
+                     p, node_index) -> Tuple[jax.Array, jax.Array]:
+    """Shared engine for packed gossip on a (2-D block view of a) leaf.
+
+    ``unpack(vals, idx)`` densifies a packed payload back to the leaf's
+    original shape. Payload selection/packing (``_packed_selection``) is
+    hoisted OUT of the schedule branches (it depends only on (me, step)),
+    so time-varying sequences pay one packing + one switch over nb-sum
+    branches.
+    """
+    nb_blocks = db.shape[0]
+    me = _me(axis_name, node_index)
+    kb, my_idx, my_vals = _packed_selection(db, p, me, base_key=base_key,
+                                            step=step)
     own_sparse = unpack(my_vals, my_idx)
 
     def nb_for(sched: PermuteSchedule, vals_out: jax.Array) -> jax.Array:

@@ -53,10 +53,18 @@ M is column-stochastic for any chi (columns: 1 - chi + chi = 1), so
 total mass is conserved exactly: sum x_{t+1} = sum x_half — the
 ``consensus`` = sum x / sum w invariant survives compression bit-exactly
 and only the per-node de-bias z_i carries bounded compression noise.
-Receivers track sum_{j != i} P_ij xhat_j incrementally (the ``s`` buffer,
-exactly like SDM's neighbour sum): s_i += sum_j P_ij delta_j as the
-weighted differentials arrive. The uncompressed path is untouched (it is
-exactly chi = 1 with the identity compressor).
+On static schedules receivers track sum_{j != i} P_ij xhat_j
+incrementally (the ``s`` buffer, exactly like SDM's neighbour sum):
+s_i += sum_j P_ij delta_j as the weighted differentials arrive —
+byte-for-byte the historical trajectories. On genuinely time-varying
+B-connected sequences the increments instead land in per-neighbour
+public-copy REPLICAS (``xhat_nb``, one slot per union-graph round, fed
+over every union edge every round so replicas are exact by
+construction) and s_i = sum_j P_ij(t) xhat_j is recomputed fresh with
+the CURRENT round's weights — so mass conservation and the consensus
+invariant hold on any P(t) sequence (the old code rejected the
+combination). The uncompressed path is untouched (it is exactly chi = 1
+with the identity compressor).
 
 Both executors compile from the same schedule object: the reference
 mixes with ``ScheduleSequence.weights_stack()`` and the distributed
@@ -73,7 +81,8 @@ import jax.numpy as jnp
 
 from repro.core import compressor as compressor_mod, gossip
 from repro.core.sdm_dsgd import (_leaf_keys, _payload_exchange_leaves,
-                                 masked_grad)
+                                 _replica_payload_exchange_leaves,
+                                 _replica_stack, masked_grad)
 
 __all__ = ["GradientPushConfig", "GradientPushState", "GradientPushReference",
            "init_push_state", "init_compressed_push_state",
@@ -122,7 +131,12 @@ class GradientPushState(NamedTuple):
     w: jax.Array     # push-sum weight (scalar per node; (n,) stacked)
     step: jax.Array
     xhat: PyTree = None   # public copy (compressed variant only)
-    s: PyTree = None      # incremental sum_{j != i} P_ij xhat_j (compressed)
+    s: PyTree = None      # sum_{j != i} P_ij xhat_j (compressed; incremental
+    #                       on static schedules, recomputed from replicas on
+    #                       time-varying ones)
+    xhat_nb: PyTree = None  # per-neighbour replica stack (compressed AND
+    #                         genuinely time-varying only; leading
+    #                         (n_replicas,) axis per leaf)
 
 
 def _debias(x_tree: PyTree, w) -> PyTree:
@@ -131,23 +145,6 @@ def _debias(x_tree: PyTree, w) -> PyTree:
         wb = jnp.reshape(w, w.shape + (1,) * (x.ndim - w.ndim))
         return (x / wb).astype(x.dtype)
     return jax.tree.map(one, x_tree)
-
-
-def _check_static_if_compressed(comp, seq: gossip.ScheduleSequence) -> None:
-    """Compressed push-sum requires a STATIC schedule.
-
-    The incremental neighbour sum s_i freezes each differential with the
-    weights of the round it was exchanged in; if P(t)'s diagonal varies
-    across rounds, sum_i x is no longer conserved and the documented
-    consensus invariant silently breaks — so the combination is rejected
-    instead (ROADMAP: a replica-correct variant would re-sync public
-    copies on topology change).
-    """
-    if comp is not None and seq.length > 1:
-        raise ValueError(
-            "compressed gradient-push needs a static schedule (got a "
-            f"time-varying sequence of length {seq.length}); the "
-            "incremental public-copy sum cannot track per-round weights")
 
 
 def _contraction_scale(comp: compressor_mod.Compressor, node=None):
@@ -183,7 +180,12 @@ class GradientPushReference:
         self._wstack = jnp.asarray(self.seq.weights_stack(), jnp.float32)
         self.weights = self._wstack[0]
         self.comp = cfg.make_compressor()
-        _check_static_if_compressed(self.comp, self.seq)
+        # genuinely time-varying P(t): recompute the neighbour sum fresh
+        # from the (exact) public-copy stack each round instead of the
+        # incremental frozen-weight sum (which is exact only when P is
+        # round-invariant — and stays the byte-identical fast path there).
+        self.replica_exact = (self.comp is not None
+                              and gossip.needs_replicas(self.seq))
 
     def init(self, params_stack: PyTree) -> GradientPushState:
         n = jax.tree.leaves(params_stack)[0].shape[0]
@@ -193,6 +195,11 @@ class GradientPushReference:
                                  step=jnp.zeros((), jnp.int32))
         if self.comp is None:
             return base
+        if self.replica_exact:
+            # the neighbour sum is recomputed fresh from the public-copy
+            # stack every step: no persistent s buffer (matching the
+            # distributed replica-path state layout).
+            return base._replace(xhat=params_stack)
         # Exact replica bookkeeping: s_0[i] = sum_{j != i} P_ij x_{j,0}.
         # (The distributed init assumes identical starts and reduces this
         # to rowsum_i * x_0 — the stacked reference needs no assumption.)
@@ -232,13 +239,22 @@ class GradientPushReference:
         delta_hat = jax.tree.map(roundtrip_stack, _leaf_keys(key, delta),
                                  delta)
         xhat = jax.tree.map(jnp.add, state.xhat, delta_hat)
-        # incremental neighbour sum: the weights of the round the
-        # differential was exchanged in (matches the distributed executor;
-        # exact whenever the sequence is static).
-        s = jax.tree.map(
-            lambda s_, dh: s_ + gossip.apply_weights_dense(
-                p_t, dh, include_self=False).astype(s_.dtype),
-            state.s, delta_hat)
+        if self.replica_exact:
+            # exact W(t)-mixing: the stacked xhat IS every node's public
+            # copy (what the distributed replicas reconstruct), so the
+            # neighbour sum uses the CURRENT round's weights, fresh —
+            # consumed by the x update below, never stored.
+            s = jax.tree.map(
+                lambda xh: gossip.apply_weights_dense(
+                    p_t, xh, include_self=False).astype(xh.dtype), xhat)
+        else:
+            # incremental neighbour sum: the weights of the round the
+            # differential was exchanged in (matches the distributed
+            # executor; exact because the schedule is static here).
+            s = jax.tree.map(
+                lambda s_, dh: s_ + gossip.apply_weights_dense(
+                    p_t, dh, include_self=False).astype(s_.dtype),
+                state.s, delta_hat)
         diag = jnp.diag(p_t)
         # x <- x_half + chi ((P - I) xhat); mass mixes with the SAME
         # damped column-stochastic operator so z = x / w stays de-biased.
@@ -248,8 +264,8 @@ class GradientPushReference:
                 + ss - xp),
             x_half, xhat, s)
         w = state.w + cfg.chi * (p_t @ state.w - state.w)
-        return GradientPushState(x=x, w=w, step=state.step + 1,
-                                 xhat=xhat, s=s), aux
+        return GradientPushState(x=x, w=w, step=state.step + 1, xhat=xhat,
+                                 s=None if self.replica_exact else s), aux
 
     def consensus_mean(self, state: GradientPushState) -> PyTree:
         """sum_i x_i / sum_i w_i — exact by mass conservation (the
@@ -270,11 +286,23 @@ def init_push_state(params: PyTree) -> GradientPushState:
                              step=jnp.zeros((), jnp.int32))
 
 
-def init_compressed_push_state(params: PyTree,
-                               nb_row_sum) -> GradientPushState:
+def init_compressed_push_state(params: PyTree, nb_row_sum,
+                               n_replicas: int | None = None
+                               ) -> GradientPushState:
     """Compressed-variant per-node state. ``nb_row_sum`` is the node's
     sum_{j != i} P_ij (from ``PermuteSchedule.neighbor_weight_sums()``;
-    may be a traced gather on the node index)."""
+    may be a traced gather on the node index). ``n_replicas`` (genuinely
+    time-varying schedules) allocates the per-neighbour replica stack —
+    every slot starts at the shared x_0, the same identical-start
+    assumption s_0 relies on."""
+    if n_replicas:
+        # replica path: s is recomputed fresh from xhat_nb every step and
+        # never read from state — drop the buffer (one model-size saving
+        # per node on top of the replica stack).
+        return GradientPushState(x=params, w=jnp.ones((), jnp.float32),
+                                 step=jnp.zeros((), jnp.int32),
+                                 xhat=params, s=None,
+                                 xhat_nb=_replica_stack(params, n_replicas))
     s0 = jax.tree.map(lambda x: (nb_row_sum * x).astype(x.dtype), params)
     return GradientPushState(x=params, w=jnp.ones((), jnp.float32),
                              step=jnp.zeros((), jnp.int32),
@@ -298,7 +326,6 @@ def gradient_push_distributed_step(state: GradientPushState, grads: PyTree, *,
     me = gossip._me(axis_name, node_index)
     sw = seq.self_weight_of(me, state.step)
     comp = cfg.make_compressor()
-    _check_static_if_compressed(comp, seq)
     noise_key = jax.random.fold_in(
         gossip.node_round_key(base_key, me, state.step), 0x5eed)
     g = masked_grad(grads, noise_key, sigma=cfg.sigma, clip_c=cfg.clip_c)
@@ -316,15 +343,36 @@ def gradient_push_distributed_step(state: GradientPushState, grads: PyTree, *,
         return GradientPushState(x=x, w=w_push, step=state.step + 1)
 
     delta = jax.tree.map(jnp.subtract, x_half, state.xhat)
-    # the SAME per-leaf payload transport (and key schedule) SDM's qsgd
-    # path uses, with the contraction applied to each payload pre-wire.
-    delta_hat, nb_sum = _payload_exchange_leaves(
-        delta, comp, schedule=seq, axis_name=axis_name, base_key=base_key,
-        step=state.step, me=me, node_index=node_index,
-        transform=lambda pl: _contract_payload(comp, pl, node=me))
-
-    xhat = jax.tree.map(jnp.add, state.xhat, delta_hat)
-    s = jax.tree.map(jnp.add, state.s, nb_sum)
+    if gossip.needs_replicas(seq):
+        # replica-correct time-varying path: increments cross every UNION
+        # edge every round (replicas exact by construction) and the
+        # neighbour sum is recomputed fresh with P(t)'s weights.
+        useq = gossip.union_schedule(seq)
+        delta_hat, incr = _replica_payload_exchange_leaves(
+            delta, comp, useq=useq, axis_name=axis_name, base_key=base_key,
+            step=state.step, me=me,
+            transform=lambda pl: _contract_payload(comp, pl, node=me))
+        xhat = jax.tree.map(jnp.add, state.xhat, delta_hat)
+        xhat_nb = jax.tree.map(jnp.add, state.xhat_nb, incr)
+        wv = gossip.replica_recv_weights(useq, me, state.step)
+        # the fresh neighbour sum is consumed by the x update below and
+        # NOT stored: replica-path state carries s=None (dead buffer).
+        s = jax.tree.map(
+            lambda xh: jnp.tensordot(wv.astype(xh.dtype), xh,
+                                     axes=([0], [0])), xhat_nb)
+        s_store = None
+    else:
+        # the SAME per-leaf payload transport (and key schedule) SDM's
+        # qsgd path uses, contraction applied to each payload pre-wire.
+        delta_hat, nb_sum = _payload_exchange_leaves(
+            delta, comp, schedule=seq, axis_name=axis_name,
+            base_key=base_key, step=state.step, me=me,
+            node_index=node_index,
+            transform=lambda pl: _contract_payload(comp, pl, node=me))
+        xhat = jax.tree.map(jnp.add, state.xhat, delta_hat)
+        xhat_nb = state.xhat_nb
+        s = jax.tree.map(jnp.add, state.s, nb_sum)
+        s_store = s
     # x <- x_half + chi ((P - I) xhat); mass rides the same damped
     # operator M = I + chi (P - I) so z = x / w stays de-biased.
     x = jax.tree.map(
@@ -332,4 +380,5 @@ def gradient_push_distributed_step(state: GradientPushState, grads: PyTree, *,
                                            + ss - xp),
         x_half, xhat, s)
     w = state.w + cfg.chi * (w_push - state.w)
-    return GradientPushState(x=x, w=w, step=state.step + 1, xhat=xhat, s=s)
+    return GradientPushState(x=x, w=w, step=state.step + 1, xhat=xhat,
+                             s=s_store, xhat_nb=xhat_nb)

@@ -54,18 +54,21 @@ parity test sweep pick it up automatically.
 from __future__ import annotations
 
 import dataclasses
+from fractions import Fraction
 from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import (baselines, compressor as compressor_mod, gossip,
                         gradient_push, sdm_dsgd)
 
 __all__ = ["Method", "DistributedExecutor", "register", "get", "names",
-           "normalize", "PARAM", "SCALAR", "COUNTER", "state_fields_of",
-           "state_shape_dtype", "state_shardings", "transmitted_bits"]
+           "normalize", "PARAM", "SCALAR", "COUNTER", "REPLICA",
+           "state_fields_of", "state_shape_dtype", "state_shardings",
+           "transmitted_elements", "transmitted_bits"]
 
 PyTree = Any
 
@@ -74,6 +77,12 @@ PyTree = Any
 PARAM = "param"      # shaped like the parameter tree
 SCALAR = "scalar"    # one f32 per node
 COUNTER = "counter"  # one i32 per node (the iteration counter)
+REPLICA = "replica"  # per-neighbour public-copy stack: each param leaf
+#                      gains a leading (n_replicas,) axis (replicated on
+#                      the mesh; the node axis still shards dim 0 of the
+#                      stacked state). Memory cost: deg_union x model per
+#                      node — the price of exact W(t)-mixing on genuinely
+#                      time-varying schedules.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,16 +106,20 @@ class Method:
     make_distributed: Callable[[gossip.ScheduleSequence, Any, Any],
                                DistributedExecutor]
     init_stacked: Callable[[PyTree, gossip.ScheduleSequence, Any], Any]
-    transmitted_elements: Callable[[PyTree, Any], int]
+    # (params, cfg, seq=None) -> int; ``seq`` makes the count per-link
+    # schedule-aware (mean out-degree over the sequence's rounds).
+    transmitted_elements: Callable[..., int]
     directed: bool = False       # meaningful on directed (push) graphs
     description: str = ""
-    # Optional config-dependent state layout (e.g. compressed gradient-push
-    # adds xhat/s buffers); None means ``state_fields`` for every config.
-    state_fields_for: "Callable[[Any], Tuple[Tuple[str, str], ...]] | None" \
-        = None
-    # Optional exact wire-bit accounting; None falls back to
-    # transmitted_elements * value_bits (full-precision dense payloads).
-    transmitted_bits_fn: "Callable[[PyTree, Any], int] | None" = None
+    # Optional (config, schedule)-dependent state layout (compressed
+    # gradient-push adds xhat/s buffers; genuinely time-varying schedules
+    # add the REPLICA stack); None means ``state_fields`` always.
+    state_fields_for: \
+        "Callable[[Any, Any], Tuple[Tuple[str, str], ...]] | None" = None
+    # Optional exact wire-bit accounting (params, cfg, seq=None) -> int;
+    # None falls back to transmitted_elements * value_bits (full-precision
+    # dense payloads).
+    transmitted_bits_fn: "Callable[..., int] | None" = None
 
 
 _REGISTRY: Dict[str, Method] = {}
@@ -146,37 +159,67 @@ def names() -> Tuple[str, ...]:
 # Generic state-template builders (used by train.steps and launch.dryrun).
 # --------------------------------------------------------------------------
 
-def state_fields_of(meth: Method, cfg=None) -> Tuple[Tuple[str, str], ...]:
-    """The method's state layout, possibly config-dependent.
+def state_fields_of(meth: Method, cfg=None,
+                    seq=None) -> Tuple[Tuple[str, str], ...]:
+    """The method's state layout, possibly config/schedule-dependent.
 
     Compressed gradient-push carries two extra PARAM buffers (public
     copy + incremental neighbour sum) only when a compressor is
-    configured; ``cfg=None`` keeps the static default layout.
+    configured; genuinely time-varying schedules additionally grow a
+    REPLICA stack (per-neighbour public copies — see the REPLICA kind).
+    ``cfg=None`` keeps the static default layout.
     """
     if meth.state_fields_for is not None and cfg is not None:
-        return meth.state_fields_for(cfg)
+        return meth.state_fields_for(cfg, seq)
     return meth.state_fields
 
 
+def transmitted_elements(meth: Method, params: PyTree, cfg, seq=None) -> int:
+    """Elements one node transmits per step, per-link when ``seq`` given.
+
+    With a schedule the count multiplies by the mean out-degree over the
+    sequence's rounds (2 for the static ring, 1 for perfect-matching
+    rounds, the union-graph degree on the replica transport) — matching
+    what the compiled ppermute rounds actually move. ``seq=None`` keeps
+    the legacy one-payload-per-step convention.
+    """
+    return meth.transmitted_elements(params, cfg, seq=seq)
+
+
 def transmitted_bits(meth: Method, params: PyTree, cfg,
-                     value_bits: int = 32) -> int:
+                     value_bits: int = 32, seq=None) -> int:
     """Exact wire bits one node transmits per step (Fig-3's honest axis).
 
     Methods without a registered bits accountant ship full-precision
-    dense payloads: elements * value_bits.
+    dense payloads: elements * value_bits. Same per-link ``seq``
+    convention as ``transmitted_elements``.
     """
     if meth.transmitted_bits_fn is not None:
-        return meth.transmitted_bits_fn(params, cfg)
-    return meth.transmitted_elements(params, cfg) * value_bits
+        return meth.transmitted_bits_fn(params, cfg, value_bits=value_bits,
+                                        seq=seq)
+    return meth.transmitted_elements(params, cfg, seq=seq) * value_bits
 
 
-def state_shape_dtype(meth: Method, x_stack: PyTree, cfg=None):
-    """Stacked-state ShapeDtypeStructs from the stacked params template."""
+def _n_replicas(seq) -> int:
+    return gossip.union_schedule(gossip.ensure_sequence(seq)).n_replicas
+
+
+def state_shape_dtype(meth: Method, x_stack: PyTree, cfg=None, seq=None):
+    """Stacked-state ShapeDtypeStructs from the stacked params template.
+
+    REPLICA fields need the schedule: each param leaf (n, ...) grows to
+    (n, n_replicas, ...), one slot per union-graph round.
+    """
     n = jax.tree.leaves(x_stack)[0].shape[0]
     kw = {}
-    for fname, kind in state_fields_of(meth, cfg):
+    for fname, kind in state_fields_of(meth, cfg, seq):
         if kind == PARAM:
             kw[fname] = x_stack
+        elif kind == REPLICA:
+            r = _n_replicas(seq)
+            kw[fname] = jax.tree.map(
+                lambda v: jax.ShapeDtypeStruct(
+                    (v.shape[0], r) + tuple(v.shape[1:]), v.dtype), x_stack)
         elif kind == SCALAR:
             kw[fname] = jax.ShapeDtypeStruct((n,), jnp.float32)
         else:
@@ -184,12 +227,28 @@ def state_shape_dtype(meth: Method, x_stack: PyTree, cfg=None):
     return meth.state_cls(**kw)
 
 
+def _replica_leaf_sharding(ns: NamedSharding) -> NamedSharding:
+    """The param leaf's sharding with the replica axis inserted at dim 1.
+
+    The node axis keeps dim 0; the replica axis is replicated; any model
+    sharding of the trailing dims is preserved.
+    """
+    spec = tuple(ns.spec)
+    lead = spec[0] if spec else None
+    return NamedSharding(ns.mesh, P(lead, None, *spec[1:]))
+
+
 def state_shardings(meth: Method, x_shardings: PyTree, node_vec_sharding,
-                    cfg=None):
+                    cfg=None, seq=None):
     """Stacked-state NamedShardings from the params-tree shardings."""
     kw = {}
-    for fname, kind in state_fields_of(meth, cfg):
-        kw[fname] = x_shardings if kind == PARAM else node_vec_sharding
+    for fname, kind in state_fields_of(meth, cfg, seq):
+        if kind == PARAM:
+            kw[fname] = x_shardings
+        elif kind == REPLICA:
+            kw[fname] = jax.tree.map(_replica_leaf_sharding, x_shardings)
+        else:
+            kw[fname] = node_vec_sharding
     return meth.state_cls(**kw)
 
 
@@ -207,6 +266,27 @@ def _coerce_sdm(cfg) -> sdm_dsgd.SDMConfig:
     raise TypeError(f"sdm-dsgd needs an SDMConfig, got {type(cfg).__name__}")
 
 
+def _sdm_fields(cfg, seq=None) -> Tuple[Tuple[str, str], ...]:
+    if seq is not None and gossip.needs_replicas(seq):
+        return _SDM_FIELDS + (("xhat", REPLICA),)
+    return _SDM_FIELDS
+
+
+def _fused_fields(cfg, seq=None) -> Tuple[Tuple[str, str], ...]:
+    base = (("x", PARAM), ("s", PARAM), ("step", COUNTER))
+    if seq is not None and gossip.needs_replicas(seq):
+        return base + (("xhat", REPLICA),)
+    return base
+
+
+def _stacked_replicas(stack: PyTree, seq) -> PyTree:
+    """(n, n_replicas, ...) replica stacks, every slot at the shared x_0."""
+    r = _n_replicas(seq)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[:, None], (x.shape[0], r) + x.shape[1:]),
+        stack)
+
+
 def _sdm_init_stacked(stack: PyTree, seq: gossip.ScheduleSequence, cfg
                       ) -> sdm_dsgd.SDMState:
     n = jax.tree.leaves(stack)[0].shape[0]
@@ -216,16 +296,21 @@ def _sdm_init_stacked(stack: PyTree, seq: gossip.ScheduleSequence, cfg
         w = (1.0 - sw).reshape((n,) + (1,) * (x.ndim - 1))
         return (w * x).astype(x.dtype)
 
+    xhat = _stacked_replicas(stack, seq) if gossip.needs_replicas(seq) \
+        else None
     return sdm_dsgd.SDMState(
         x=stack, s=jax.tree.map(s0_leaf, stack),
-        d=jax.tree.map(jnp.zeros_like, stack), step=_stacked_counter(n))
+        d=jax.tree.map(jnp.zeros_like, stack), step=_stacked_counter(n),
+        xhat=xhat)
 
 
 def _sdm_distributed(seq: gossip.ScheduleSequence, cfg, axis_name
                      ) -> DistributedExecutor:
+    n_rep = _n_replicas(seq) if gossip.needs_replicas(seq) else None
+
     def init(params, me):
         return sdm_dsgd.init_distributed_state(
-            params, seq.self_weight_of(me, 0))
+            params, seq.self_weight_of(me, 0), n_replicas=n_rep)
 
     def step(state, grads_at, *, base_key, node_index=None):
         state = sdm_dsgd.distributed_advance(
@@ -242,12 +327,16 @@ def _sdm_distributed(seq: gossip.ScheduleSequence, cfg, axis_name
 
 def _fused_init_stacked(stack, seq, cfg) -> sdm_dsgd.SDMFusedState:
     full = _sdm_init_stacked(stack, seq, cfg)
-    return sdm_dsgd.SDMFusedState(x=full.x, s=full.s, step=full.step)
+    return sdm_dsgd.SDMFusedState(x=full.x, s=full.s, step=full.step,
+                                  xhat=full.xhat)
 
 
 def _fused_distributed(seq, cfg, axis_name) -> DistributedExecutor:
+    n_rep = _n_replicas(seq) if gossip.needs_replicas(seq) else None
+
     def init(params, me):
-        return sdm_dsgd.init_fused_state(params, seq.self_weight_of(me, 0))
+        return sdm_dsgd.init_fused_state(params, seq.self_weight_of(me, 0),
+                                         n_replicas=n_rep)
 
     def step(state, grads_at, *, base_key, node_index=None):
         grads, aux = grads_at(state.x)
@@ -358,10 +447,14 @@ def _coerce_push(cfg) -> gradient_push.GradientPushConfig:
         f"gradient-push needs GradientPushConfig, got {type(cfg).__name__}")
 
 
-def _push_fields(cfg) -> Tuple[Tuple[str, str], ...]:
+def _push_fields(cfg, seq=None) -> Tuple[Tuple[str, str], ...]:
     base = (("x", PARAM), ("w", SCALAR), ("step", COUNTER))
     if getattr(cfg, "compressor", None):
-        return base + (("xhat", PARAM), ("s", PARAM))
+        if seq is not None and gossip.needs_replicas(seq):
+            # replica path recomputes the neighbour sum fresh every step:
+            # no persistent s buffer, the replica stack replaces it.
+            return base + (("xhat", PARAM), ("xhat_nb", REPLICA))
+        base = base + (("xhat", PARAM), ("s", PARAM))
     return base
 
 
@@ -371,6 +464,9 @@ def _push_init_stacked(stack, seq, cfg) -> gradient_push.GradientPushState:
         x=stack, w=jnp.ones((n,), jnp.float32), step=_stacked_counter(n))
     if not getattr(cfg, "compressor", None):
         return base
+    if gossip.needs_replicas(seq):
+        return base._replace(xhat=stack,
+                             xhat_nb=_stacked_replicas(stack, seq))
     w0 = seq.schedules[0]
     rs = jnp.asarray(w0.neighbor_weight_sums(), jnp.float32)
     s0 = jax.tree.map(
@@ -380,12 +476,16 @@ def _push_init_stacked(stack, seq, cfg) -> gradient_push.GradientPushState:
 
 
 def _push_distributed(seq, cfg, axis_name) -> DistributedExecutor:
+    n_rep = _n_replicas(seq) if (getattr(cfg, "compressor", None)
+                                 and gossip.needs_replicas(seq)) else None
+
     def init(params, me):
         if not getattr(cfg, "compressor", None):
             return gradient_push.init_push_state(params)
         rs = jnp.asarray(seq.schedules[0].neighbor_weight_sums(),
                          jnp.float32)[me]
-        return gradient_push.init_compressed_push_state(params, rs)
+        return gradient_push.init_compressed_push_state(params, rs,
+                                                        n_replicas=n_rep)
 
     def step(state, grads_at, *, base_key, node_index=None):
         z = gradient_push._debias(state.x, state.w)
@@ -398,38 +498,60 @@ def _push_distributed(seq, cfg, axis_name) -> DistributedExecutor:
     return DistributedExecutor(init=init, step=step)
 
 
-def _node_mean(comp, per_node_fn) -> int:
-    """Across-node mean for per-node p tuples — the SDM accounting
-    convention (network total = mean * n_nodes), so het-p methods share
-    one Fig-3 axis instead of the worst-case node inflating push-sum."""
-    if isinstance(comp.p, tuple):
-        vals = [per_node_fn(i) for i in range(len(comp.p))]
-        return int(round(sum(vals) / len(vals)))
-    return per_node_fn(None)
+def _push_degree_factors(seq, compressed: bool):
+    """(payload, mass) per-link factors for push-sum accounting.
+
+    The mass scalar always rides the current round's graph (mean
+    out-degree over the L rounds); compressed payloads ride the union
+    graph when the sequence genuinely varies (replica transport).
+    """
+    if seq is None:
+        return Fraction(1), Fraction(1)
+    seq = gossip.sequence_of(seq)
+    mass = gossip.mean_out_degree(seq)
+    payload = gossip.mean_out_degree(
+        seq, union=compressed and gossip.needs_replicas(seq))
+    return payload, mass
 
 
-def _push_elements(params: PyTree, cfg) -> int:
+def _push_elements(params: PyTree, cfg, seq=None) -> int:
     comp = cfg.make_compressor() if hasattr(cfg, "make_compressor") else None
+    payload_deg, mass_deg = _push_degree_factors(seq, comp is not None)
     if comp is None:
-        return _full_state_elements(params, cfg) + 1   # + push-sum mass w
-    return _node_mean(comp, lambda i: compressor_mod.tree_wire_elements(
-        comp, params, node=i)) + 1
+        return int(round(_full_state_elements(params, cfg) * payload_deg
+                         + mass_deg))   # + push-sum mass w
+    payload = compressor_mod.node_mean_exact(
+        comp.p, lambda i: compressor_mod.tree_wire_elements_exact(
+            comp, params, node=i))
+    return int(round(payload * payload_deg + mass_deg))
 
 
-def _push_bits(params: PyTree, cfg) -> int:
+def _push_bits(params: PyTree, cfg, seq=None, value_bits: int = 32) -> int:
     comp = cfg.make_compressor() if hasattr(cfg, "make_compressor") else None
+    payload_deg, mass_deg = _push_degree_factors(seq, comp is not None)
     if comp is None:
-        return (_full_state_elements(params, cfg) + 1) * 32
+        return int(round((_full_state_elements(params, cfg) * payload_deg
+                          + mass_deg) * value_bits))
     # exchange_payload ships explicit indices (no seed regeneration).
-    return _node_mean(comp, lambda i: compressor_mod.tree_wire_bits(
-        comp, params, index_sync=False, node=i)) + 32
+    payload = compressor_mod.node_mean_exact(
+        comp.p, lambda i: compressor_mod.tree_wire_bits_exact(
+            comp, params, value_bits=value_bits, index_sync=False, node=i))
+    return int(round(payload * payload_deg + mass_deg * value_bits))
 
 
 # --------------------------------------------------------------------------
 # Default registrations.
 # --------------------------------------------------------------------------
 
-def _full_state_elements(params: PyTree, cfg) -> int:
+def _full_state_elements(params: PyTree, cfg, seq=None) -> int:
+    d = sum(int(x.size) for x in jax.tree.leaves(params))
+    if seq is None:
+        return d
+    return int(round(d * gossip.mean_out_degree(gossip.sequence_of(seq))))
+
+
+def _allreduce_elements(params: PyTree, cfg, seq=None) -> int:
+    del seq   # no gossip graph: the all-reduce cost is schedule-free
     return sum(int(x.size) for x in jax.tree.leaves(params))
 
 
@@ -440,6 +562,7 @@ _SDM = register(Method(
     config_cls=sdm_dsgd.SDMConfig,
     state_cls=sdm_dsgd.SDMState,
     state_fields=_SDM_FIELDS,
+    state_fields_for=_sdm_fields,
     coerce_config=_coerce_sdm,
     make_reference=sdm_dsgd.ReferenceSimulator,
     make_distributed=_sdm_distributed,
@@ -453,6 +576,7 @@ register(dataclasses.replace(
     name="sdm-dsgd-fused",
     state_cls=sdm_dsgd.SDMFusedState,
     state_fields=(("x", PARAM), ("s", PARAM), ("step", COUNTER)),
+    state_fields_for=_fused_fields,
     make_distributed=_fused_distributed,
     init_stacked=_fused_init_stacked,
     description="SDM-DSGD with commit+advance fused (2 state buffers)"))
@@ -503,5 +627,5 @@ register(Method(
     make_reference=AllreduceReference,
     make_distributed=_allreduce_distributed,
     init_stacked=_dsgd_init_stacked,
-    transmitted_elements=_full_state_elements,
+    transmitted_elements=_allreduce_elements,
     description="conventional all-reduce data parallelism (upper bound)"))

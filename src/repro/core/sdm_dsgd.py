@@ -15,6 +15,16 @@ so the distributed state per node is:
     s — the running weighted neighbour sum  sum_{j in N_i} W_ij x_j,
     d — the differential awaiting transmission next round.
 
+On a STATIC graph the replicas never need to be materialized: with
+time-invariant weights the weighted sum folds incrementally
+(s += sum_j W_ij S(d_j)), which is what the two/three-buffer state
+above exploits. On a genuinely time-varying schedule sequence the
+increments must instead land in EXPLICIT per-neighbour replicas
+(``SDMState.xhat``, one slot per union-graph round, fed over every
+union edge every round so receivers see every increment) and s is
+recomputed fresh with the CURRENT round's W(t) — exact W(t)-mixing on
+B-connected sequences, at deg_union x model extra state per node.
+
 Two implementations, bit-for-bit testable against each other:
 
 * ``ReferenceSimulator`` — all n nodes stacked on a leading axis on one
@@ -30,6 +40,7 @@ Baselines (DSGD, DC-DSGD) live in ``baselines.py``; DC-DSGD is exactly
 from __future__ import annotations
 
 import dataclasses
+from fractions import Fraction
 from typing import Any, NamedTuple, Tuple
 
 import jax
@@ -183,6 +194,12 @@ class SDMState(NamedTuple):
     d: PyTree       # differential pending transmission
     step: jax.Array  # iteration counter (int32)
     e: PyTree = None  # error-feedback residual (only when cfg.error_feedback)
+    # Per-neighbour public-copy replicas (distributed executor, genuinely
+    # time-varying schedules only): each leaf gains a leading
+    # (n_replicas,) axis — slot k tracks the union-round-k sender's
+    # public copy x_j exactly, so s is recomputed FRESH with the current
+    # round's weights (true W(t)-mixing). Memory cost: deg_union x model.
+    xhat: PyTree = None
 
 
 def _tree_zeros_like(t: PyTree) -> PyTree:
@@ -259,29 +276,56 @@ def _masked_grad(grads: PyTree, key: jax.Array, cfg) -> PyTree:
     return masked_grad(grads, key, sigma=cfg.sigma, clip_c=cfg.clip_c)
 
 
+def schedule_degree_factor(seq, node: "int | None" = None) -> Fraction:
+    """Payload transmissions per node per step on ``seq`` (exact Fraction).
+
+    The per-link wire-accounting factor for the SDM transport: the mean
+    (over the L rounds of the sequence) out-degree — 2 on the static
+    symmetric ring, 1 on perfect-matching rounds; ``node=i`` uses node
+    i's OWN out-degree where it differs (star hubs). Genuinely
+    time-varying sequences run the replica transport (payloads cross
+    every UNION edge every round), so their factor is the union-graph
+    degree. ``seq=None`` callers keep the schedule-free legacy
+    convention: one payload per step (factor 1).
+    """
+    if seq is None:
+        return Fraction(1)
+    seq = gossip.sequence_of(seq)
+    return gossip.mean_out_degree(seq, union=gossip.needs_replicas(seq),
+                                  node=node)
+
+
 def transmitted_elements_per_step(params: PyTree, cfg: SDMConfig,
-                                  node: int | None = None) -> int:
+                                  node: int | None = None, *,
+                                  seq=None) -> int:
     """Expected non-zero elements one node transmits per iteration.
 
     The paper's Figure-3 communication metric ("non-zero digits"). For
     fixedk mode this is exact; for bernoulli it is the expectation p*d.
     With heterogeneous per-node p, ``node`` selects whose budget to
-    count; ``node=None`` returns the across-node mean (so callers that
-    multiply by n_nodes still get the network total).
+    count; ``node=None`` returns the across-node mean (exact-Fraction
+    mean, rounded once — network total = mean * n_nodes). ``seq`` makes
+    the count schedule-aware (per-link): the payload cost multiplies by
+    the mean out-degree over the sequence's rounds (union-graph degree
+    on the replica transport); ``seq=None`` keeps the legacy
+    one-payload-per-step convention.
     """
-    if isinstance(cfg.p, tuple) and cfg.mode != "qsgd":
-        if node is None:
-            per_node = [transmitted_elements_per_step(params, cfg, i)
-                        for i in range(len(cfg.p))]
-            return int(round(sum(per_node) / len(per_node)))
     comp = compressor_of(cfg)
-    return compressor_mod.tree_wire_elements(comp, params, node=node)
+    if isinstance(cfg.p, tuple) and cfg.mode != "qsgd" and node is None:
+        exact = compressor_mod.node_mean_exact(
+            cfg.p, lambda i: compressor_mod.tree_wire_elements_exact(
+                comp, params, node=i))
+    else:
+        exact = compressor_mod.tree_wire_elements_exact(comp, params,
+                                                        node=node)
+    return int(round(exact * schedule_degree_factor(seq, node)))
 
 
 def transmitted_bits_per_step(params: PyTree, cfg: SDMConfig,
                               node: int | None = None, *,
                               value_bits: int = 32,
-                              index_sync: bool = True) -> int:
+                              index_sync: bool = True,
+                              seq=None) -> int:
     """Exact WIRE BITS one node transmits per iteration.
 
     The honest companion to the element count: packed formats also need
@@ -290,17 +334,19 @@ def transmitted_bits_per_step(params: PyTree, cfg: SDMConfig,
     (``index_sync=True``, the repo's gossip transport), which removes
     index traffic entirely; quantizers ship every coordinate but at
     qsgd_bits instead of ``value_bits``. ``node=None`` with per-node p
-    returns the across-node mean (network total = mean * n_nodes).
+    returns the across-node mean (exact-Fraction mean, rounded once).
+    ``seq`` applies the same per-link degree factor as the element count.
     """
-    if isinstance(cfg.p, tuple) and cfg.mode != "qsgd" and node is None:
-        per_node = [transmitted_bits_per_step(params, cfg, i,
-                                              value_bits=value_bits,
-                                              index_sync=index_sync)
-                    for i in range(len(cfg.p))]
-        return int(round(sum(per_node) / len(per_node)))
     comp = compressor_of(cfg)
-    return compressor_mod.tree_wire_bits(comp, params, value_bits=value_bits,
-                                         index_sync=index_sync, node=node)
+    kw = dict(value_bits=value_bits, index_sync=index_sync)
+    if isinstance(cfg.p, tuple) and cfg.mode != "qsgd" and node is None:
+        exact = compressor_mod.node_mean_exact(
+            cfg.p, lambda i: compressor_mod.tree_wire_bits_exact(
+                comp, params, node=i, **kw))
+    else:
+        exact = compressor_mod.tree_wire_bits_exact(comp, params, node=node,
+                                                    **kw)
+    return int(round(exact * schedule_degree_factor(seq, node)))
 
 
 # ==========================================================================
@@ -315,13 +361,15 @@ class ReferenceSimulator:
     the distributed executor are built from the SAME schedule object, so
     their mixing matrices can never diverge.
 
-    Static graphs mix with the exact dense W (``mix_dense``). For a
-    time-varying sequence the weighted neighbour sum ``s`` is tracked
-    INCREMENTALLY with the weights of the round each differential was
-    exchanged in — operationally identical to the distributed executor
-    (which can only ever see weighted increments), and equal to true
-    W(t)-mixing whenever the weights are time-invariant. Full-state
-    methods (DSGD, gradient-push) stay exact on time-varying graphs.
+    Static graphs (and weight-invariant sequences) mix with the exact
+    dense W via the incremental neighbour sum ``s`` — byte-for-byte the
+    historical trajectories. Genuinely time-varying sequences mix with
+    the exact dense W(t) of the CURRENT round: the stacked public copies
+    ``x`` are precisely what the distributed executor's per-neighbour
+    replicas reconstruct, so ``commit`` computes W(t) x fresh each round
+    — true W(t)-mixing, bit-comparable to an explicit dense simulator.
+    Full-state methods (DSGD, gradient-push) stay exact on time-varying
+    graphs by construction.
     """
 
     def __init__(self, topo, cfg: SDMConfig):
@@ -330,7 +378,11 @@ class ReferenceSimulator:
         self.topo = None if isinstance(
             topo, (gossip.PermuteSchedule, gossip.ScheduleSequence)) else topo
         check_per_node_p(cfg, self.seq.n_nodes)
-        self.time_varying = self.seq.length > 1
+        # replica-exact: genuinely time-varying weights -> mix with the
+        # full dense W(t) each round; otherwise the incremental-s fast
+        # path (exact there, and byte-identical to the historical code).
+        self.replica_exact = gossip.needs_replicas(self.seq)
+        self.time_varying = self.seq.length > 1 and not self.replica_exact
         wstack = self.seq.weights_stack()
         self._wstack = jnp.asarray(wstack, jnp.float32)   # (L, n, n)
         self.weights = self._wstack[0]
@@ -347,7 +399,11 @@ class ReferenceSimulator:
         n = jax.tree.leaves(params_stack)[0].shape[0]
         assert n == self.seq.n_nodes, (n, self.seq.n_nodes)
         e = _tree_zeros_like(params_stack) if self.cfg.error_feedback else None
-        if self.time_varying:
+        if self.replica_exact:
+            # commit mixes the full dense W(t) fresh each round: the
+            # reference replica path carries NO neighbour-sum buffer.
+            s = None
+        elif self.time_varying:
             # incremental-s bookkeeping starts from the round-0 weights
             # (the distributed init does the same with (1 - W_ii(0)) x_0).
             s = jax.tree.map(
@@ -417,7 +473,14 @@ class ReferenceSimulator:
                key: jax.Array) -> SDMState:
         cfg = self.cfg
         g = _masked_grad(grads_stack, key, cfg)
-        if self.time_varying:
+        if self.replica_exact:
+            # exact W(t)-mixing: the stacked x IS every node's public
+            # copy, so mix with the CURRENT round's full dense matrix —
+            # what the distributed executor reconstructs from replicas.
+            mixed = jax.tree.map(
+                lambda x: gossip.mix_dense(self._weights_at(state.step), x),
+                state.x)
+        elif self.time_varying:
             # W~(t) x for node i = W_ii(t) x_i + s_i (s incremental).
             diag_w = jnp.diagonal(self._weights_at(state.step))
             mixed = jax.tree.map(
@@ -464,7 +527,20 @@ class ReferenceSimulator:
 # Distributed per-node step (inside shard_map; node axis manual).
 # ==========================================================================
 
-def init_distributed_state(params: PyTree, self_weight) -> SDMState:
+def _replica_stack(params: PyTree, n_replicas: int) -> PyTree:
+    """Per-neighbour public-copy replicas, all starting at x_0.
+
+    Valid under the same identical-start assumption the s_0 formula uses:
+    every neighbour's public copy begins at the shared x_0, and from then
+    on slot k advances by exactly the increments the union-round-k sender
+    transmits — so each slot stays an exact copy of x_{j,t}.
+    """
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_replicas,) + x.shape), params)
+
+
+def init_distributed_state(params: PyTree, self_weight,
+                           n_replicas: int | None = None) -> SDMState:
     """Per-node state. ``params`` has NO node axis here (each shard owns one).
 
     All nodes must start from IDENTICAL params (standard same-seed init);
@@ -472,12 +548,15 @@ def init_distributed_state(params: PyTree, self_weight) -> SDMState:
     sum_{j != i} W_ij = 1 - W_ii and x_{j,0} = x_0. (The paper starts at
     x_0 = 0, a special case.) ``self_weight`` may be a python float or a
     traced scalar (``schedule.self_weight_of(me)`` inside shard_map, for
-    topologies whose W_ii varies per node).
+    topologies whose W_ii varies per node). ``n_replicas`` (genuinely
+    time-varying schedules only) allocates the per-neighbour public-copy
+    replica stack — deg_union extra parameter buffers per node.
     """
     s0 = jax.tree.map(lambda x: ((1.0 - self_weight) * x).astype(x.dtype),
                       params)
+    xhat = _replica_stack(params, n_replicas) if n_replicas else None
     return SDMState(x=params, s=s0, d=_tree_zeros_like(params),
-                    step=jnp.zeros((), jnp.int32))
+                    step=jnp.zeros((), jnp.int32), xhat=xhat)
 
 
 def _sparse_exchange_leaves(d_tree: PyTree, *, schedule, axis_name,
@@ -535,6 +614,96 @@ def _payload_exchange_leaves(d_tree: PyTree,
     return jax.tree.unflatten(treedef, own), jax.tree.unflatten(treedef, nb)
 
 
+def _replica_sparse_exchange_leaves(d_tree: PyTree, *,
+                                    useq, axis_name, base_key: jax.Array,
+                                    step: jax.Array, cfg: SDMConfig,
+                                    node_index=None
+                                    ) -> Tuple[PyTree, PyTree]:
+    """Packed replica transport: (own S(d), per-slot increment stacks)."""
+    d_leaves, treedef = jax.tree.flatten(d_tree)
+    own, incr = [], []
+    for i, d in enumerate(d_leaves):
+        leaf_key = jax.random.fold_in(base_key, i)
+        if cfg.mode == "fixedk_rows":
+            own_sparse, inc = gossip.union_exchange_packed_rows(
+                useq, d, axis_name=axis_name, base_key=leaf_key,
+                step=step, p=cfg.p, node_index=node_index)
+        else:
+            own_sparse, inc = gossip.union_exchange_packed(
+                useq, d.reshape(-1), axis_name=axis_name,
+                base_key=leaf_key, step=step, p=cfg.p, block=cfg.pack_block,
+                node_index=node_index)
+        own.append(own_sparse.reshape(d.shape).astype(d.dtype))
+        incr.append(inc.reshape((inc.shape[0],) + d.shape).astype(d.dtype))
+    return jax.tree.unflatten(treedef, own), jax.tree.unflatten(treedef, incr)
+
+
+def _replica_payload_exchange_leaves(d_tree: PyTree,
+                                     comp: compressor_mod.Compressor, *,
+                                     useq, axis_name, base_key: jax.Array,
+                                     step: jax.Array, me,
+                                     transform=None
+                                     ) -> Tuple[PyTree, PyTree]:
+    """Compressor-payload replica transport: (own x_hat, increment stacks).
+
+    Key schedule matches ``_payload_exchange_leaves`` exactly; the only
+    difference is that each union round's delivery lands in its OWN
+    (n_replicas, ...) row instead of a weighted sum — compressed
+    push-sum's contraction ``transform`` rides through unchanged.
+    """
+    d_leaves, treedef = jax.tree.flatten(d_tree)
+    own, incr = [], []
+    for i, d in enumerate(d_leaves):
+        key = gossip.node_round_key(
+            jax.random.fold_in(base_key, i), me, step)
+        pl = comp.compress(key, d, node=me)
+        if transform is not None:
+            pl = transform(pl)
+        own.append(comp.decompress(pl).astype(d.dtype))
+        incr.append(gossip.union_exchange_payload(
+            useq, pl, comp.decompress, axis_name).astype(d.dtype))
+    return jax.tree.unflatten(treedef, own), jax.tree.unflatten(treedef, incr)
+
+
+def _replica_advance_exchange(state_d: PyTree, xhat: PyTree, *,
+                              seq, axis_name, base_key: jax.Array,
+                              step: jax.Array, cfg: SDMConfig, me,
+                              node_index=None) -> Tuple[PyTree, PyTree, PyTree]:
+    """Shared replica-transport advance: (own S(d), new xhat, fresh s).
+
+    Every union in-neighbour's increment arrives tagged by round
+    position, advances its replica slot, and the weighted neighbour sum
+    is recomputed FRESH with the CURRENT round's weights — exact
+    W(t)-mixing on B-connected sequences.
+    """
+    useq = gossip.union_schedule(seq)
+    if cfg.mode in ("fixedk_packed", "fixedk_rows"):
+        own, incr = _replica_sparse_exchange_leaves(
+            state_d, useq=useq, axis_name=axis_name, base_key=base_key,
+            step=step, cfg=cfg, node_index=node_index)
+    elif cfg.mode in ("qsgd", "payload"):
+        own, incr = _replica_payload_exchange_leaves(
+            state_d, compressor_of(cfg), useq=useq, axis_name=axis_name,
+            base_key=base_key, step=step, me=me)
+    else:
+        comp = compressor_of(cfg)
+        leaf_keys = jax.tree.map(
+            lambda k: gossip.node_round_key(k, me, step),
+            _leaf_keys(base_key, state_d))
+        own = jax.tree.map(
+            lambda k, d: comp.decompress(
+                comp.compress(k, d, node=me)).astype(d.dtype),
+            leaf_keys, state_d)
+        incr = jax.tree.map(
+            lambda v: gossip.union_exchange(useq, v, axis_name), own)
+    new_xhat = jax.tree.map(jnp.add, xhat, incr)
+    wv = gossip.replica_recv_weights(useq, me, step)     # (R,)
+    s = jax.tree.map(
+        lambda xh: jnp.tensordot(wv.astype(xh.dtype), xh, axes=([0], [0])),
+        new_xhat)
+    return own, new_xhat, s
+
+
 def distributed_advance(state: SDMState, *, base_key: jax.Array, axis_name,
                         cfg: SDMConfig,
                         schedule=None,
@@ -554,6 +723,16 @@ def distributed_advance(state: SDMState, *, base_key: jax.Array, axis_name,
     seq = gossip.resolve_sequence(schedule, axis_name, self_weight)
     check_per_node_p(cfg, seq.n_nodes)
     me = gossip._me(axis_name, node_index)
+
+    if gossip.needs_replicas(seq):
+        # genuinely time-varying weights: replica-correct advance (exact
+        # W(t)-mixing; state.xhat must have been allocated at init).
+        own, xhat, s = _replica_advance_exchange(
+            state.d, state.xhat, seq=seq, axis_name=axis_name,
+            base_key=base_key, step=state.step, cfg=cfg, me=me,
+            node_index=node_index)
+        x = jax.tree.map(jnp.add, state.x, own)
+        return state._replace(x=x, s=s, xhat=xhat)
 
     if cfg.mode in ("fixedk_packed", "fixedk_rows"):
         own, nb = _sparse_exchange_leaves(
@@ -587,16 +766,24 @@ def distributed_advance(state: SDMState, *, base_key: jax.Array, axis_name,
 
 
 class SDMFusedState(NamedTuple):
-    """Two-buffer state for the fused step (see distributed_step_fused)."""
+    """Two-buffer state for the fused step (see distributed_step_fused).
+
+    On genuinely time-varying schedules the replica stack ``xhat`` rides
+    along (deg_union extra buffers) — the price of exact W(t)-mixing.
+    """
     x: PyTree
     s: PyTree
     step: jax.Array
+    xhat: PyTree = None
 
 
-def init_fused_state(params: PyTree, self_weight) -> SDMFusedState:
+def init_fused_state(params: PyTree, self_weight,
+                     n_replicas: int | None = None) -> SDMFusedState:
     s0 = jax.tree.map(lambda x: ((1.0 - self_weight) * x).astype(x.dtype),
                       params)
-    return SDMFusedState(x=params, s=s0, step=jnp.zeros((), jnp.int32))
+    xhat = _replica_stack(params, n_replicas) if n_replicas else None
+    return SDMFusedState(x=params, s=s0, step=jnp.zeros((), jnp.int32),
+                         xhat=xhat)
 
 
 def distributed_step_fused(state: SDMFusedState, grads: PyTree, *,
@@ -635,6 +822,12 @@ def distributed_step_fused(state: SDMFusedState, grads: PyTree, *,
     # for a time-varying sequence the exchange likewise runs on the
     # NEXT round's graph).
     sp_step = state.step + 1
+    if gossip.needs_replicas(seq):
+        own, xhat, s = _replica_advance_exchange(
+            d, state.xhat, seq=seq, axis_name=axis_name, base_key=base_key,
+            step=sp_step, cfg=cfg, me=me, node_index=node_index)
+        x = jax.tree.map(jnp.add, state.x, own)
+        return SDMFusedState(x=x, s=s, step=state.step + 1, xhat=xhat)
     if cfg.mode in ("fixedk_packed", "fixedk_rows"):
         own, nb = _sparse_exchange_leaves(
             d, schedule=seq, axis_name=axis_name,
@@ -676,7 +869,9 @@ def distributed_commit(state: SDMState, grads: PyTree, *, base_key: jax.Array,
     noise_key = jax.random.fold_in(
         gossip.node_round_key(base_key, me, state.step), 0x5eed)
     g = _masked_grad(grads, noise_key, cfg)
-    # W~ x for node i = W_ii x_i + s_i  (s maintained incrementally).
+    # W~ x for node i = W_ii x_i + s_i  (s maintained incrementally on
+    # static schedules, recomputed from the exact replicas on
+    # time-varying ones — either way it carries this round's weights).
     y = jax.tree.map(
         lambda x, s, gr: ((1.0 - cfg.theta) * x
                           + cfg.theta * (sw.astype(x.dtype) * x + s

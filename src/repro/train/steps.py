@@ -127,7 +127,11 @@ def gossip_schedule(tc: DistributedTrainConfig, mesh: Mesh
 
 
 def state_shape_dtype(tc: DistributedTrainConfig, mesh: Mesh):
-    """ShapeDtypeStructs of the stacked method state (dry-run lowering)."""
+    """ShapeDtypeStructs of the stacked method state (dry-run lowering).
+
+    Schedule-aware: genuinely time-varying gossip specs grow the
+    per-neighbour REPLICA leaves (one slot per union-graph round).
+    """
     n_nodes = _n_nodes(mesh)
     meth, mcfg = tc.resolved()
     shapes = transformer.param_shapes(tc.model)
@@ -135,7 +139,8 @@ def state_shape_dtype(tc: DistributedTrainConfig, mesh: Mesh):
     x = jax.tree.map(mk, shapes,
                      is_leaf=lambda v: isinstance(v, tuple) and
                      all(isinstance(e, int) for e in v))
-    return method_mod.state_shape_dtype(meth, x, mcfg)
+    return method_mod.state_shape_dtype(meth, x, mcfg,
+                                        seq=gossip_schedule(tc, mesh))
 
 
 def state_shardings(tc: DistributedTrainConfig, mesh: Mesh):
@@ -154,7 +159,8 @@ def state_shardings(tc: DistributedTrainConfig, mesh: Mesh):
     x = jax.tree.map(leaf_sharding, axes, shapes, is_leaf=is_axes)
     node_vec = NamedSharding(mesh, P(node_axes if len(node_axes) > 1
                                      else node_axes[0]))
-    return method_mod.state_shardings(meth, x, node_vec, mcfg)
+    return method_mod.state_shardings(meth, x, node_vec, mcfg,
+                                      seq=gossip_schedule(tc, mesh))
 
 
 def init_distributed_state(tc: DistributedTrainConfig, mesh: Mesh,

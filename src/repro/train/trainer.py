@@ -71,8 +71,13 @@ def run_decentralized(
     cfg = meth.coerce_config(sdm_cfg)
     sim = meth.make_reference(seq, cfg)
     per_node = jax.tree.map(lambda x: x[0], params_stack)
-    per_step_elems = meth.transmitted_elements(per_node, cfg)
-    per_step_bits = method_mod.transmitted_bits(meth, per_node, cfg)
+    # per-link schedule-aware accounting: payload size x the mean
+    # out-degree over the sequence's rounds (union-graph degree on the
+    # replica transport), so time-varying runs are charged what their
+    # ppermute rounds actually move.
+    per_step_elems = method_mod.transmitted_elements(meth, per_node, cfg,
+                                                     seq=seq)
+    per_step_bits = method_mod.transmitted_bits(meth, per_node, cfg, seq=seq)
 
     state = sim.init(params_stack)
     key = jax.random.PRNGKey(seed)

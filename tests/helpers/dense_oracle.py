@@ -1,0 +1,46 @@
+"""The EXPLICIT dense W(t) oracle for time-varying SDM-DSGD.
+
+A from-scratch simulator of Algorithm 1 that tracks ONLY (x, d) — no
+incremental neighbour sum, no replicas — and mixes with the full dense
+matrix of the current round each step. This is the acceptance oracle the
+replica-correct reference must match bit-comparably; it lives in ONE
+place so the parity sweep and the exactness property test cannot drift
+onto different semantics.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gossip, sdm_dsgd
+
+
+def sdm_dense_wt_oracle(seq, cfg, x0, grad_stack, steps: int,
+                        base_key) -> np.ndarray:
+    """Run ``steps`` iterations on the stacked (n, ...) single-leaf state.
+
+    ``grad_stack(x) -> (n, ...) gradients``; the sparsifier draws use the
+    reference executor's exact key schedule (leaf 0 of ``base_key``,
+    ``node_round_key`` per node and step) and the gradient passes through
+    the shared ``masked_grad`` (noise/clipping are not the semantics
+    under test). Returns the final public-copy stack.
+    """
+    n = seq.n_nodes
+    comp = sdm_dsgd.compressor_of(cfg)
+    ws = jnp.asarray(seq.weights_stack(), jnp.float32)
+    x = x0
+    d = jnp.zeros_like(x)
+    leaf_key = jax.random.fold_in(base_key, 0)
+    for t in range(steps):
+        keys = jax.vmap(
+            lambda i: gossip.node_round_key(leaf_key, i, t))(jnp.arange(n))
+        sd = jax.vmap(
+            lambda i, k, v: comp.decompress(comp.compress(k, v, node=i)))(
+            jnp.arange(n), keys, d)
+        x = x + sd
+        g = grad_stack(x)
+        g = sdm_dsgd.masked_grad({"w": g}, base_key, sigma=cfg.sigma,
+                                 clip_c=cfg.clip_c)["w"]
+        m = jnp.einsum("ij,j...->i...", ws[t % seq.length], x)
+        y = (1.0 - cfg.theta) * x + cfg.theta * (m - cfg.gamma * g)
+        d = y - x
+    return np.asarray(x)

@@ -74,6 +74,21 @@ CASES = {
         ("sdm-dsgd:het", "ring8", "fixedk_packed"),
         ("sdm-dsgd:het", "torus2x2", "fixedk_packed"),
     ],
+    # Replica-correct time-varying gossip: genuinely varying W(t) runs the
+    # union-graph replica transport. SDM cases additionally check the
+    # reference against an EXPLICIT dense W(t) oracle (no incremental
+    # state); compressed gradient-push cases additionally check the
+    # sum x / sum w mass-conservation invariant on P(t); all cases check
+    # per-link schedule-aware wire accounting against the HLO payload.
+    "time_varying": [
+        ("sdm-dsgd", "matchings8x2", "bernoulli"),
+        ("sdm-dsgd", "matchings8x2", "fixedk_packed"),
+        ("sdm-dsgd", "matchings8x2", "qsgd"),
+        ("sdm-dsgd-fused", "matchings8x2", "fixedk_packed"),
+        ("gradient-push", "matchings8x2", "bernoulli"),
+        ("gradient-push", "matchings8x2", "fixedk"),
+        ("gradient-push", "matchings8x2", "qsgd"),
+    ],
 }
 
 # wire bits per element of each HLO dtype that can cross a permute
@@ -116,6 +131,46 @@ def debias(meth_name: str, x_tree, state):
     if meth_name == "gradient-push":
         return gradient_push._debias(x_tree, state.w)
     return x_tree
+
+
+def sdm_oracle_x(seq, cfg, params_stack, a_stack, b_stack, node_grad,
+                 steps: int) -> np.ndarray:
+    """EXPLICIT dense W(t) simulator (the shared ``dense_oracle`` helper):
+    no incremental state whatsoever — the acceptance oracle the
+    replica-correct reference must match bit-comparably (<= 1e-6)."""
+    from dense_oracle import sdm_dense_wt_oracle   # sibling module
+
+    grad_stack = lambda x: jax.vmap(
+        lambda w, a, b: node_grad(w, a, b)["w"])(x, a_stack, b_stack)
+    return sdm_dense_wt_oracle(seq, cfg, params_stack["w"], grad_stack,
+                               steps, BASE_KEY)
+
+
+def push_conservation_probe(seq, mode: str) -> "tuple[float, float]":
+    """(mass_err, z_err) of compressed push-sum PURE GOSSIP on ``seq``.
+
+    gamma=0, sigma=0: sum x / sum w must stay the exact initial mean at
+    every step (mass conservation on time-varying P(t)) and every node's
+    de-biased estimate must converge to it.
+    """
+    cfg = gradient_push.GradientPushConfig(
+        gamma=0.0, sigma=0.0, compressor=mode, p=0.4)
+    sim = method_mod.get("gradient-push").make_reference(seq, cfg)
+    rng = np.random.default_rng(5)
+    stack = {"w": jnp.asarray(rng.normal(size=(seq.n_nodes, 6)), jnp.float32)}
+    mean0 = np.mean(np.asarray(stack["w"]), axis=0)
+    state = sim.init(stack)
+    zero_grad = lambda p, b: (jax.tree.map(jnp.zeros_like, p), 0.0)
+    key = jax.random.PRNGKey(0)
+    step = jax.jit(lambda s, k: sim.step(s, zero_grad, None, k))
+    mass_err = 0.0
+    for _ in range(200):
+        key, sub = jax.random.split(key)
+        state, _ = step(state, sub)
+        cons = np.asarray(sim.consensus(state)["w"])
+        mass_err = max(mass_err, float(np.max(np.abs(cons - mean0))))
+    z = np.asarray(sim.eval_params(state)["w"])
+    return mass_err, float(np.max(np.abs(z - mean0)))
 
 
 def run_case(meth_key: str, topo_spec: str, mode: str) -> None:
@@ -225,9 +280,12 @@ def run_case(meth_key: str, topo_spec: str, mode: str) -> None:
         kb = sparsifier.num_kept(DIM, p_worst)
         # Satellite check: ONE batched sender top_k per (leaf, branch) +
         # one for the node's own indices — not one sort per shift round.
+        # The replica transport is branch-free: exactly one batched union
+        # draw + the own-index draw, regardless of sequence length.
+        max_sorts = 2 if gossip.needs_replicas(seq) else 1 + seq.length
         sorts = hlo.count(" sort(") + hlo.count(" sort.")
         line += (f" WIRE_ELEMS {payload} EXPECTED_WIRE_ELEMS {kb}"
-                 f" SORT_COUNT {sorts} MAX_SORTS {1 + seq.length}")
+                 f" SORT_COUNT {sorts} MAX_SORTS {max_sorts}")
     elif mode.split(":")[0] in ("fixedk", "block", "qsgd"):
         # compressed gradient-push / sdm qsgd: the exchange_payload
         # transport. Assert the largest single wire payload stays at the
@@ -241,6 +299,52 @@ def run_case(meth_key: str, topo_spec: str, mode: str) -> None:
         else:
             exp_bits = sparsifier.num_kept(DIM, 0.25) * 32
         line += f" WIRE_BITS {max_bits} MAX_WIRE_BITS {exp_bits}"
+
+    if seq.length > 1 and mode != "-":
+        # ---- replica-correct time-varying checks ----------------------
+        from fractions import Fraction
+        useq = gossip.union_schedule(seq)
+        union_deg = Fraction(sum(len(r.perm) for r in useq.rounds), n)
+        round_deg = Fraction(
+            sum(sum(len(r.perm) for r in s.rounds) for s in seq.schedules),
+            n * seq.length)
+        base_mode = mode.split(":")[0]
+        if base_mode in ("fixedk", "block") or \
+                mode in ("fixedk_packed", "fixedk_rows"):
+            pay = sparsifier.num_kept(DIM, 0.25)
+        elif base_mode == "qsgd":
+            pay = DIM
+        else:                      # bernoulli: informative expectation p*d
+            pay = Fraction(repr(0.25)) * DIM
+        # schedule-aware per-link accounting vs an independent
+        # re-derivation: payload x union-degree (replica transport), plus
+        # the mass scalar on the current-round graph for push-sum.
+        params_el = {"w": jnp.zeros((DIM,), jnp.float32)}
+        acc = method_mod.transmitted_elements(meth, params_el, cfg, seq=seq)
+        if meth_name == "gradient-push":
+            exp_acc = round(pay * union_deg + round_deg)
+        else:
+            exp_acc = round(pay * union_deg)
+        # ...and vs the HLO: the replica transport is switch-free, so the
+        # compiled step must carry the payload over EXACTLY one
+        # collective-permute per union round.
+        pls = permute_payloads()
+        if base_mode == "qsgd":
+            pperms = sum(1 for f, b in pls if b >= DIM * 8)
+        elif isinstance(pay, Fraction):          # dense bernoulli payload
+            pperms = sum(1 for f, _ in pls if f == DIM)
+        else:
+            pperms = sum(1 for f, _ in pls if f == pay)
+        line += (f" ACC_ELEMS {acc} EXPECTED_ACC_ELEMS {exp_acc}"
+                 f" PAYLOAD_PERMS {pperms} UNION_ROUNDS {useq.n_replicas}")
+        if meth_name == "sdm-dsgd":
+            # the reference must equal an EXPLICIT dense W(t) simulator
+            ox = sdm_oracle_x(seq, cfg, params_stack, a_stack, b_stack,
+                              node_grad, STEPS)
+            line += f" ORACLE_MAXERR {float(np.max(np.abs(ox - ref_x)))}"
+        if meth_name == "gradient-push":
+            m_err, z_err = push_conservation_probe(seq, mode)
+            line += f" MASS_ERR {m_err} Z_ERR {z_err}"
     print(line, flush=True)
 
 

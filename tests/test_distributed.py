@@ -62,7 +62,7 @@ def _run_group(group: str) -> list[dict]:
 
 
 @pytest.mark.parametrize("group", ["sdm_core", "sdm_variants", "baselines",
-                                   "compressed"])
+                                   "compressed", "time_varying"])
 def test_method_parity_sweep(group):
     cases = _run_group(group)
     for c in cases:
@@ -78,3 +78,19 @@ def test_method_parity_sweep(group):
             # compressed payloads: biggest single permute stays at the
             # compressed size (<= p * dense + the separate index leaf)
             assert 0 < int(c["WIRE_BITS"]) <= int(c["MAX_WIRE_BITS"]), c
+        if "ORACLE_MAXERR" in c:
+            # the acceptance oracle: the time-varying SDM reference is
+            # bit-comparable to an EXPLICIT dense W(t) simulator
+            assert float(c["ORACLE_MAXERR"]) <= 1e-6, c
+        if "MASS_ERR" in c:
+            # compressed push-sum on B-connected sequences: sum x / sum w
+            # conserved at every step; de-biased estimates reach the mean
+            assert float(c["MASS_ERR"]) < 1e-4, c
+            assert float(c["Z_ERR"]) < 0.05, c
+        if "ACC_ELEMS" in c:
+            # per-link schedule-aware accounting == independent
+            # re-derivation from the sequence's union/round degrees...
+            assert c["ACC_ELEMS"] == c["EXPECTED_ACC_ELEMS"], c
+            # ...and the HLO carries the payload over exactly one
+            # collective-permute per union round (switch-free delivery)
+            assert int(c["PAYLOAD_PERMS"]) == int(c["UNION_ROUNDS"]), c

@@ -41,26 +41,32 @@ def test_dryrun_decode_case():
 
 PAIR_SCRIPT = """
 from repro.launch.dryrun import build_case
-rec = build_case("gemma2-2b", "train_4k", "1x1", {method!r}, "bernoulli",
+rec = build_case("gemma2-2b", "train_4k", {mesh!r}, {method!r}, "bernoulli",
                  out_root="", verbose=False, probes=False, smoke=True,
-                 compressor={comp!r})
+                 compressor={comp!r}, topology={topology!r})
 assert rec["status"] == "ok", rec
-print("PAIR_OK", {method!r}, {comp!r})
+print("PAIR_OK", {method!r}, {comp!r}, {topology!r})
 """
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("method,comp", [
-    ("gradient-push", "fixedk"),     # compressed push-sum state templates
-    ("sdm-dsgd", "qsgd:8"),          # int8 payload transport
-    ("sdm-dsgd-fused", "block:128"), # block granularity through the fused step
-    ("dsgd", "fixedk"),              # compressor ignored by full-state methods
+@pytest.mark.parametrize("method,comp,topology,mesh", [
+    ("gradient-push", "fixedk", "ring", "1x1"),  # compressed push-sum state
+    ("sdm-dsgd", "qsgd:8", "ring", "1x1"),       # int8 payload transport
+    ("sdm-dsgd-fused", "block:128", "ring", "1x1"),  # block gran, fused step
+    ("dsgd", "fixedk", "ring", "1x1"),     # compressor ignored by full-state
+    # time-varying replica transport: the union-exchange path (no
+    # lax.switch on delivery; REPLICA state leaves) must stay lowerable
+    # on the container jax's full-manual shard_map fallback — needs a
+    # real multi-node mesh, a 1-node mesh degenerates matchings away
+    ("sdm-dsgd", "fixedk", "matchings:2", "4x1"),
 ])
-def test_dryrun_method_compressor_pair(method, comp):
+def test_dryrun_method_compressor_pair(method, comp, topology, mesh):
     """The CI (method x compressor) loop's representative pairs: every
-    pair must at least lower + compile on the 1-device smoke mesh."""
+    pair must at least lower + compile on the smoke mesh."""
     out = subprocess.run(
-        [sys.executable, "-c", PAIR_SCRIPT.format(method=method, comp=comp)],
+        [sys.executable, "-c", PAIR_SCRIPT.format(
+            method=method, comp=comp, topology=topology, mesh=mesh)],
         capture_output=True, text=True,
         env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root",
              "JAX_PLATFORMS": "cpu"},

@@ -153,6 +153,49 @@ def test_static_spec_is_length_one_sequence():
     assert gossip.ensure_sequence(seq.schedules[0]).length == 1
 
 
+def test_replica_state_templates_on_time_varying_schedules():
+    """Genuinely time-varying schedules grow the REPLICA state leaves
+    (per union-round public-copy slots); static schedules elide them.
+    Compressed push-sum on matchings — REJECTED before the replica
+    rework — now builds reference, state templates, and replica stacks."""
+    seq = gossip.sequence_by_name("matchings:2", 8, seed=0)
+    ring = gossip.sequence_by_name("ring", 8)
+    r = gossip.union_schedule(seq).n_replicas
+
+    meth = method.get("sdm-dsgd")
+    cfg = sdm_dsgd.SDMConfig(p=0.25, theta=0.2)
+    assert method.state_fields_of(meth, cfg, ring) == meth.state_fields
+    tv = method.state_fields_of(meth, cfg, seq)
+    assert ("xhat", method.REPLICA) in tv
+    x = {"w": jax.ShapeDtypeStruct((8, 7), jnp.float32)}
+    sds = method.state_shape_dtype(meth, x, cfg, seq=seq)
+    assert sds.xhat["w"].shape == (8, r, 7)
+    assert method.state_shape_dtype(meth, x, cfg, seq=ring).xhat is None
+
+    # compressed gradient-push: xhat_nb replica stack only when BOTH
+    # compressed and time-varying
+    gp = method.get("gradient-push")
+    gcfg = gradient_push.GradientPushConfig(compressor="fixedk", p=0.25)
+    assert ("xhat_nb", method.REPLICA) in method.state_fields_of(
+        gp, gcfg, seq)
+    assert ("xhat_nb", method.REPLICA) not in method.state_fields_of(
+        gp, gcfg, ring)
+    assert ("xhat_nb", method.REPLICA) not in method.state_fields_of(
+        gp, gradient_push.GradientPushConfig(), seq)
+    gsds = method.state_shape_dtype(gp, x, gcfg, seq=seq)
+    assert gsds.xhat_nb["w"].shape == (8, r, 7)
+
+    # stacked init materializes the replica stacks at the shared x_0
+    stack = {"w": jnp.ones((8, 7), jnp.float32)}
+    st = meth.init_stacked(stack, seq, cfg)
+    assert st.xhat["w"].shape == (8, r, 7)
+    np.testing.assert_array_equal(np.asarray(st.xhat["w"]), 1.0)
+    gst = gp.init_stacked(stack, seq, gp.coerce_config(gcfg))
+    assert gst.xhat_nb["w"].shape == (8, r, 7)
+    # reference construction no longer rejects the combination
+    gp.make_reference(seq, gcfg)
+
+
 # ---------------------------------------------------------------------------
 # Heterogeneous per-node p.
 # ---------------------------------------------------------------------------
