@@ -24,6 +24,9 @@ BENCHES = {
     "kernels": ("benchmarks.kernel_bench", "Pallas kernel micro-benches"),
     "roofline": ("benchmarks.roofline",
                  "three-term roofline from the dry-run artifacts"),
+    "perf": ("benchmarks.perf_wire",
+             "wire-plane perf snapshot -> BENCH_perf.json (permutes/step, "
+             "wire bits, sorts, fusion factor)"),
 }
 
 

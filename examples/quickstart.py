@@ -44,7 +44,9 @@ def main() -> None:
         grad_fn=grad_fn, batches=batches, steps=STEPS, privacy=pp,
         eps_target=1.0, eval_fn=eval_fn, eval_every=50, log_every=50)
 
-    full = sum(int(p.size) for p in jax.tree.leaves(params0))
+    # compare against DSGD's cost on the SAME wire plane (the transport
+    # ships the padded (rows, LANE) buffer, so both sides pad alike)
+    full = sum(int(w.size) for w in sdm_dsgd.wire_shape_tree(params0))
     sent = sdm_dsgd.transmitted_elements_per_step(params0, cfg)
     print(f"\nfinal loss        : {res.losses[-1]:.4f}")
     print(f"test accuracy     : {res.eval_accuracy[-1]:.4f}")

@@ -22,7 +22,7 @@ from repro.core.privacy import (PrivacyParams, PrivacyAccountant, epsilon_sdm,
                                 epsilon_alternative, sigma_for_budget,
                                 max_iterations, SIGMA_SQ_MIN)
 from repro.core import (topology, theory, sparsifier, gossip, clipping,
-                        compressor, method)
+                        compressor, method, plane)
 
 __all__ = [
     "SDMConfig", "SDMState", "ReferenceSimulator", "init_distributed_state",
@@ -36,4 +36,5 @@ __all__ = [
     "PrivacyAccountant", "epsilon_sdm", "epsilon_alternative",
     "sigma_for_budget", "max_iterations", "SIGMA_SQ_MIN", "topology",
     "theory", "sparsifier", "gossip", "clipping", "compressor", "method",
+    "plane",
 ]

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import gossip
+from repro.core import plane as plane_mod
 from repro.core.sdm_dsgd import SDMConfig, masked_grad
 from repro.core.topology import Topology
 
@@ -116,10 +117,15 @@ def dsgd_distributed_step(state: DSGDState, grads: PyTree, *, base_key: jax.Arra
         gossip.node_round_key(base_key, me, state.step), 0x5eed)
     g = masked_grad(grads, noise_key, sigma=cfg.sigma, clip_c=cfg.clip_c)
 
-    mixed_tree = jax.tree.map(
-        lambda x: sw.astype(x.dtype) * x + gossip.exchange(
-            seq, x, axis_name, node_index=node_index, step=state.step),
-        state.x)
+    # Full-state gossip over the WIRE PLANE (repro.core.plane): the whole
+    # tree crosses as one contiguous buffer per bucket, so the compiled
+    # step issues R collective-permutes per exchange regardless of the
+    # model's leaf count.
+    spec = plane_mod.ParamPlane.for_tree(state.x)
+    mixed_tree = spec.unpack(tuple(
+        sw * p + gossip.exchange(seq, p, axis_name,
+                                 node_index=node_index, step=state.step)
+        for p in spec.pack(state.x)))
     x = jax.tree.map(lambda m, gr: m - cfg.gamma * gr.astype(m.dtype),
                      mixed_tree, g)
     return DSGDState(x=x, step=state.step + 1)

@@ -80,9 +80,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import compressor as compressor_mod, gossip
-from repro.core.sdm_dsgd import (_leaf_keys, _payload_exchange_leaves,
-                                 _replica_payload_exchange_leaves,
-                                 _replica_stack, masked_grad)
+from repro.core import plane as plane_mod
+from repro.core.sdm_dsgd import (_plane_payload_exchange, _replica_planes,
+                                 masked_grad, sparsify_planes_stacked)
 
 __all__ = ["GradientPushConfig", "GradientPushState", "GradientPushReference",
            "init_push_state", "init_compressed_push_state",
@@ -227,17 +227,13 @@ class GradientPushReference:
         n = self.seq.n_nodes
         comp = self.comp
 
-        def roundtrip_stack(leaf_key, delta_stack):
-            def one(i, v):
-                k = gossip.node_round_key(leaf_key, i, state.step)
-                pl = _contract_payload(comp, comp.compress(k, v, node=i),
-                                       node=i)
-                return comp.decompress(pl).astype(v.dtype)
-            return jax.vmap(one)(jnp.arange(n), delta_stack)
-
         delta = jax.tree.map(jnp.subtract, x_half, state.xhat)
-        delta_hat = jax.tree.map(roundtrip_stack, _leaf_keys(key, delta),
-                                 delta)
+        # plane-granular draws (the wire transport's granularity), with
+        # the contraction applied to each payload exactly as the
+        # distributed executor ships it.
+        delta_hat = sparsify_planes_stacked(
+            comp, delta, key, state.step, n,
+            transform=lambda pl, i: _contract_payload(comp, pl, node=i))
         xhat = jax.tree.map(jnp.add, state.xhat, delta_hat)
         if self.replica_exact:
             # exact W(t)-mixing: the stacked xhat IS every node's public
@@ -286,6 +282,8 @@ def init_push_state(params: PyTree) -> GradientPushState:
                              step=jnp.zeros((), jnp.int32))
 
 
+
+
 def init_compressed_push_state(params: PyTree, nb_row_sum,
                                n_replicas: int | None = None
                                ) -> GradientPushState:
@@ -294,19 +292,22 @@ def init_compressed_push_state(params: PyTree, nb_row_sum,
     may be a traced gather on the node index). ``n_replicas`` (genuinely
     time-varying schedules) allocates the per-neighbour replica stack —
     every slot starts at the shared x_0, the same identical-start
-    assumption s_0 relies on."""
+    assumption s_0 relies on. ``xhat`` / ``s`` / ``xhat_nb`` live as
+    WIRE PLANES (f32 (rows, LANE) buffers, see ``repro.core.plane``) —
+    the shape the compressed differential transport consumes."""
+    xp = plane_mod.ParamPlane.for_tree(params).pack(params)
     if n_replicas:
         # replica path: s is recomputed fresh from xhat_nb every step and
         # never read from state — drop the buffer (one model-size saving
         # per node on top of the replica stack).
         return GradientPushState(x=params, w=jnp.ones((), jnp.float32),
                                  step=jnp.zeros((), jnp.int32),
-                                 xhat=params, s=None,
-                                 xhat_nb=_replica_stack(params, n_replicas))
-    s0 = jax.tree.map(lambda x: (nb_row_sum * x).astype(x.dtype), params)
+                                 xhat=xp, s=None,
+                                 xhat_nb=_replica_planes(xp, n_replicas))
+    s0 = tuple(nb_row_sum * p for p in xp)
     return GradientPushState(x=params, w=jnp.ones((), jnp.float32),
                              step=jnp.zeros((), jnp.int32),
-                             xhat=params, s=s0)
+                             xhat=xp, s=s0)
 
 
 def gradient_push_distributed_step(state: GradientPushState, grads: PyTree, *,
@@ -335,50 +336,51 @@ def gradient_push_distributed_step(state: GradientPushState, grads: PyTree, *,
     w_push = sw * state.w + gossip.exchange(seq, state.w, axis_name,
                                             node_index=node_index,
                                             step=state.step)
+    spec = plane_mod.ParamPlane.for_tree(state.x)
     if comp is None:
-        x = jax.tree.map(
-            lambda v: sw.astype(v.dtype) * v + gossip.exchange(
-                seq, v, axis_name, node_index=node_index, step=state.step),
-            x_half)
+        # full-state push rides the wire plane too: R permutes per
+        # bucket per step, independent of the model's leaf count.
+        hp = spec.pack(x_half)
+        x = spec.unpack(tuple(
+            sw * p + gossip.exchange(seq, p, axis_name,
+                                     node_index=node_index,
+                                     step=state.step)
+            for p in hp))
         return GradientPushState(x=x, w=w_push, step=state.step + 1)
 
-    delta = jax.tree.map(jnp.subtract, x_half, state.xhat)
+    delta = tuple(h - xh for h, xh in zip(spec.pack(x_half), state.xhat))
+    contract = lambda pl: _contract_payload(comp, pl, node=me)
     if gossip.needs_replicas(seq):
         # replica-correct time-varying path: increments cross every UNION
         # edge every round (replicas exact by construction) and the
         # neighbour sum is recomputed fresh with P(t)'s weights.
         useq = gossip.union_schedule(seq)
-        delta_hat, incr = _replica_payload_exchange_leaves(
+        delta_hat, incr = _plane_payload_exchange(
             delta, comp, useq=useq, axis_name=axis_name, base_key=base_key,
-            step=state.step, me=me,
-            transform=lambda pl: _contract_payload(comp, pl, node=me))
-        xhat = jax.tree.map(jnp.add, state.xhat, delta_hat)
-        xhat_nb = jax.tree.map(jnp.add, state.xhat_nb, incr)
+            step=state.step, me=me, transform=contract)
+        xhat = tuple(xh + dh for xh, dh in zip(state.xhat, delta_hat))
+        xhat_nb = tuple(nb + inc for nb, inc in zip(state.xhat_nb, incr))
         wv = gossip.replica_recv_weights(useq, me, state.step)
         # the fresh neighbour sum is consumed by the x update below and
         # NOT stored: replica-path state carries s=None (dead buffer).
-        s = jax.tree.map(
-            lambda xh: jnp.tensordot(wv.astype(xh.dtype), xh,
-                                     axes=([0], [0])), xhat_nb)
+        s = tuple(jnp.tensordot(wv.astype(xh.dtype), xh, axes=([0], [0]))
+                  for xh in xhat_nb)
         s_store = None
     else:
-        # the SAME per-leaf payload transport (and key schedule) SDM's
+        # the SAME plane payload transport (and key schedule) SDM's
         # qsgd path uses, contraction applied to each payload pre-wire.
-        delta_hat, nb_sum = _payload_exchange_leaves(
+        delta_hat, nb_sum = _plane_payload_exchange(
             delta, comp, schedule=seq, axis_name=axis_name,
             base_key=base_key, step=state.step, me=me,
-            node_index=node_index,
-            transform=lambda pl: _contract_payload(comp, pl, node=me))
-        xhat = jax.tree.map(jnp.add, state.xhat, delta_hat)
+            node_index=node_index, transform=contract)
+        xhat = tuple(xh + dh for xh, dh in zip(state.xhat, delta_hat))
         xhat_nb = state.xhat_nb
-        s = jax.tree.map(jnp.add, state.s, nb_sum)
+        s = tuple(s_ + nb for s_, nb in zip(state.s, nb_sum))
         s_store = s
     # x <- x_half + chi ((P - I) xhat); mass rides the same damped
     # operator M = I + chi (P - I) so z = x / w stays de-biased.
-    x = jax.tree.map(
-        lambda xh, xp, ss: xh + cfg.chi * (sw.astype(xh.dtype) * xp
-                                           + ss - xp),
-        x_half, xhat, s)
+    corr = tuple(cfg.chi * (sw * xh + ss - xh) for xh, ss in zip(xhat, s))
+    x = jax.tree.map(jnp.add, x_half, spec.unpack(corr))
     w = state.w + cfg.chi * (w_push - state.w)
     return GradientPushState(x=x, w=w, step=state.step + 1, xhat=xhat,
                              s=s_store, xhat_nb=xhat_nb)

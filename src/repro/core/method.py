@@ -63,10 +63,10 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import (baselines, compressor as compressor_mod, gossip,
-                        gradient_push, sdm_dsgd)
+                        gradient_push, plane as plane_mod, sdm_dsgd)
 
 __all__ = ["Method", "DistributedExecutor", "register", "get", "names",
-           "normalize", "PARAM", "SCALAR", "COUNTER", "REPLICA",
+           "normalize", "PARAM", "SCALAR", "COUNTER", "PLANE", "REPLICA",
            "state_fields_of", "state_shape_dtype", "state_shardings",
            "transmitted_elements", "transmitted_bits"]
 
@@ -77,7 +77,13 @@ PyTree = Any
 PARAM = "param"      # shaped like the parameter tree
 SCALAR = "scalar"    # one f32 per node
 COUNTER = "counter"  # one i32 per node (the iteration counter)
-REPLICA = "replica"  # per-neighbour public-copy stack: each param leaf
+PLANE = "plane"      # wire-plane buffers (repro.core.plane): a tuple of
+#                      f32 (rows, LANE) planes per node — one per
+#                      sharding bucket — stacked to (n, rows, LANE).
+#                      What the distributed executors carry for the
+#                      neighbour sum s, the differential d, and the
+#                      compressed push public copy xhat.
+REPLICA = "replica"  # per-neighbour public-copy stack: each wire PLANE
 #                      gains a leading (n_replicas,) axis (replicated on
 #                      the mesh; the node axis still shards dim 0 of the
 #                      stacked state). Memory cost: deg_union x model per
@@ -204,22 +210,37 @@ def _n_replicas(seq) -> int:
     return gossip.union_schedule(gossip.ensure_sequence(seq)).n_replicas
 
 
+def _plane_spec_stacked(x_stack: PyTree) -> plane_mod.ParamPlane:
+    """Wire-plane layout of the per-node parameter tree (leading axis
+    stripped). Bucket keys come from the ``plane.use_buckets`` context —
+    callers (train.steps) install it around templates AND tracing so the
+    layouts can never diverge."""
+    return plane_mod.ParamPlane.for_stacked(x_stack)
+
+
 def state_shape_dtype(meth: Method, x_stack: PyTree, cfg=None, seq=None):
     """Stacked-state ShapeDtypeStructs from the stacked params template.
 
-    REPLICA fields need the schedule: each param leaf (n, ...) grows to
-    (n, n_replicas, ...), one slot per union-graph round.
+    PLANE fields are tuples of (n, rows, lane) f32 planes (one per
+    sharding bucket); REPLICA fields additionally need the schedule:
+    each plane grows to (n, n_replicas, rows, lane), one slot per
+    union-graph round.
     """
     n = jax.tree.leaves(x_stack)[0].shape[0]
+    spec = _plane_spec_stacked(x_stack)
     kw = {}
     for fname, kind in state_fields_of(meth, cfg, seq):
         if kind == PARAM:
             kw[fname] = x_stack
+        elif kind == PLANE:
+            kw[fname] = tuple(
+                jax.ShapeDtypeStruct((n,) + b.shape, jnp.float32)
+                for b in spec.buckets)
         elif kind == REPLICA:
             r = _n_replicas(seq)
-            kw[fname] = jax.tree.map(
-                lambda v: jax.ShapeDtypeStruct(
-                    (v.shape[0], r) + tuple(v.shape[1:]), v.dtype), x_stack)
+            kw[fname] = tuple(
+                jax.ShapeDtypeStruct((n, r) + b.shape, jnp.float32)
+                for b in spec.buckets)
         elif kind == SCALAR:
             kw[fname] = jax.ShapeDtypeStruct((n,), jnp.float32)
         else:
@@ -227,26 +248,45 @@ def state_shape_dtype(meth: Method, x_stack: PyTree, cfg=None, seq=None):
     return meth.state_cls(**kw)
 
 
-def _replica_leaf_sharding(ns: NamedSharding) -> NamedSharding:
-    """The param leaf's sharding with the replica axis inserted at dim 1.
-
-    The node axis keeps dim 0; the replica axis is replicated; any model
-    sharding of the trailing dims is preserved.
-    """
-    spec = tuple(ns.spec)
-    lead = spec[0] if spec else None
-    return NamedSharding(ns.mesh, P(lead, None, *spec[1:]))
+def _plane_sharding(mesh, lead, bucket: plane_mod.PlaneBucket,
+                    n_lead_axes: int = 1) -> NamedSharding:
+    """Stacked plane sharding: node axis on dim 0, bucket mesh axis (if
+    any — TP buckets carry ``(mesh_axis, cols)`` keys) on the lane dim,
+    everything else replicated. ``n_lead_axes=2`` inserts the replicated
+    replica axis."""
+    mid = (None,) * n_lead_axes
+    lane_axis = bucket.key[0] if bucket.key is not None else None
+    return NamedSharding(mesh, P(lead, *mid[1:], None, lane_axis))
 
 
 def state_shardings(meth: Method, x_shardings: PyTree, node_vec_sharding,
-                    cfg=None, seq=None):
-    """Stacked-state NamedShardings from the params-tree shardings."""
+                    cfg=None, seq=None, template: PyTree = None):
+    """Stacked-state NamedShardings from the params-tree shardings.
+
+    ``template`` is the stacked params ShapeDtype tree — required to
+    derive the plane layout for PLANE/REPLICA fields (shardings alone
+    carry no shapes). Methods without plane state may omit it; a
+    plane-state method with no template raises.
+    """
+    mesh = node_vec_sharding.mesh
+    lead = tuple(node_vec_sharding.spec)[0] \
+        if tuple(node_vec_sharding.spec) else None
+    spec = _plane_spec_stacked(template) if template is not None else None
     kw = {}
     for fname, kind in state_fields_of(meth, cfg, seq):
+        if kind in (PLANE, REPLICA) and spec is None:
+            raise ValueError(
+                f"state_shardings: field {fname!r} of {meth.name} is "
+                "plane-shaped; pass template= (the stacked params "
+                "ShapeDtype tree) so the plane layout can be derived")
         if kind == PARAM:
             kw[fname] = x_shardings
+        elif kind == PLANE:
+            kw[fname] = tuple(_plane_sharding(mesh, lead, b)
+                              for b in spec.buckets)
         elif kind == REPLICA:
-            kw[fname] = jax.tree.map(_replica_leaf_sharding, x_shardings)
+            kw[fname] = tuple(_plane_sharding(mesh, lead, b, n_lead_axes=2)
+                              for b in spec.buckets)
         else:
             kw[fname] = node_vec_sharding
     return meth.state_cls(**kw)
@@ -273,35 +313,32 @@ def _sdm_fields(cfg, seq=None) -> Tuple[Tuple[str, str], ...]:
 
 
 def _fused_fields(cfg, seq=None) -> Tuple[Tuple[str, str], ...]:
-    base = (("x", PARAM), ("s", PARAM), ("step", COUNTER))
+    base = (("x", PARAM), ("s", PLANE), ("step", COUNTER))
     if seq is not None and gossip.needs_replicas(seq):
         return base + (("xhat", REPLICA),)
     return base
 
 
-def _stacked_replicas(stack: PyTree, seq) -> PyTree:
-    """(n, n_replicas, ...) replica stacks, every slot at the shared x_0."""
+def _stacked_plane_replicas(planes, seq) -> Tuple[jax.Array, ...]:
+    """(n, n_replicas, rows, lane) replica planes, every slot at x_0."""
     r = _n_replicas(seq)
-    return jax.tree.map(
-        lambda x: jnp.broadcast_to(x[:, None], (x.shape[0], r) + x.shape[1:]),
-        stack)
+    return tuple(
+        jnp.broadcast_to(p[:, None], (p.shape[0], r) + p.shape[1:])
+        for p in planes)
 
 
 def _sdm_init_stacked(stack: PyTree, seq: gossip.ScheduleSequence, cfg
                       ) -> sdm_dsgd.SDMState:
     n = jax.tree.leaves(stack)[0].shape[0]
     sw = np.asarray(seq.schedules[0].self_weights, np.float32)
-
-    def s0_leaf(x):
-        w = (1.0 - sw).reshape((n,) + (1,) * (x.ndim - 1))
-        return (w * x).astype(x.dtype)
-
-    xhat = _stacked_replicas(stack, seq) if gossip.needs_replicas(seq) \
+    xp = _plane_spec_stacked(stack).pack_stacked(stack)
+    w = jnp.asarray((1.0 - sw).reshape((n, 1, 1)), jnp.float32)
+    s = tuple(w * p for p in xp)
+    xhat = _stacked_plane_replicas(xp, seq) if gossip.needs_replicas(seq) \
         else None
     return sdm_dsgd.SDMState(
-        x=stack, s=jax.tree.map(s0_leaf, stack),
-        d=jax.tree.map(jnp.zeros_like, stack), step=_stacked_counter(n),
-        xhat=xhat)
+        x=stack, s=s, d=tuple(jnp.zeros_like(p) for p in xp),
+        step=_stacked_counter(n), xhat=xhat)
 
 
 def _sdm_distributed(seq: gossip.ScheduleSequence, cfg, axis_name
@@ -453,8 +490,8 @@ def _push_fields(cfg, seq=None) -> Tuple[Tuple[str, str], ...]:
         if seq is not None and gossip.needs_replicas(seq):
             # replica path recomputes the neighbour sum fresh every step:
             # no persistent s buffer, the replica stack replaces it.
-            return base + (("xhat", PARAM), ("xhat_nb", REPLICA))
-        base = base + (("xhat", PARAM), ("s", PARAM))
+            return base + (("xhat", PLANE), ("xhat_nb", REPLICA))
+        base = base + (("xhat", PLANE), ("s", PLANE))
     return base
 
 
@@ -464,15 +501,14 @@ def _push_init_stacked(stack, seq, cfg) -> gradient_push.GradientPushState:
         x=stack, w=jnp.ones((n,), jnp.float32), step=_stacked_counter(n))
     if not getattr(cfg, "compressor", None):
         return base
+    xp = _plane_spec_stacked(stack).pack_stacked(stack)
     if gossip.needs_replicas(seq):
-        return base._replace(xhat=stack,
-                             xhat_nb=_stacked_replicas(stack, seq))
+        return base._replace(xhat=xp,
+                             xhat_nb=_stacked_plane_replicas(xp, seq))
     w0 = seq.schedules[0]
     rs = jnp.asarray(w0.neighbor_weight_sums(), jnp.float32)
-    s0 = jax.tree.map(
-        lambda x: (rs.reshape((n,) + (1,) * (x.ndim - 1)) * x
-                   ).astype(x.dtype), stack)
-    return base._replace(xhat=stack, s=s0)
+    s0 = tuple(rs.reshape((n, 1, 1)) * p for p in xp)
+    return base._replace(xhat=xp, s=s0)
 
 
 def _push_distributed(seq, cfg, axis_name) -> DistributedExecutor:
@@ -520,9 +556,10 @@ def _push_elements(params: PyTree, cfg, seq=None) -> int:
     if comp is None:
         return int(round(_full_state_elements(params, cfg) * payload_deg
                          + mass_deg))   # + push-sum mass w
+    wire = sdm_dsgd.wire_shape_tree(params)
     payload = compressor_mod.node_mean_exact(
         comp.p, lambda i: compressor_mod.tree_wire_elements_exact(
-            comp, params, node=i))
+            comp, wire, node=i))
     return int(round(payload * payload_deg + mass_deg))
 
 
@@ -533,9 +570,10 @@ def _push_bits(params: PyTree, cfg, seq=None, value_bits: int = 32) -> int:
         return int(round((_full_state_elements(params, cfg) * payload_deg
                           + mass_deg) * value_bits))
     # exchange_payload ships explicit indices (no seed regeneration).
+    wire = sdm_dsgd.wire_shape_tree(params)
     payload = compressor_mod.node_mean_exact(
         comp.p, lambda i: compressor_mod.tree_wire_bits_exact(
-            comp, params, value_bits=value_bits, index_sync=False, node=i))
+            comp, wire, value_bits=value_bits, index_sync=False, node=i))
     return int(round(payload * payload_deg + mass_deg * value_bits))
 
 
@@ -544,7 +582,9 @@ def _push_bits(params: PyTree, cfg, seq=None, value_bits: int = 32) -> int:
 # --------------------------------------------------------------------------
 
 def _full_state_elements(params: PyTree, cfg, seq=None) -> int:
-    d = sum(int(x.size) for x in jax.tree.leaves(params))
+    # full-state methods gossip the packed wire plane, so the wire count
+    # is the plane-PADDED size (what the HLO permutes actually move).
+    d = plane_mod.ParamPlane.for_tree(params).padded_size
     if seq is None:
         return d
     return int(round(d * gossip.mean_out_degree(gossip.sequence_of(seq))))
@@ -555,7 +595,7 @@ def _allreduce_elements(params: PyTree, cfg, seq=None) -> int:
     return sum(int(x.size) for x in jax.tree.leaves(params))
 
 
-_SDM_FIELDS = (("x", PARAM), ("s", PARAM), ("d", PARAM), ("step", COUNTER))
+_SDM_FIELDS = (("x", PARAM), ("s", PLANE), ("d", PLANE), ("step", COUNTER))
 
 _SDM = register(Method(
     name="sdm-dsgd",
@@ -575,7 +615,7 @@ register(dataclasses.replace(
     _SDM,
     name="sdm-dsgd-fused",
     state_cls=sdm_dsgd.SDMFusedState,
-    state_fields=(("x", PARAM), ("s", PARAM), ("step", COUNTER)),
+    state_fields=(("x", PARAM), ("s", PLANE), ("step", COUNTER)),
     state_fields_for=_fused_fields,
     make_distributed=_fused_distributed,
     init_stacked=_fused_init_stacked,

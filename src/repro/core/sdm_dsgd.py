@@ -34,6 +34,19 @@ Two implementations, bit-for-bit testable against each other:
   inside `jax.shard_map` with the node axis manual; ring gossip via
   `collective-permute`, optionally packed fixed-k payloads.
 
+Wire-plane transport (PR 5): the whole differential is bucketized into
+contiguous ``repro.core.plane`` wire planes and the compressor draw /
+top-k / ppermute rounds run ONCE PER PLANE instead of once per pytree
+leaf — a compiled distributed step issues exactly R collective-permutes
+per exchange regardless of the model's leaf count, and the distributed
+state carries ``s`` / ``d`` (and the replica stack ``xhat``) as
+plane-shaped f32 buffers. Both executors draw sparsifier/quantizer bits
+at PLANE granularity (one draw over the zero-padded (rows, LANE) buffer
+per bucket, keyed ``fold_in(base, bucket)``), so trajectories CHANGED at
+this PR relative to the per-leaf draws — exactly like the PR-1 break
+when mask draws moved to the canonical LANE-padded shape. Reference and
+distributed were rewired together, so the parity sweep stays tight.
+
 Baselines (DSGD, DC-DSGD) live in ``baselines.py``; DC-DSGD is exactly
 ``SDMConfig(theta=1.0, sigma=0.0)`` — the generalization claim.
 """
@@ -47,11 +60,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import clipping, compressor as compressor_mod, gossip
+from repro.core import plane as plane_mod
 from repro.core.topology import Topology
 
 __all__ = ["SDMConfig", "SDMState", "ReferenceSimulator", "masked_grad",
            "init_distributed_state", "distributed_advance",
-           "distributed_commit", "compressor_of",
+           "distributed_commit", "compressor_of", "wire_shape_tree",
+           "sparsify_planes_stacked",
            "transmitted_elements_per_step", "transmitted_bits_per_step"]
 
 PyTree = Any
@@ -190,12 +205,15 @@ class SDMConfig:
 
 class SDMState(NamedTuple):
     x: PyTree       # public copy (stacked (n, ...) in reference; per-node distributed)
-    s: PyTree       # weighted neighbour sum (distributed only; zeros-like in reference)
-    d: PyTree       # differential pending transmission
+    s: PyTree       # weighted neighbour sum. In the DISTRIBUTED executor
+    #                 this is a tuple of f32 wire planes (one (rows, LANE)
+    #                 buffer per sharding bucket — see repro.core.plane);
+    #                 the reference keeps the stacked tree.
+    d: PyTree       # differential pending transmission (planes distributed)
     step: jax.Array  # iteration counter (int32)
     e: PyTree = None  # error-feedback residual (only when cfg.error_feedback)
     # Per-neighbour public-copy replicas (distributed executor, genuinely
-    # time-varying schedules only): each leaf gains a leading
+    # time-varying schedules only): each PLANE gains a leading
     # (n_replicas,) axis — slot k tracks the union-round-k sender's
     # public copy x_j exactly, so s is recomputed FRESH with the current
     # round's weights (true W(t)-mixing). Memory cost: deg_union x model.
@@ -276,6 +294,36 @@ def _masked_grad(grads: PyTree, key: jax.Array, cfg) -> PyTree:
     return masked_grad(grads, key, sigma=cfg.sigma, clip_c=cfg.clip_c)
 
 
+def sparsify_planes_stacked(comp: compressor_mod.Compressor,
+                            tree_stacked: PyTree, key: jax.Array, step,
+                            n: int, transform=None) -> PyTree:
+    """Plane-granular compressor roundtrip of a node-stacked tree.
+
+    The ONE reference-executor implementation of "what each node puts on
+    the wire": each bucket's zero-padded plane is compressed whole with
+    key ``node_round_key(fold_in(key, bucket), node, step)`` — the exact
+    key schedule and draw shape of the distributed plane transport.
+    ``transform(payload, node)`` optionally rewrites the payload before
+    the roundtrip (compressed push-sum's contraction scaling).
+    """
+    spec = plane_mod.ParamPlane.for_stacked(tree_stacked)
+    planes = spec.pack_stacked(tree_stacked)
+    out = []
+    for b, dpl in enumerate(planes):
+        bkey = jax.random.fold_in(key, b)
+        node_keys = jax.vmap(
+            lambda i: gossip.node_round_key(bkey, i, step))(jnp.arange(n))
+
+        def one(i, k, v):
+            pl = comp.compress(k, v, node=i)
+            if transform is not None:
+                pl = transform(pl, i)
+            return comp.decompress(pl)
+
+        out.append(jax.vmap(one)(jnp.arange(n), node_keys, dpl))
+    return spec.unpack_stacked(tuple(out))
+
+
 def schedule_degree_factor(seq, node: "int | None" = None) -> Fraction:
     """Payload transmissions per node per step on ``seq`` (exact Fraction).
 
@@ -295,28 +343,49 @@ def schedule_degree_factor(seq, node: "int | None" = None) -> Fraction:
                                   node=node)
 
 
+def wire_shape_tree(params: PyTree) -> Tuple[jax.ShapeDtypeStruct, ...]:
+    """The plane-shaped tree the wire accounting runs over.
+
+    The transport compresses the zero-padded (rows, LANE) planes, not
+    the raw leaves, so cost accounting charges the PLANE geometry: one
+    ``num_kept`` ceil over the whole plane per bucket (the round-once
+    convention, now exact by construction) and plane-padded coordinate
+    counts for dense/quantized payloads — byte-for-byte what the HLO
+    collective-permutes actually move.
+
+    Bucket-sensitive like the transport itself: ``ParamPlane.for_tree``
+    consults the ``plane.use_buckets`` context, so accounting for a
+    TP-bucketed run must be computed under the same context the step
+    was traced in (``steps.plane_bucket_tree`` owns the policy); with
+    no context both sides use the single flat bucket.
+    """
+    return plane_mod.ParamPlane.for_tree(params).shape_dtype()
+
+
 def transmitted_elements_per_step(params: PyTree, cfg: SDMConfig,
                                   node: int | None = None, *,
                                   seq=None) -> int:
     """Expected non-zero elements one node transmits per iteration.
 
-    The paper's Figure-3 communication metric ("non-zero digits"). For
-    fixedk mode this is exact; for bernoulli it is the expectation p*d.
-    With heterogeneous per-node p, ``node`` selects whose budget to
-    count; ``node=None`` returns the across-node mean (exact-Fraction
-    mean, rounded once — network total = mean * n_nodes). ``seq`` makes
-    the count schedule-aware (per-link): the payload cost multiplies by
-    the mean out-degree over the sequence's rounds (union-graph degree
-    on the replica transport); ``seq=None`` keeps the legacy
-    one-payload-per-step convention.
+    The paper's Figure-3 communication metric ("non-zero digits"),
+    charged at wire-plane granularity (see ``wire_shape_tree``): for
+    fixedk modes this is exact; for bernoulli it is the expectation
+    p * plane_size. With heterogeneous per-node p, ``node`` selects
+    whose budget to count; ``node=None`` returns the across-node mean
+    (exact-Fraction mean, rounded once — network total = mean *
+    n_nodes). ``seq`` makes the count schedule-aware (per-link): the
+    payload cost multiplies by the mean out-degree over the sequence's
+    rounds (union-graph degree on the replica transport); ``seq=None``
+    keeps the legacy one-payload-per-step convention.
     """
     comp = compressor_of(cfg)
+    wire = wire_shape_tree(params)
     if isinstance(cfg.p, tuple) and cfg.mode != "qsgd" and node is None:
         exact = compressor_mod.node_mean_exact(
             cfg.p, lambda i: compressor_mod.tree_wire_elements_exact(
-                comp, params, node=i))
+                comp, wire, node=i))
     else:
-        exact = compressor_mod.tree_wire_elements_exact(comp, params,
+        exact = compressor_mod.tree_wire_elements_exact(comp, wire,
                                                         node=node)
     return int(round(exact * schedule_degree_factor(seq, node)))
 
@@ -328,23 +397,27 @@ def transmitted_bits_per_step(params: PyTree, cfg: SDMConfig,
                               seq=None) -> int:
     """Exact WIRE BITS one node transmits per iteration.
 
-    The honest companion to the element count: packed formats also need
-    an index side-channel at ceil(log2 d) bits per kept element — unless
-    both endpoints regenerate index sets from the shared seed
-    (``index_sync=True``, the repo's gossip transport), which removes
-    index traffic entirely; quantizers ship every coordinate but at
-    qsgd_bits instead of ``value_bits``. ``node=None`` with per-node p
-    returns the across-node mean (exact-Fraction mean, rounded once).
-    ``seq`` applies the same per-link degree factor as the element count.
+    The honest companion to the element count, at wire-plane granularity
+    (``wire_shape_tree`` — what the HLO payload actually is): packed
+    formats also need an index side-channel at ceil(log2 d) bits per
+    kept element — unless both endpoints regenerate index sets from the
+    shared seed (``index_sync=True``, the repo's gossip transport),
+    which removes index traffic entirely; quantizers ship every plane
+    coordinate but at qsgd_bits instead of ``value_bits`` (sub-byte
+    levels packed into u8 lanes, so the HLO bytes match too).
+    ``node=None`` with per-node p returns the across-node mean
+    (exact-Fraction mean, rounded once). ``seq`` applies the same
+    per-link degree factor as the element count.
     """
     comp = compressor_of(cfg)
+    wire = wire_shape_tree(params)
     kw = dict(value_bits=value_bits, index_sync=index_sync)
     if isinstance(cfg.p, tuple) and cfg.mode != "qsgd" and node is None:
         exact = compressor_mod.node_mean_exact(
             cfg.p, lambda i: compressor_mod.tree_wire_bits_exact(
-                comp, params, node=i, **kw))
+                comp, wire, node=i, **kw))
     else:
-        exact = compressor_mod.tree_wire_bits_exact(comp, params, node=node,
+        exact = compressor_mod.tree_wire_bits_exact(comp, wire, node=node,
                                                     **kw)
     return int(round(exact * schedule_degree_factor(seq, node)))
 
@@ -434,23 +507,13 @@ class ReferenceSimulator:
         ef_scale = cfg.p if cfg.error_feedback else 1.0
 
         # The compressor roundtrip (compress -> decompress) IS the
-        # sparsifier S(.) each node applies before transmitting; the
-        # registry object replaces the old hand-rolled mode branches and
-        # draws the exact same bits (same key schedule, same selection
-        # primitives), so trajectories are unchanged.
-        comp = compressor_of(cfg)
-
-        def sparsify_stack(leaf_key: jax.Array, d_stack: jax.Array) -> jax.Array:
-            node_keys = jax.vmap(
-                lambda i: gossip.node_round_key(leaf_key, i, state.step))(jnp.arange(n))
-
-            def one(i, k, v):
-                pl = comp.compress(k, v, node=i)
-                return comp.decompress(pl).astype(v.dtype)
-
-            return jax.vmap(one)(jnp.arange(n), node_keys, d_stack)
-
-        sd = jax.tree.map(sparsify_stack, _leaf_keys(key, d_in), d_in)
+        # sparsifier S(.) each node applies before transmitting. Draws
+        # happen at WIRE-PLANE granularity — one compress over each
+        # bucket's zero-padded plane, exactly what the distributed
+        # executor puts on the wire — so the two executors' bits can
+        # never diverge (pad coordinates are zero and stay zero).
+        sd = sparsify_planes_stacked(compressor_of(cfg), d_in, key,
+                                     state.step, n)
         if cfg.error_feedback and ef_scale != 1.0:
             sd = jax.tree.map(lambda v: v * ef_scale, sd)
         x = jax.tree.map(jnp.add, state.x, sd)
@@ -527,16 +590,17 @@ class ReferenceSimulator:
 # Distributed per-node step (inside shard_map; node axis manual).
 # ==========================================================================
 
-def _replica_stack(params: PyTree, n_replicas: int) -> PyTree:
-    """Per-neighbour public-copy replicas, all starting at x_0.
+def _replica_planes(planes: Tuple[jax.Array, ...], n_replicas: int
+                    ) -> Tuple[jax.Array, ...]:
+    """Per-neighbour public-copy replica planes, all starting at x_0.
 
     Valid under the same identical-start assumption the s_0 formula uses:
     every neighbour's public copy begins at the shared x_0, and from then
     on slot k advances by exactly the increments the union-round-k sender
-    transmits — so each slot stays an exact copy of x_{j,t}.
+    transmits — so each slot stays an exact copy of x_{j,t} (as a plane).
     """
-    return jax.tree.map(
-        lambda x: jnp.broadcast_to(x[None], (n_replicas,) + x.shape), params)
+    return tuple(jnp.broadcast_to(p[None], (n_replicas,) + p.shape)
+                 for p in planes)
 
 
 def init_distributed_state(params: PyTree, self_weight,
@@ -550,126 +614,145 @@ def init_distributed_state(params: PyTree, self_weight,
     traced scalar (``schedule.self_weight_of(me)`` inside shard_map, for
     topologies whose W_ii varies per node). ``n_replicas`` (genuinely
     time-varying schedules only) allocates the per-neighbour public-copy
-    replica stack — deg_union extra parameter buffers per node.
+    replica stack — deg_union extra plane buffers per node.
+
+    ``s``, ``d`` (and ``xhat``) live as WIRE PLANES — f32 (rows, LANE)
+    buffers, one per sharding bucket — because that is the shape the
+    exchange consumes and produces; only ``x`` keeps the parameter tree
+    (gradients are evaluated there).
     """
-    s0 = jax.tree.map(lambda x: ((1.0 - self_weight) * x).astype(x.dtype),
-                      params)
-    xhat = _replica_stack(params, n_replicas) if n_replicas else None
-    return SDMState(x=params, s=s0, d=_tree_zeros_like(params),
+    spec = plane_mod.ParamPlane.for_tree(params)
+    xp = spec.pack(params)
+    s0 = tuple((1.0 - self_weight) * p for p in xp)
+    d0 = tuple(jnp.zeros_like(p) for p in xp)
+    xhat = _replica_planes(xp, n_replicas) if n_replicas else None
+    return SDMState(x=params, s=s0, d=d0,
                     step=jnp.zeros((), jnp.int32), xhat=xhat)
 
 
-def _sparse_exchange_leaves(d_tree: PyTree, *, schedule, axis_name,
-                            base_key: jax.Array, step: jax.Array,
-                            cfg: SDMConfig,
-                            node_index=None) -> Tuple[PyTree, PyTree]:
-    """Packed per-leaf exchange on a schedule: (own S(d), weighted nb sum)."""
-    d_leaves, treedef = jax.tree.flatten(d_tree)
-    own, nb = [], []
-    for i, d in enumerate(d_leaves):
-        leaf_key = jax.random.fold_in(base_key, i)
-        if cfg.mode == "fixedk_rows":
-            own_sparse, nb_sum = gossip.exchange_packed_rows(
-                schedule, d, axis_name=axis_name, base_key=leaf_key,
-                step=step, p=cfg.p, node_index=node_index)
-        else:
-            own_sparse, nb_sum = gossip.exchange_packed(
-                schedule, d.reshape(-1), axis_name=axis_name,
-                base_key=leaf_key, step=step, p=cfg.p, block=cfg.pack_block,
-                node_index=node_index)
-        own.append(own_sparse.reshape(d.shape).astype(d.dtype))
-        nb.append(nb_sum.reshape(d.shape).astype(d.dtype))
-    return jax.tree.unflatten(treedef, own), jax.tree.unflatten(treedef, nb)
+def _plane_payload_exchange(planes: Tuple[jax.Array, ...],
+                            comp: compressor_mod.Compressor, *,
+                            axis_name, base_key: jax.Array, step, me,
+                            schedule=None, useq=None, node_index=None,
+                            transform=None):
+    """Compressor-payload transport over wire planes — the ONE copy.
 
-
-def _payload_exchange_leaves(d_tree: PyTree,
-                             comp: compressor_mod.Compressor, *,
-                             schedule, axis_name, base_key: jax.Array,
-                             step: jax.Array, me,
-                             node_index=None,
-                             transform=None) -> Tuple[PyTree, PyTree]:
-    """Generic compressor-payload exchange: (own x_hat, weighted nb sum).
-
-    The payload pytree (values/indices/scale) crosses the wire as-is via
-    ``gossip.exchange_payload`` — the transport any registered compressor
-    (e.g. the int8 QSGD quantizer) rides without a bespoke packed path.
-    Key schedule matches ``_sparse_exchange_leaves`` / the reference
-    executor: fold(fold(fold(base, leaf), node), step). ``transform``
-    optionally rewrites each payload before it ships (compressed
-    push-sum applies its contraction scaling there) — the ONE shared
-    implementation of the per-leaf transport.
+    One compress per bucket plane (key ``node_round_key(fold_in(base,
+    bucket), me, step)`` — the schedule ``sparsify_planes_stacked``
+    mirrors in the reference); the payload crosses the static schedule's
+    R rounds (``useq=None``, weighted sum) or every union round
+    (``useq`` set, per-slot increment stacks). ``transform`` rewrites
+    each payload pre-wire (compressed push-sum's contraction). Shared by
+    the SDM qsgd/payload modes AND compressed gradient-push, so the key
+    schedule and contraction point cannot desynchronize between them.
+    Returns (own decompressed planes, received planes).
     """
-    d_leaves, treedef = jax.tree.flatten(d_tree)
-    own, nb = [], []
-    for i, d in enumerate(d_leaves):
+    own, recv = [], []
+    for b, dp in enumerate(planes):
         key = gossip.node_round_key(
-            jax.random.fold_in(base_key, i), me, step)
-        pl = comp.compress(key, d, node=me)
+            jax.random.fold_in(base_key, b), me, step)
+        pl = comp.compress(key, dp, node=me)
         if transform is not None:
             pl = transform(pl)
-        own.append(comp.decompress(pl).astype(d.dtype))
-        nb.append(gossip.exchange_payload(
-            schedule, pl, comp.decompress, axis_name, step=step,
-            node_index=node_index).astype(d.dtype))
-    return jax.tree.unflatten(treedef, own), jax.tree.unflatten(treedef, nb)
-
-
-def _replica_sparse_exchange_leaves(d_tree: PyTree, *,
-                                    useq, axis_name, base_key: jax.Array,
-                                    step: jax.Array, cfg: SDMConfig,
-                                    node_index=None
-                                    ) -> Tuple[PyTree, PyTree]:
-    """Packed replica transport: (own S(d), per-slot increment stacks)."""
-    d_leaves, treedef = jax.tree.flatten(d_tree)
-    own, incr = [], []
-    for i, d in enumerate(d_leaves):
-        leaf_key = jax.random.fold_in(base_key, i)
-        if cfg.mode == "fixedk_rows":
-            own_sparse, inc = gossip.union_exchange_packed_rows(
-                useq, d, axis_name=axis_name, base_key=leaf_key,
-                step=step, p=cfg.p, node_index=node_index)
+        own.append(comp.decompress(pl))
+        if useq is not None:
+            recv.append(gossip.union_exchange_payload(
+                useq, pl, comp.decompress, axis_name))
         else:
-            own_sparse, inc = gossip.union_exchange_packed(
-                useq, d.reshape(-1), axis_name=axis_name,
-                base_key=leaf_key, step=step, p=cfg.p, block=cfg.pack_block,
-                node_index=node_index)
-        own.append(own_sparse.reshape(d.shape).astype(d.dtype))
-        incr.append(inc.reshape((inc.shape[0],) + d.shape).astype(d.dtype))
-    return jax.tree.unflatten(treedef, own), jax.tree.unflatten(treedef, incr)
+            recv.append(gossip.exchange_payload(
+                schedule, pl, comp.decompress, axis_name, step=step,
+                node_index=node_index))
+    return tuple(own), tuple(recv)
 
 
-def _replica_payload_exchange_leaves(d_tree: PyTree,
-                                     comp: compressor_mod.Compressor, *,
-                                     useq, axis_name, base_key: jax.Array,
-                                     step: jax.Array, me,
-                                     transform=None
-                                     ) -> Tuple[PyTree, PyTree]:
-    """Compressor-payload replica transport: (own x_hat, increment stacks).
+def _plane_exchange(d_planes: Tuple[jax.Array, ...], *, schedule, axis_name,
+                    base_key: jax.Array, step: jax.Array, cfg: SDMConfig,
+                    me, node_index=None) -> Tuple[Tuple[jax.Array, ...],
+                                                  Tuple[jax.Array, ...]]:
+    """Plane-granular exchange: (own S(d) planes, weighted nb-sum planes).
 
-    Key schedule matches ``_payload_exchange_leaves`` exactly; the only
-    difference is that each union round's delivery lands in its OWN
-    (n_replicas, ...) row instead of a weighted sum — compressed
-    push-sum's contraction ``transform`` rides through unchanged.
+    The ONE static-schedule transport behind every SDM mode: each
+    bucket's plane is compressed/drawn/top-k'd ONCE (key
+    ``fold_in(base, bucket)`` — the schedule the reference's
+    ``sparsify_planes_stacked`` mirrors) and crosses the wire in exactly
+    R collective-permutes per bucket, independent of the model's leaf
+    count.
     """
-    d_leaves, treedef = jax.tree.flatten(d_tree)
+    comp = compressor_of(cfg)
+    if cfg.mode in ("qsgd", "payload"):
+        return _plane_payload_exchange(
+            d_planes, comp, axis_name=axis_name, base_key=base_key,
+            step=step, me=me, schedule=schedule, node_index=node_index)
+    own, nb = [], []
+    for b, dp in enumerate(d_planes):
+        bkey = jax.random.fold_in(base_key, b)
+        if cfg.mode == "fixedk_rows":
+            o, s = gossip.exchange_packed_rows(
+                schedule, dp, axis_name=axis_name, base_key=bkey,
+                step=step, p=cfg.p, node_index=node_index)
+        elif cfg.mode == "fixedk_packed":
+            o, s = gossip.exchange_packed(
+                schedule, dp.reshape(-1), axis_name=axis_name,
+                base_key=bkey, step=step, p=cfg.p, block=cfg.pack_block,
+                node_index=node_index)
+            o, s = o.reshape(dp.shape), s.reshape(dp.shape)
+        else:   # bernoulli: dense masked plane payload
+            key = gossip.node_round_key(bkey, me, step)
+            o = comp.decompress(comp.compress(key, dp, node=me))
+            s = gossip.exchange(schedule, o, axis_name,
+                                node_index=node_index, step=step)
+        own.append(o)
+        nb.append(s)
+    return tuple(own), tuple(nb)
+
+
+def _replica_plane_exchange(d_planes: Tuple[jax.Array, ...], *,
+                            useq, axis_name, base_key: jax.Array,
+                            step: jax.Array, cfg: SDMConfig, me,
+                            node_index=None, transform=None
+                            ) -> Tuple[Tuple[jax.Array, ...],
+                                       Tuple[jax.Array, ...]]:
+    """Replica (union) plane transport: (own planes, per-slot increments).
+
+    Same selection/keys as ``_plane_exchange``; each union round's
+    delivery lands in its OWN (n_replicas, rows, lane) row instead of a
+    weighted sum — one batched sender draw per bucket regardless of
+    sequence length.
+    """
+    comp = compressor_of(cfg)
+    if cfg.mode in ("qsgd", "payload"):
+        return _plane_payload_exchange(
+            d_planes, comp, axis_name=axis_name, base_key=base_key,
+            step=step, me=me, useq=useq, transform=transform)
     own, incr = [], []
-    for i, d in enumerate(d_leaves):
-        key = gossip.node_round_key(
-            jax.random.fold_in(base_key, i), me, step)
-        pl = comp.compress(key, d, node=me)
-        if transform is not None:
-            pl = transform(pl)
-        own.append(comp.decompress(pl).astype(d.dtype))
-        incr.append(gossip.union_exchange_payload(
-            useq, pl, comp.decompress, axis_name).astype(d.dtype))
-    return jax.tree.unflatten(treedef, own), jax.tree.unflatten(treedef, incr)
+    for b, dp in enumerate(d_planes):
+        bkey = jax.random.fold_in(base_key, b)
+        if cfg.mode == "fixedk_rows":
+            o, inc = gossip.union_exchange_packed_rows(
+                useq, dp, axis_name=axis_name, base_key=bkey,
+                step=step, p=cfg.p, node_index=node_index)
+        elif cfg.mode == "fixedk_packed":
+            o, inc = gossip.union_exchange_packed(
+                useq, dp.reshape(-1), axis_name=axis_name, base_key=bkey,
+                step=step, p=cfg.p, block=cfg.pack_block,
+                node_index=node_index)
+            o = o.reshape(dp.shape)
+            inc = inc.reshape((inc.shape[0],) + dp.shape)
+        else:
+            key = gossip.node_round_key(bkey, me, step)
+            o = comp.decompress(comp.compress(key, dp, node=me))
+            inc = gossip.union_exchange(useq, o, axis_name)
+        own.append(o)
+        incr.append(inc)
+    return tuple(own), tuple(incr)
 
 
-def _replica_advance_exchange(state_d: PyTree, xhat: PyTree, *,
+def _replica_advance_exchange(d_planes: Tuple[jax.Array, ...],
+                              xhat: Tuple[jax.Array, ...], *,
                               seq, axis_name, base_key: jax.Array,
                               step: jax.Array, cfg: SDMConfig, me,
-                              node_index=None) -> Tuple[PyTree, PyTree, PyTree]:
-    """Shared replica-transport advance: (own S(d), new xhat, fresh s).
+                              node_index=None):
+    """Shared replica-transport advance: (own planes, new xhat, fresh s).
 
     Every union in-neighbour's increment arrives tagged by round
     position, advances its replica slot, and the weighted neighbour sum
@@ -677,30 +760,13 @@ def _replica_advance_exchange(state_d: PyTree, xhat: PyTree, *,
     W(t)-mixing on B-connected sequences.
     """
     useq = gossip.union_schedule(seq)
-    if cfg.mode in ("fixedk_packed", "fixedk_rows"):
-        own, incr = _replica_sparse_exchange_leaves(
-            state_d, useq=useq, axis_name=axis_name, base_key=base_key,
-            step=step, cfg=cfg, node_index=node_index)
-    elif cfg.mode in ("qsgd", "payload"):
-        own, incr = _replica_payload_exchange_leaves(
-            state_d, compressor_of(cfg), useq=useq, axis_name=axis_name,
-            base_key=base_key, step=step, me=me)
-    else:
-        comp = compressor_of(cfg)
-        leaf_keys = jax.tree.map(
-            lambda k: gossip.node_round_key(k, me, step),
-            _leaf_keys(base_key, state_d))
-        own = jax.tree.map(
-            lambda k, d: comp.decompress(
-                comp.compress(k, d, node=me)).astype(d.dtype),
-            leaf_keys, state_d)
-        incr = jax.tree.map(
-            lambda v: gossip.union_exchange(useq, v, axis_name), own)
-    new_xhat = jax.tree.map(jnp.add, xhat, incr)
+    own, incr = _replica_plane_exchange(
+        d_planes, useq=useq, axis_name=axis_name, base_key=base_key,
+        step=step, cfg=cfg, me=me, node_index=node_index)
+    new_xhat = tuple(xh + inc for xh, inc in zip(xhat, incr))
     wv = gossip.replica_recv_weights(useq, me, step)     # (R,)
-    s = jax.tree.map(
-        lambda xh: jnp.tensordot(wv.astype(xh.dtype), xh, axes=([0], [0])),
-        new_xhat)
+    s = tuple(jnp.tensordot(wv.astype(xh.dtype), xh, axes=([0], [0]))
+              for xh in new_xhat)
     return own, new_xhat, s
 
 
@@ -717,12 +783,13 @@ def distributed_advance(state: SDMState, *, base_key: jax.Array, axis_name,
     legacy scalar (self_weight, neighbor_weight) callers get the
     symmetric ring. ``node_index`` (optional sharded operand) replaces
     the axis_index collective where partial-auto shard_map cannot lower
-    it.
+    it. ``state.s`` / ``state.d`` (and ``state.xhat``) are wire planes.
     """
     del neighbor_weight  # ring default is fully described by self_weight
     seq = gossip.resolve_sequence(schedule, axis_name, self_weight)
     check_per_node_p(cfg, seq.n_nodes)
     me = gossip._me(axis_name, node_index)
+    spec = plane_mod.ParamPlane.for_tree(state.x)
 
     if gossip.needs_replicas(seq):
         # genuinely time-varying weights: replica-correct advance (exact
@@ -731,37 +798,14 @@ def distributed_advance(state: SDMState, *, base_key: jax.Array, axis_name,
             state.d, state.xhat, seq=seq, axis_name=axis_name,
             base_key=base_key, step=state.step, cfg=cfg, me=me,
             node_index=node_index)
-        x = jax.tree.map(jnp.add, state.x, own)
+        x = jax.tree.map(jnp.add, state.x, spec.unpack(own))
         return state._replace(x=x, s=s, xhat=xhat)
 
-    if cfg.mode in ("fixedk_packed", "fixedk_rows"):
-        own, nb = _sparse_exchange_leaves(
-            state.d, schedule=seq, axis_name=axis_name,
-            base_key=base_key, step=state.step, cfg=cfg,
-            node_index=node_index)
-    elif cfg.mode in ("qsgd", "payload"):
-        own, nb = _payload_exchange_leaves(
-            state.d, compressor_of(cfg), schedule=seq, axis_name=axis_name,
-            base_key=base_key, step=state.step, me=me,
-            node_index=node_index)
-    else:
-        # Key schedule fold(fold(fold(base, leaf), node), step) — identical
-        # to ReferenceSimulator.advance so the two paths are bit-equal.
-        comp = compressor_of(cfg)
-        leaf_keys = jax.tree.map(
-            lambda k: gossip.node_round_key(k, me, state.step),
-            _leaf_keys(base_key, state.d))
-        own = jax.tree.map(
-            lambda k, d: comp.decompress(
-                comp.compress(k, d, node=me)).astype(d.dtype),
-            leaf_keys, state.d)
-        nb = jax.tree.map(
-            lambda v: gossip.exchange(seq, v, axis_name,
-                                      node_index=node_index,
-                                      step=state.step),
-            own)
-    x = jax.tree.map(jnp.add, state.x, own)
-    s = jax.tree.map(jnp.add, state.s, nb)
+    own, nb = _plane_exchange(
+        state.d, schedule=seq, axis_name=axis_name, base_key=base_key,
+        step=state.step, cfg=cfg, me=me, node_index=node_index)
+    x = jax.tree.map(jnp.add, state.x, spec.unpack(own))
+    s = tuple(s_ + nb_ for s_, nb_ in zip(state.s, nb))
     return state._replace(x=x, s=s)
 
 
@@ -779,9 +823,9 @@ class SDMFusedState(NamedTuple):
 
 def init_fused_state(params: PyTree, self_weight,
                      n_replicas: int | None = None) -> SDMFusedState:
-    s0 = jax.tree.map(lambda x: ((1.0 - self_weight) * x).astype(x.dtype),
-                      params)
-    xhat = _replica_stack(params, n_replicas) if n_replicas else None
+    xp = plane_mod.ParamPlane.for_tree(params).pack(params)
+    s0 = tuple((1.0 - self_weight) * p for p in xp)
+    xhat = _replica_planes(xp, n_replicas) if n_replicas else None
     return SDMFusedState(x=params, s=s0, step=jnp.zeros((), jnp.int32),
                          xhat=xhat)
 
@@ -810,11 +854,11 @@ def distributed_step_fused(state: SDMFusedState, grads: PyTree, *,
     noise_key = jax.random.fold_in(
         gossip.node_round_key(base_key, me, state.step), 0x5eed)
     g = _masked_grad(grads, noise_key, cfg)
-    d = jax.tree.map(
-        lambda x, s, gr: (cfg.theta * (sw.astype(x.dtype) * x + s
-                                       - cfg.gamma * gr.astype(x.dtype))
-                          - cfg.theta * x),
-        state.x, state.s, g)
+    spec = plane_mod.ParamPlane.for_tree(state.x)
+    xp = spec.pack(state.x)
+    gp = spec.pack(g)
+    d = tuple(cfg.theta * (sw * x_ + s_ - cfg.gamma * g_) - cfg.theta * x_
+              for x_, s_, g_ in zip(xp, state.s, gp))
 
     # immediately sparsify + exchange + fold in (the next round's advance).
     # Sparsifier keys use counter step+1: in the unfused flow d_t is
@@ -826,34 +870,13 @@ def distributed_step_fused(state: SDMFusedState, grads: PyTree, *,
         own, xhat, s = _replica_advance_exchange(
             d, state.xhat, seq=seq, axis_name=axis_name, base_key=base_key,
             step=sp_step, cfg=cfg, me=me, node_index=node_index)
-        x = jax.tree.map(jnp.add, state.x, own)
+        x = jax.tree.map(jnp.add, state.x, spec.unpack(own))
         return SDMFusedState(x=x, s=s, step=state.step + 1, xhat=xhat)
-    if cfg.mode in ("fixedk_packed", "fixedk_rows"):
-        own, nb = _sparse_exchange_leaves(
-            d, schedule=seq, axis_name=axis_name,
-            base_key=base_key, step=sp_step, cfg=cfg,
-            node_index=node_index)
-    elif cfg.mode in ("qsgd", "payload"):
-        own, nb = _payload_exchange_leaves(
-            d, compressor_of(cfg), schedule=seq, axis_name=axis_name,
-            base_key=base_key, step=sp_step, me=me,
-            node_index=node_index)
-    else:
-        comp = compressor_of(cfg)
-        leaf_keys = jax.tree.map(
-            lambda k: gossip.node_round_key(k, me, sp_step),
-            _leaf_keys(base_key, d))
-        own = jax.tree.map(
-            lambda k, dd: comp.decompress(
-                comp.compress(k, dd, node=me)).astype(dd.dtype),
-            leaf_keys, d)
-        nb = jax.tree.map(
-            lambda v: gossip.exchange(seq, v, axis_name,
-                                      node_index=node_index,
-                                      step=sp_step),
-            own)
-    x = jax.tree.map(jnp.add, state.x, own)
-    s = jax.tree.map(jnp.add, state.s, nb)
+    own, nb = _plane_exchange(
+        d, schedule=seq, axis_name=axis_name, base_key=base_key,
+        step=sp_step, cfg=cfg, me=me, node_index=node_index)
+    x = jax.tree.map(jnp.add, state.x, spec.unpack(own))
+    s = tuple(s_ + nb_ for s_, nb_ in zip(state.s, nb))
     return SDMFusedState(x=x, s=s, step=state.step + 1)
 
 
@@ -862,20 +885,27 @@ def distributed_commit(state: SDMState, grads: PyTree, *, base_key: jax.Array,
                        schedule=None,
                        self_weight: float | None = None,
                        node_index=None) -> SDMState:
-    """Phase 2 on the mesh: masked gradient + generalized mixing update."""
+    """Phase 2 on the mesh: masked gradient + generalized mixing update.
+
+    Runs on the wire planes: x and the masked gradient are packed once
+    (cheap reshape/concat, fused by XLA) and the differential is
+    produced directly in plane form — ready for the next advance's
+    single-draw exchange.
+    """
     seq = gossip.resolve_sequence(schedule, axis_name, self_weight)
     me = gossip._me(axis_name, node_index)
     sw = seq.self_weight_of(me, state.step)
     noise_key = jax.random.fold_in(
         gossip.node_round_key(base_key, me, state.step), 0x5eed)
     g = _masked_grad(grads, noise_key, cfg)
+    spec = plane_mod.ParamPlane.for_tree(state.x)
+    xp = spec.pack(state.x)
+    gp = spec.pack(g)
     # W~ x for node i = W_ii x_i + s_i  (s maintained incrementally on
     # static schedules, recomputed from the exact replicas on
     # time-varying ones — either way it carries this round's weights).
-    y = jax.tree.map(
-        lambda x, s, gr: ((1.0 - cfg.theta) * x
-                          + cfg.theta * (sw.astype(x.dtype) * x + s
-                                         - cfg.gamma * gr.astype(x.dtype))),
-        state.x, state.s, g)
-    d = jax.tree.map(jnp.subtract, y, state.x)
+    y = tuple((1.0 - cfg.theta) * x_
+              + cfg.theta * (sw * x_ + s_ - cfg.gamma * g_)
+              for x_, s_, g_ in zip(xp, state.s, gp))
+    d = tuple(y_ - x_ for y_, x_ in zip(y, xp))
     return state._replace(d=d, step=state.step + 1)

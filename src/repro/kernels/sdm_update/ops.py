@@ -1,49 +1,27 @@
 """Public wrapper: flat-pytree SDM-DSGD fused update.
 
-Flattens a parameter pytree into the kernel's (rows, 1024) layout,
-generates the three uniform bit streams with jax.random (or, on real
-TPU hardware, leaves generation to the in-kernel PRNG), runs the fused
-kernel, and unflattens. Drop-in replacement for the unfused
+Flattens a parameter pytree into the kernel's (rows, 1024) layout via
+the SHARED wire-plane machinery (``repro.core.plane.ParamPlane`` with
+``lane=1024, row_multiple=block_rows`` — the former private ``_flatten``
+here is gone, and the layout spec is computed ONCE instead of once per
+operand), generates the three uniform bit streams with jax.random (or,
+on real TPU hardware, leaves generation to the in-kernel PRNG), runs the
+fused kernel, and unflattens. Drop-in replacement for the unfused
 distributed_commit+advance pair's elementwise work.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.plane import ParamPlane
 from repro.kernels.sdm_update.sdm_update import (LANE, DEFAULT_BLOCK_ROWS,
                                                  sdm_update_pallas)
 from repro.kernels.sdm_update import ref as ref_mod
 
 PyTree = Any
-
-
-def _flatten(tree: PyTree, block_rows: int):
-    leaves, treedef = jax.tree.flatten(tree)
-    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
-                            for l in leaves])
-    n = flat.shape[0]
-    tile = LANE * block_rows
-    pad = (-n) % tile
-    flat = jnp.pad(flat, (0, pad))
-    return flat.reshape(-1, LANE), (treedef, [l.shape for l in leaves],
-                                    [l.dtype for l in leaves], n)
-
-
-def _unflatten(mat: jax.Array, meta) -> PyTree:
-    treedef, shapes, dtypes, n = meta
-    flat = mat.reshape(-1)[:n]
-    out, off = [], 0
-    for shp, dt in zip(shapes, dtypes):
-        size = 1
-        for d in shp:
-            size *= d
-        out.append(flat[off:off + size].reshape(shp).astype(dt))
-        off += size
-    return jax.tree.unflatten(treedef, out)
 
 
 def sdm_update(x_tree: PyTree, s_tree: PyTree, nb_tree: PyTree,
@@ -53,16 +31,19 @@ def sdm_update(x_tree: PyTree, s_tree: PyTree, nb_tree: PyTree,
                use_kernel: bool = True, interpret: bool = True
                ) -> Tuple[PyTree, PyTree, PyTree]:
     """Returns (x_new, s_new, sd) trees. ``key`` drives mask+noise bits."""
-    x, meta = _flatten(x_tree, block_rows)
-    s, _ = _flatten(s_tree, block_rows)
-    nb, _ = _flatten(nb_tree, block_rows)
-    g, _ = _flatten(g_tree, block_rows)
+    spec = ParamPlane.for_tree(x_tree, lane=LANE, row_multiple=block_rows,
+                               buckets=None)
+    assert spec.n_buckets == 1, "kernel plane is bucket-free by construction"
+    x = spec.pack(x_tree)[0]
+    s = spec.pack(s_tree)[0]
+    nb = spec.pack(nb_tree)[0]
+    g = spec.pack(g_tree)[0]
     kb, k1, k2 = jax.random.split(key, 3)
     # Draw bits at the canonical LANE-padded size, NOT x.shape: threefry
     # output depends on the total draw size, so tying the draw to the
     # block_rows tile padding would make the mask (and the whole
     # trajectory) change with the kernel's tiling parameter.
-    n_rows = -(-meta[3] // LANE)
+    n_rows = -(-spec.total_size // LANE)
 
     def bits(k: jax.Array) -> jax.Array:
         b = jax.random.bits(k, (n_rows, LANE), jnp.uint32)
@@ -73,7 +54,7 @@ def sdm_update(x_tree: PyTree, s_tree: PyTree, nb_tree: PyTree,
                     self_w=self_w,
                     **({"block_rows": block_rows, "interpret": interpret}
                        if use_kernel else {}))
-    return (_unflatten(x2, meta), _unflatten(s2, meta), _unflatten(sd, meta))
+    return (spec.unpack((x2,)), spec.unpack((s2,)), spec.unpack((sd,)))
 
 
 def _ref_adapter(x, s, nb, g, mb, n1, n2, **kw):

@@ -4,15 +4,23 @@
 collective term is derived here: sum the result-shape bytes of every
 all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
 instruction (async ``-start`` forms counted once; ``-done`` skipped).
+
+``permute_payloads`` / ``collective_permute_count`` additionally expose
+per-instruction collective-permute payloads (dtype-aware bits) — the
+wire-plane transport's acceptance surface: a compiled distributed step
+must emit exactly R permutes per exchange, independent of the model's
+pytree leaf count, and the payload bits must match the static wire-bit
+accounting (including packed sub-byte qsgd u8 lanes).
 """
 from __future__ import annotations
 
 import math
 import re
 from collections import defaultdict
-from typing import Dict
+from typing import Dict, List
 
-__all__ = ["collective_bytes", "count_ops", "DTYPE_BYTES"]
+__all__ = ["collective_bytes", "count_ops", "permute_payloads",
+           "collective_permute_count", "DTYPE_BYTES"]
 
 DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -62,3 +70,55 @@ def count_ops(hlo_text: str) -> Dict[str, int]:
     for _, kind, _start in _INSTR_RE.findall(hlo_text):
         counts[kind] += 1
     return dict(counts)
+
+
+def collective_permute_count(hlo_text: str) -> int:
+    """Collective-permute instructions in the module (`-done` skipped).
+
+    The wire-plane latency metric: one permute per schedule round per
+    plane bucket per exchange — NOT per pytree leaf.
+    """
+    return count_ops(hlo_text).get("collective-permute", 0)
+
+
+_PERMUTE_OPS = (" collective-permute(", " collective-permute-start(")
+
+
+def permute_payloads(hlo_text: str) -> List[Dict]:
+    """Per collective-permute payload stats, in instruction order.
+
+    Each entry: ``{"bits": int, "bytes": int, "elems": {dtype: count}}``
+    parsed from the result shapes (async ``-start`` tuple forms counted
+    once, ``-done`` skipped). Dtype-aware, so packed sub-byte payloads
+    (u8 lanes) and index side-channels (s32) are visible separately.
+    """
+    out: List[Dict] = []
+    for line in hlo_text.splitlines():
+        for op in _PERMUTE_OPS:
+            if op not in line:
+                continue
+            result_part = line.split(op)[0]
+            shapes = []
+            for dtype, dims in _SHAPE_RE.findall(result_part):
+                if dtype not in DTYPE_BYTES:
+                    continue
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                shapes.append((dtype, n))
+            if op.endswith("-start("):
+                # async tuple result is (operand, result, u32 context...):
+                # drop the scalar context words and the operand mirror so
+                # the payload is counted ONCE, like the sync form.
+                shapes = [s for s in shapes if s != ("u32", 1)]
+                shapes = shapes[: len(shapes) // 2]
+            elems: Dict[str, int] = defaultdict(int)
+            bits = 0
+            for dtype, n in shapes:
+                elems[dtype] += n
+                bits += n * DTYPE_BYTES[dtype] * 8
+            out.append({"bits": bits, "bytes": bits // 8,
+                        "elems": dict(elems)})
+            break
+    return out

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.core import gossip, method as method_mod
+from repro.core import gossip, method as method_mod, plane as plane_mod
 from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.sharding import MeshRules, use_rules
@@ -126,6 +126,31 @@ def gossip_schedule(tc: DistributedTrainConfig, mesh: Mesh
                               tc.self_weight, _n_nodes(mesh))
 
 
+def plane_bucket_tree(tc: DistributedTrainConfig, mesh: Mesh):
+    """The wire-plane bucket policy for this run (this file owns it).
+
+    On a tensor-parallel mesh with a working partial-auto shard_map,
+    leaves whose TRAILING logical axis maps to the model axis get their
+    own plane bucket keyed ``('model', cols)`` — the plane's lane dim
+    keeps the TP sharding (DDP-gradient-bucket style); everything else
+    rides the default flat bucket. On the full-manual fallback (old
+    jaxlibs) or meshes without a model axis, everything is replicated
+    inside the region anyway, so one flat plane is optimal: return None.
+    """
+    node_axes = _node_axes(mesh)
+    if compat.partial_auto_shard_map_broken(mesh, node_axes):
+        return None
+    if "model" not in mesh.shape or mesh.shape["model"] == 1:
+        return None
+    return plane_mod.bucket_keys_from_axes(
+        transformer.param_axes(tc.model), transformer.param_shapes(tc.model),
+        INNER_RULES)
+
+
+def _bucket_ctx(tc: DistributedTrainConfig, mesh: Mesh):
+    return plane_mod.use_buckets(plane_bucket_tree(tc, mesh))
+
+
 def state_shape_dtype(tc: DistributedTrainConfig, mesh: Mesh):
     """ShapeDtypeStructs of the stacked method state (dry-run lowering).
 
@@ -139,8 +164,9 @@ def state_shape_dtype(tc: DistributedTrainConfig, mesh: Mesh):
     x = jax.tree.map(mk, shapes,
                      is_leaf=lambda v: isinstance(v, tuple) and
                      all(isinstance(e, int) for e in v))
-    return method_mod.state_shape_dtype(meth, x, mcfg,
-                                        seq=gossip_schedule(tc, mesh))
+    with _bucket_ctx(tc, mesh):
+        return method_mod.state_shape_dtype(meth, x, mcfg,
+                                            seq=gossip_schedule(tc, mesh))
 
 
 def state_shardings(tc: DistributedTrainConfig, mesh: Mesh):
@@ -159,8 +185,17 @@ def state_shardings(tc: DistributedTrainConfig, mesh: Mesh):
     x = jax.tree.map(leaf_sharding, axes, shapes, is_leaf=is_axes)
     node_vec = NamedSharding(mesh, P(node_axes if len(node_axes) > 1
                                      else node_axes[0]))
-    return method_mod.state_shardings(meth, x, node_vec, mcfg,
-                                      seq=gossip_schedule(tc, mesh))
+    n_nodes = _n_nodes(mesh)
+    is_shape = lambda v: isinstance(v, tuple) and all(
+        isinstance(e, int) for e in v)
+    template = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n_nodes,) + tuple(s),
+                                       tc.param_dtype),
+        shapes, is_leaf=is_shape)
+    with _bucket_ctx(tc, mesh):
+        return method_mod.state_shardings(meth, x, node_vec, mcfg,
+                                          seq=gossip_schedule(tc, mesh),
+                                          template=template)
 
 
 def init_distributed_state(tc: DistributedTrainConfig, mesh: Mesh,
@@ -176,7 +211,8 @@ def init_distributed_state(tc: DistributedTrainConfig, mesh: Mesh,
     params = transformer.init_params(key, tc.model, tc.param_dtype)
     stack = jax.tree.map(
         lambda p: jnp.broadcast_to(p[None], (n_nodes,) + p.shape), params)
-    return meth.init_stacked(stack, gossip_schedule(tc, mesh), cfg)
+    with _bucket_ctx(tc, mesh):
+        return meth.init_stacked(stack, gossip_schedule(tc, mesh), cfg)
 
 
 def make_distributed_train(tc: DistributedTrainConfig, mesh: Mesh,
@@ -220,7 +256,10 @@ def make_distributed_train(tc: DistributedTrainConfig, mesh: Mesh,
         squeeze = lambda t: jax.tree.map(lambda v: jnp.squeeze(v, 0), t)
         me = jnp.squeeze(node_ids, 0)
 
-        with use_rules(inner):
+        # bucket keys are static trace-time metadata: the SAME policy the
+        # state templates above were built under, so the executor's plane
+        # layout cannot diverge from the state it receives.
+        with use_rules(inner), _bucket_ctx(tc, mesh):
             state = squeeze(state)
             state, loss = executor.step(
                 state,

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import gossip, sdm_dsgd
+from repro.core import gossip, plane as plane_mod, sdm_dsgd
 
 
 def sdm_dense_wt_oracle(seq, cfg, x0, grad_stack, steps: int,
@@ -19,23 +19,31 @@ def sdm_dense_wt_oracle(seq, cfg, x0, grad_stack, steps: int,
     """Run ``steps`` iterations on the stacked (n, ...) single-leaf state.
 
     ``grad_stack(x) -> (n, ...) gradients``; the sparsifier draws use the
-    reference executor's exact key schedule (leaf 0 of ``base_key``,
-    ``node_round_key`` per node and step) and the gradient passes through
-    the shared ``masked_grad`` (noise/clipping are not the semantics
-    under test). Returns the final public-copy stack.
+    reference executor's exact key schedule (bucket 0 of ``base_key``,
+    ``node_round_key`` per node and step) over the zero-padded WIRE
+    PLANE — the plane-granular convention the transport draws at — and
+    the gradient passes through the shared ``masked_grad``
+    (noise/clipping are not the semantics under test). Returns the final
+    public-copy stack.
     """
     n = seq.n_nodes
     comp = sdm_dsgd.compressor_of(cfg)
     ws = jnp.asarray(seq.weights_stack(), jnp.float32)
     x = x0
     d = jnp.zeros_like(x)
-    leaf_key = jax.random.fold_in(base_key, 0)
+    spec = plane_mod.ParamPlane.for_tree(
+        jax.ShapeDtypeStruct(tuple(x0.shape[1:]), jnp.float32), buckets=None)
+    bucket_key = jax.random.fold_in(base_key, 0)
     for t in range(steps):
         keys = jax.vmap(
-            lambda i: gossip.node_round_key(leaf_key, i, t))(jnp.arange(n))
-        sd = jax.vmap(
-            lambda i, k, v: comp.decompress(comp.compress(k, v, node=i)))(
-            jnp.arange(n), keys, d)
+            lambda i: gossip.node_round_key(bucket_key, i, t))(jnp.arange(n))
+
+        def one(i, k, v):
+            pl = spec.pack(v)[0]
+            out = comp.decompress(comp.compress(k, pl, node=i))
+            return spec.unpack((out,))
+
+        sd = jax.vmap(one)(jnp.arange(n), keys, d)
         x = x + sd
         g = grad_stack(x)
         g = sdm_dsgd.masked_grad({"w": g}, base_key, sigma=cfg.sigma,

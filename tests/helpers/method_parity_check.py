@@ -6,9 +6,19 @@ tests/test_distributed.py.
 Run with 8 fake host devices; prints per-case lines
 
     CASE <id> MAXERR <f> SCALE <f> HAS_CPERM <b> [WIRE_ELEMS <i>
-         EXPECTED_WIRE_ELEMS <i> SORT_COUNT <i> MAX_SORTS <i>]
+         EXPECTED_WIRE_ELEMS <i> SORT_COUNT <i> MAX_SORTS <i> ...]
 
 that the test asserts on. Must set XLA_FLAGS before jax import.
+
+All wire expectations are PLANE-aware (PR 5): the transport compresses
+the zero-padded (rows, LANE) wire plane of the whole differential, so
+payload sizes, top-k counts, and accounting derive from the plane
+geometry (``repro.core.plane``), not per-leaf shapes. The ``plane``
+group runs a MULTI-LEAF parameter tree and asserts the tentpole
+acceptance criterion: the compiled step carries exactly R
+collective-permutes per exchange — leaf-count-independent — and the
+static wire-bit accounting equals the HLO payload bits (including the
+packed sub-byte qsgd u8 lanes).
 
 Usage: method_parity_check.py GROUP     (GROUP in CASES)
 """
@@ -18,6 +28,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import re  # noqa: E402
 import sys  # noqa: E402
+from fractions import Fraction  # noqa: E402
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -26,9 +37,14 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro import compat  # noqa: E402
 from repro.core import (baselines, gossip, gradient_push, method as  # noqa: E402
-                        method_mod, sdm_dsgd, sparsifier, topology)  # noqa: E402
+                        method_mod, plane as plane_mod, sdm_dsgd,  # noqa: E402
+                        sparsifier, topology)  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
 
-DIM = 96
+# One wire-plane row-count > 1 (DIM = 5 * plane.LANE, so the padded plane
+# IS the tree: accounting, payload, and legacy intuitions coincide while
+# rows-mode top-k still selects among 5 rows).
+DIM = 5 * plane_mod.LANE
 STEPS = 12
 BASE_KEY = jax.random.PRNGKey(42)
 
@@ -36,7 +52,8 @@ BASE_KEY = jax.random.PRNGKey(42)
 # "sdm-dsgd:het" marks the heterogeneous per-node-p variant. For
 # gradient-push a non-"-" mode is a COMPRESSOR SPEC (repro.core.compressor):
 # the error-compensated compressed push-sum variant rides the generic
-# exchange_payload transport. "qsgd" cases exercise the int8 quantizer.
+# exchange_payload transport. "qsgd" cases exercise the int8 quantizer,
+# "qsgd:4" the u8-packed sub-byte wire.
 CASES = {
     "sdm_core": [
         ("sdm-dsgd", "ring8", "bernoulli"),
@@ -71,6 +88,7 @@ CASES = {
         ("gradient-push", "der8", "fixedk"),
         ("gradient-push", "der8", "qsgd"),
         ("sdm-dsgd", "ring8", "qsgd"),
+        ("sdm-dsgd", "ring8", "qsgd:4"),
         ("sdm-dsgd:het", "ring8", "fixedk_packed"),
         ("sdm-dsgd:het", "torus2x2", "fixedk_packed"),
     ],
@@ -89,11 +107,24 @@ CASES = {
         ("gradient-push", "matchings8x2", "fixedk"),
         ("gradient-push", "matchings8x2", "qsgd"),
     ],
+    # The wire-plane tentpole: a MULTI-LEAF tree (5 leaves, padded plane)
+    # must compile to exactly R collective-permutes per exchange, with
+    # HLO payload bits equal to the static accounting (fixedk + packed
+    # sub-byte qsgd), while reference<->distributed parity holds.
+    "plane": [
+        ("sdm-dsgd", "ring8", "fixedk_packed"),
+        ("sdm-dsgd", "star4", "bernoulli"),
+        ("sdm-dsgd-fused", "ring8", "fixedk_rows"),
+        ("sdm-dsgd", "ring8", "qsgd:4"),
+        ("dsgd", "ring8", "-"),
+        ("gradient-push", "dring8", "fixedk"),
+    ],
 }
 
-# wire bits per element of each HLO dtype that can cross a permute
-DTYPE_BITS = {"f32": 32, "bf16": 16, "f16": 16, "s32": 32, "u32": 32,
-              "s8": 8, "u8": 8, "pred": 8}
+# Multi-leaf parameter tree for the "plane" group: mixed ranks/sizes,
+# total 994 elements -> one (8, 128) plane with 30 pad zeros.
+PLANE_SHAPES = {"emb": (9, 33), "w1": (64, 7), "b1": (71,),
+                "w2": (3, 5, 11), "b2": (13,)}
 
 
 def parse_seq(spec: str) -> gossip.ScheduleSequence:
@@ -117,6 +148,10 @@ def make_cfg(meth_key: str, meth, mode: str, n: int):
     if meth.config_cls is sdm_dsgd.SDMConfig:
         p = tuple(0.15 + 0.05 * (i % 4) for i in range(n)) \
             if meth_key.endswith(":het") else 0.25
+        if mode.startswith("qsgd:"):
+            return meth.coerce_config(sdm_dsgd.SDMConfig(
+                p=p, theta=0.15, gamma=0.2, sigma=0.0, clip_c=1.0,
+                compressor=mode))
         return meth.coerce_config(sdm_dsgd.SDMConfig(
             p=p, theta=0.15, gamma=0.2, sigma=0.0, clip_c=1.0, mode=mode))
     if meth.config_cls is gradient_push.GradientPushConfig:
@@ -173,7 +208,41 @@ def push_conservation_probe(seq, mode: str) -> "tuple[float, float]":
     return mass_err, float(np.max(np.abs(z - mean0)))
 
 
-def run_case(meth_key: str, topo_spec: str, mode: str) -> None:
+def plane_payload_expectations(spec_plane, mode: str, cfg):
+    """(expected max f32 payload elems, blocks) at plane granularity."""
+    (rows, lane), = spec_plane.plane_shapes()
+    if mode == "fixedk_rows":
+        return sparsifier.num_kept(rows, cfg.p) * lane
+    d = rows * lane
+    p_worst = max(cfg.p) if isinstance(cfg.p, tuple) else cfg.p
+    block = getattr(cfg, "pack_block", 1)
+    nb = -(-d // block)
+    return sparsifier.num_kept(nb, p_worst) * block
+
+
+def expected_permutes(meth_name: str, mode: str, seq) -> int:
+    """Collective-permutes per compiled step on the plane transport.
+
+    R schedule rounds x wire leaves per payload (1 for dense/packed, 2
+    for compressor payloads: values + scale|indices), + R for the
+    push-sum mass scalar. Leaf-count-INDEPENDENT: this is the tentpole.
+    """
+    r = seq.schedules[0].n_rounds
+    base_mode = mode.split(":")[0]
+    if mode == "-":
+        leaves = 0 if meth_name == "allreduce" else 1
+    elif base_mode in ("qsgd", "fixedk", "block"):
+        # exchange_payload pytrees: values + scale (qsgd) / indices
+        leaves = 2 if (meth_name == "gradient-push"
+                       or base_mode == "qsgd") else 1
+    else:
+        leaves = 1
+    extra = r if meth_name == "gradient-push" else 0
+    return r * leaves + extra
+
+
+def run_case(meth_key: str, topo_spec: str, mode: str,
+             param_shapes=None, group: str = "") -> None:
     case_id = f"{meth_key}/{topo_spec}/{mode}"
     meth_name = meth_key.split(":")[0]
     meth = method_mod.get(meth_name)
@@ -182,20 +251,41 @@ def run_case(meth_key: str, topo_spec: str, mode: str) -> None:
     cfg = make_cfg(meth_key, meth, mode, n)
 
     rng = np.random.default_rng(0)
-    a_stack = jnp.asarray(rng.normal(size=(n, 16, DIM)) / 4.0, jnp.float32)
-    b_stack = jnp.asarray(rng.normal(size=(n, 16)), jnp.float32)
-    params0 = jnp.asarray(rng.normal(size=(DIM,)) * 0.1, jnp.float32)
-    params_stack = {"w": jnp.broadcast_to(params0, (n, DIM))}
+    if param_shapes is None:
+        # single-leaf least-squares problem (the historical anchor)
+        a_stack = jnp.asarray(rng.normal(size=(n, 16, DIM)) / 4.0,
+                              jnp.float32)
+        b_stack = jnp.asarray(rng.normal(size=(n, 16)), jnp.float32)
+        params0 = jnp.asarray(rng.normal(size=(DIM,)) * 0.1, jnp.float32)
+        params_stack = {"w": jnp.broadcast_to(params0, (n, DIM))}
 
-    def node_grad(w, a, b):
-        r = a @ w - b
-        return {"w": a.T @ r / a.shape[0]}
+        def node_grad(w, a, b):
+            r = a @ w - b
+            return {"w": a.T @ r / a.shape[0]}
+
+        def grads_of(tree, a, b):
+            return node_grad(tree["w"], a, b)
+    else:
+        # multi-leaf quadratic: grad = x - t_i (per-node targets), so
+        # parity is meaningful on an arbitrary pytree.
+        a_stack = jax.tree.map(
+            lambda s: jnp.asarray(rng.normal(size=(n,) + s), jnp.float32),
+            param_shapes,
+            is_leaf=lambda v: isinstance(v, tuple) and all(
+                isinstance(e, int) for e in v))
+        b_stack = jnp.zeros((n, 1), jnp.float32)
+        p0 = jax.tree.map(lambda t: 0.1 * t[0] + 0.05, a_stack)
+        params_stack = jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), p0)
+
+        def grads_of(tree, targets, b):
+            del b
+            return jax.tree.map(jnp.subtract, tree, targets)
 
     def grad_fn_stacked(params, batch):
         del batch
-        g = jax.vmap(lambda w, a, b: node_grad(w, a, b)["w"])(
-            params["w"], a_stack, b_stack)
-        return {"w": g}, jnp.float32(0.0)
+        g = jax.vmap(grads_of)(params, a_stack, b_stack)
+        return g, jnp.float32(0.0)
 
     # ---------------- reference executor -----------------------------
     sim = meth.make_reference(seq, cfg)
@@ -213,7 +303,7 @@ def run_case(meth_key: str, topo_spec: str, mode: str) -> None:
     if meth_name == "sdm-dsgd-fused":
         # the fused distributed state already folded in the NEXT advance
         state, _ = sim.advance(state, BASE_KEY)
-    ref_x = np.asarray(debias(meth_name, state.x, state)["w"])
+    ref_x = jax.tree.map(np.asarray, debias(meth_name, state.x, state))
 
     # ---------------- distributed executor ---------------------------
     mesh = compat.make_mesh((n,), ("data",))
@@ -222,14 +312,15 @@ def run_case(meth_key: str, topo_spec: str, mode: str) -> None:
     def dist_train(params_stack, a_st, b_st):
         def inner(p, a, b):
             p = jax.tree.map(lambda v: jnp.squeeze(v, 0), p)
-            a, b = jnp.squeeze(a, 0), jnp.squeeze(b, 0)
+            a = jax.tree.map(lambda v: jnp.squeeze(v, 0), a)
+            b = jnp.squeeze(b, 0)
             me = jax.lax.axis_index("data")
             state = ex.init(p, me)
 
             def body(state, _):
                 state, _ = ex.step(
                     state,
-                    lambda pp: (node_grad(pp["w"], a, b), jnp.float32(0.0)),
+                    lambda pp: (grads_of(pp, a, b), jnp.float32(0.0)),
                     base_key=BASE_KEY)
                 return state, None
 
@@ -244,44 +335,31 @@ def run_case(meth_key: str, topo_spec: str, mode: str) -> None:
 
     compiled = jax.jit(dist_train).lower(params_stack, a_stack,
                                          b_stack).compile()
-    dist_x = np.asarray(compiled(params_stack, a_stack, b_stack)["w"])
+    dist_x = jax.tree.map(np.asarray,
+                          compiled(params_stack, a_stack, b_stack))
 
-    err = float(np.max(np.abs(dist_x - ref_x)))
-    scale = float(np.max(np.abs(ref_x)))
+    err = max(float(np.max(np.abs(d_ - r_)))
+              for d_, r_ in zip(jax.tree.leaves(dist_x),
+                                jax.tree.leaves(ref_x)))
+    scale = max(float(np.max(np.abs(r_))) for r_ in jax.tree.leaves(ref_x))
     hlo = compiled.as_text()
     line = (f"CASE {case_id} MAXERR {err} SCALE {scale} "
             f"HAS_CPERM {'collective-permute' in hlo}")
 
-    def permute_payloads():
-        """(f32_elems, bits) of every collective-permute result in the HLO."""
-        out = []
-        for hline in hlo.splitlines():
-            # Result shapes precede the op name; sync lowering emits
-            # `= f32[k,b]{..} collective-permute(`, async a tuple form.
-            for op in (" collective-permute(", " collective-permute-start("):
-                if op in hline:
-                    result_part = hline.split(op)[0]
-                    f32_elems, bits = 0, 0
-                    for dt, shape_str in re.findall(
-                            r"(f32|bf16|f16|s32|u32|s8|u8|pred)\[([\d,]*)\]",
-                            result_part):
-                        dims = [int(v) for v in shape_str.split(",") if v]
-                        elems = int(np.prod(dims or [1]))
-                        if dt == "f32":
-                            f32_elems = max(f32_elems, elems)
-                        bits += elems * DTYPE_BITS[dt]
-                    out.append((f32_elems, bits))
-        return out
+    payloads = hlo_analysis.permute_payloads(hlo)
+    per_node = jax.tree.map(lambda v: v[0], params_stack)
+    spec_plane = plane_mod.ParamPlane.for_tree(per_node)
+    (p_rows, p_lane), = spec_plane.plane_shapes()
+    plane_elems = p_rows * p_lane
 
     if mode in ("fixedk_packed", "fixedk_rows"):
-        payload = max((p_ for p_, _ in permute_payloads()), default=0)
-        # het-p pads the wire payload to the max-k across nodes
-        p_worst = max(cfg.p) if isinstance(cfg.p, tuple) else cfg.p
-        kb = sparsifier.num_kept(DIM, p_worst)
-        # Satellite check: ONE batched sender top_k per (leaf, branch) +
-        # one for the node's own indices — not one sort per shift round.
-        # The replica transport is branch-free: exactly one batched union
-        # draw + the own-index draw, regardless of sequence length.
+        payload = max((pl["elems"].get("f32", 0) for pl in payloads),
+                      default=0)
+        # PLANE-granular payload: one top-k over the whole padded plane
+        kb = plane_payload_expectations(spec_plane, mode, cfg)
+        # Satellite check: ONE batched sender top_k per (plane, branch) +
+        # one for the node's own indices — not one sort per shift round,
+        # not one per pytree leaf. The replica transport is branch-free.
         max_sorts = 2 if gossip.needs_replicas(seq) else 1 + seq.length
         sorts = hlo.count(" sort(") + hlo.count(" sort.")
         line += (f" WIRE_ELEMS {payload} EXPECTED_WIRE_ELEMS {kb}"
@@ -290,19 +368,42 @@ def run_case(meth_key: str, topo_spec: str, mode: str) -> None:
         # compressed gradient-push / sdm qsgd: the exchange_payload
         # transport. Assert the largest single wire payload stays at the
         # compressed size: k*32 value bits for fixed-k (indices ship as a
-        # separate equal-sized s32 leaf — the explicit index overhead),
-        # 8 bits/coord for the int8 quantizer. (bernoulli ships the dense
-        # masked tensor, nothing to bound.)
-        max_bits = max((b for _, b in permute_payloads()), default=0)
-        if mode.split(":")[0] == "qsgd":
-            exp_bits = DIM * 8
+        # separate s32 leaf — the explicit index overhead), bits/coord
+        # (u8-PACKED below a byte) for the quantizer. (bernoulli ships
+        # the dense masked plane, nothing to bound.)
+        max_bits = max((pl["bits"] for pl in payloads), default=0)
+        base = mode.split(":")[0]
+        if base == "qsgd":
+            qbits = int(mode.split(":")[1]) if ":" in mode else 8
+            factor = 8 // qbits if qbits in (2, 4) else 1
+            exp_bits = (-(-plane_elems // factor)) * factor * qbits \
+                if factor > 1 else plane_elems * qbits
         else:
-            exp_bits = sparsifier.num_kept(DIM, 0.25) * 32
+            nb = plane_elems
+            exp_bits = sparsifier.num_kept(nb, 0.25) * 32
         line += f" WIRE_BITS {max_bits} MAX_WIRE_BITS {exp_bits}"
+
+    if group == "plane":
+        # tentpole acceptance: exactly R permutes per exchange,
+        # leaf-count-independent, and (for value-payload transports)
+        # accounting == HLO payload bits.
+        cperm = hlo_analysis.collective_permute_count(hlo)
+        line += (f" CPERM {cperm}"
+                 f" EXPECTED_CPERM {expected_permutes(meth_name, mode, seq)}"
+                 f" N_LEAVES {len(jax.tree.leaves(params_stack))}")
+        if meth_name.startswith("sdm-dsgd") and mode != "bernoulli":
+            hlo_bits = sum(pl["bits"] for pl in payloads)
+            acc_bits = sdm_dsgd.transmitted_bits_per_step(
+                per_node, cfg, seq=seq)
+            line += f" HLO_BITS {hlo_bits} ACC_BITS {acc_bits}"
+        if meth_name == "dsgd":
+            hlo_bits = sum(pl["bits"] for pl in payloads)
+            acc_bits = method_mod.transmitted_bits(meth, per_node, cfg,
+                                                   seq=seq)
+            line += f" HLO_BITS {hlo_bits} ACC_BITS {acc_bits}"
 
     if seq.length > 1 and mode != "-":
         # ---- replica-correct time-varying checks ----------------------
-        from fractions import Fraction
         useq = gossip.union_schedule(seq)
         union_deg = Fraction(sum(len(r.perm) for r in useq.rounds), n)
         round_deg = Fraction(
@@ -311,16 +412,15 @@ def run_case(meth_key: str, topo_spec: str, mode: str) -> None:
         base_mode = mode.split(":")[0]
         if base_mode in ("fixedk", "block") or \
                 mode in ("fixedk_packed", "fixedk_rows"):
-            pay = sparsifier.num_kept(DIM, 0.25)
+            pay = sparsifier.num_kept(plane_elems, 0.25)
         elif base_mode == "qsgd":
-            pay = DIM
+            pay = plane_elems
         else:                      # bernoulli: informative expectation p*d
-            pay = Fraction(repr(0.25)) * DIM
+            pay = Fraction(repr(0.25)) * plane_elems
         # schedule-aware per-link accounting vs an independent
         # re-derivation: payload x union-degree (replica transport), plus
         # the mass scalar on the current-round graph for push-sum.
-        params_el = {"w": jnp.zeros((DIM,), jnp.float32)}
-        acc = method_mod.transmitted_elements(meth, params_el, cfg, seq=seq)
+        acc = method_mod.transmitted_elements(meth, per_node, cfg, seq=seq)
         if meth_name == "gradient-push":
             exp_acc = round(pay * union_deg + round_deg)
         else:
@@ -328,20 +428,22 @@ def run_case(meth_key: str, topo_spec: str, mode: str) -> None:
         # ...and vs the HLO: the replica transport is switch-free, so the
         # compiled step must carry the payload over EXACTLY one
         # collective-permute per union round.
-        pls = permute_payloads()
         if base_mode == "qsgd":
-            pperms = sum(1 for f, b in pls if b >= DIM * 8)
+            pperms = sum(1 for pl in payloads
+                         if pl["bits"] >= plane_elems * 8)
         elif isinstance(pay, Fraction):          # dense bernoulli payload
-            pperms = sum(1 for f, _ in pls if f == DIM)
+            pperms = sum(1 for pl in payloads
+                         if pl["elems"].get("f32", 0) == plane_elems)
         else:
-            pperms = sum(1 for f, _ in pls if f == pay)
+            pperms = sum(1 for pl in payloads
+                         if pl["elems"].get("f32", 0) == pay)
         line += (f" ACC_ELEMS {acc} EXPECTED_ACC_ELEMS {exp_acc}"
                  f" PAYLOAD_PERMS {pperms} UNION_ROUNDS {useq.n_replicas}")
         if meth_name == "sdm-dsgd":
             # the reference must equal an EXPLICIT dense W(t) simulator
             ox = sdm_oracle_x(seq, cfg, params_stack, a_stack, b_stack,
                               node_grad, STEPS)
-            line += f" ORACLE_MAXERR {float(np.max(np.abs(ox - ref_x)))}"
+            line += f" ORACLE_MAXERR {float(np.max(np.abs(ox - ref_x['w'])))}"
         if meth_name == "gradient-push":
             m_err, z_err = push_conservation_probe(seq, mode)
             line += f" MASS_ERR {m_err} Z_ERR {z_err}"
@@ -351,7 +453,9 @@ def run_case(meth_key: str, topo_spec: str, mode: str) -> None:
 def main() -> None:
     group = sys.argv[1]
     for meth_key, topo_spec, mode in CASES[group]:
-        run_case(meth_key, topo_spec, mode)
+        run_case(meth_key, topo_spec, mode,
+                 param_shapes=PLANE_SHAPES if group == "plane" else None,
+                 group=group)
 
 
 if __name__ == "__main__":

@@ -6,8 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (compressor, gradient_push, method, privacy,
-                        sdm_dsgd, sparsifier, topology)
+from repro.core import (compressor, gradient_push, method,
+                        plane as plane_mod, privacy, sdm_dsgd, sparsifier,
+                        topology)
 
 
 # ---------------------------------------------------------------------------
@@ -95,11 +96,21 @@ def test_fixedk_exact_count_and_scale():
 
 def test_qsgd_levels_bounded_int8():
     x = _x((257,), seed=3) * 100.0
+    # b=8: unpacked int8 wire, levels within +-s
+    comp8 = compressor.make("qsgd:8")
+    pl8 = comp8.compress(jax.random.PRNGKey(2), x)
+    assert pl8.values.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(pl8.values.astype(jnp.int32)))) <= \
+        2 ** (8 - 1) - 1
+    # b=4: SUB-BYTE u8-packed wire (2 levels per byte); decompressed
+    # levels still within +-s of the scale
     comp = compressor.make("qsgd:4")
     pl = comp.compress(jax.random.PRNGKey(2), x)
-    assert pl.values.dtype == jnp.int8
     s = 2 ** (4 - 1) - 1
-    assert int(jnp.max(jnp.abs(pl.values.astype(jnp.int32)))) <= s
+    assert pl.values.dtype == jnp.uint8
+    assert pl.values.shape == (-(-257 // 2),)   # ceil(d/2) bytes
+    levels = comp.decompress(pl) * s / pl.scale
+    assert float(jnp.max(jnp.abs(levels))) <= s + 1e-4
     # zero input compresses to an exactly-zero payload (consensus is a
     # fixed point of the compressed dynamics)
     z = comp.compress(jax.random.PRNGKey(2), jnp.zeros((5,)))
@@ -157,12 +168,14 @@ def test_hetp_fixedk_reference_runs_and_accounts():
         state, loss = step(state, sub)
         losses.append(float(loss))
     assert losses[-1] < 0.5 * losses[0]
-    # per-node accounting matches each node's own k; the RDP accountant
-    # still charges the worst-case node
+    # per-node accounting matches each node's own k OVER THE WIRE PLANE
+    # (the padded (rows, LANE) buffer the transport actually draws on);
+    # the RDP accountant still charges the worst-case node
     params = {"w": jnp.zeros((8,))}
+    plane_d = plane_mod.ParamPlane.for_tree(params).padded_size
     per_node = [sdm_dsgd.transmitted_elements_per_step(params, cfg, i)
                 for i in range(4)]
-    assert per_node == [sparsifier.num_kept(8, pi) for pi in cfg.p]
+    assert per_node == [sparsifier.num_kept(plane_d, pi) for pi in cfg.p]
     pp = privacy.PrivacyParams.from_compressor(
         sdm_dsgd.compressor_of(cfg), G=1.0, m=100, tau=0.1, sigma=1.0)
     assert pp.p_worst == 0.5
@@ -261,19 +274,23 @@ def test_compressed_push_state_fields():
     comp = gradient_push.GradientPushConfig(compressor="fixedk", p=0.2)
     assert method.state_fields_of(meth, plain) == meth.state_fields
     extra = method.state_fields_of(meth, comp)
-    assert ("xhat", method.PARAM) in extra and ("s", method.PARAM) in extra
+    assert ("xhat", method.PLANE) in extra and ("s", method.PLANE) in extra
     x = {"w": jax.ShapeDtypeStruct((4, 7), jnp.float32)}
+    # public copy + neighbour sum are WIRE PLANES: (n, rows, LANE) f32
     sds = method.state_shape_dtype(meth, x, comp)
-    assert sds.xhat["w"].shape == (4, 7) and sds.s["w"].shape == (4, 7)
+    assert sds.xhat[0].shape == (4, 1, plane_mod.LANE)
+    assert sds.s[0].shape == (4, 1, plane_mod.LANE)
     sds_plain = method.state_shape_dtype(meth, x, plain)
     assert sds_plain.xhat is None and sds_plain.s is None
-    # wire accounting: compressed push transmits the p-fraction + mass
+    # wire accounting: compressed push transmits the p-fraction OF THE
+    # PLANE + mass
     params = {"w": jnp.zeros((100,))}
-    assert meth.transmitted_elements(params, plain) == 101
+    plane_d = plane_mod.ParamPlane.for_tree(params).padded_size   # 128
+    assert meth.transmitted_elements(params, plain) == plane_d + 1
     assert meth.transmitted_elements(params, comp) == \
-        sparsifier.num_kept(100, 0.2) + 1
+        sparsifier.num_kept(plane_d, 0.2) + 1
     bits = method.transmitted_bits(meth, params, comp)
-    k = sparsifier.num_kept(100, 0.2)
+    k = sparsifier.num_kept(plane_d, 0.2)
     assert bits == k * 32 + k * 7 + 32   # values + explicit idx + mass
 
 
@@ -356,7 +373,9 @@ def test_new_family_rides_generic_payload_transport():
         assert cfg.mode == "payload"
         assert isinstance(sdm_dsgd.compressor_of(cfg), SignCompressor)
         params = {"w": jnp.zeros((64,))}
-        assert sdm_dsgd.transmitted_bits_per_step(params, cfg) == 64 + 32
+        # plane convention: the payload is the padded (1, LANE) plane
+        assert sdm_dsgd.transmitted_bits_per_step(params, cfg) == \
+            plane_mod.LANE + 32
         # a short reference run actually exercises the payload roundtrip
         sim = method.get("sdm-dsgd").make_reference(topology.ring(4), cfg)
         state = sim.init({"w": jnp.zeros((4, 8))})

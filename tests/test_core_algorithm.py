@@ -6,7 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import baselines, sdm_dsgd, theory, topology
+from repro.core import baselines, plane, sdm_dsgd, sparsifier, theory, \
+    topology
 
 
 # A distributed least-squares problem: node i holds (A_i, b_i); the global
@@ -127,34 +128,44 @@ def test_fixedk_mode_matches_bernoulli_statistically():
 
 
 def test_transmitted_elements_metric():
+    """Accounting charges the WIRE PLANE (padded (rows, LANE) geometry),
+    which is what the compiled transport actually permutes: 137 tree
+    elements concat + pad to a 256-element plane, ONE k=ceil(p*plane)
+    over the whole plane instead of per-leaf ceils."""
     params = {"a": jnp.zeros((10, 10)), "b": jnp.zeros((37,))}
+    padded = plane.ParamPlane.for_tree(params).padded_size
+    assert padded == 256    # 137 -> 2 rows of LANE=128
     cfg = sdm_dsgd.SDMConfig(p=0.2)
     assert sdm_dsgd.transmitted_elements_per_step(params, cfg) == \
-        round(0.2 * 137)
+        round(0.2 * padded)
     cfgk = sdm_dsgd.SDMConfig(p=0.2, mode="fixedk_packed")
-    assert sdm_dsgd.transmitted_elements_per_step(params, cfgk) == 20 + 8
+    assert sdm_dsgd.transmitted_elements_per_step(params, cfgk) == \
+        sparsifier.num_kept(padded, 0.2)
 
 
-def test_transmitted_elements_clamped_to_leaf_size():
-    """Pad blocks from block_view must not count as transmitted coords.
+def test_transmitted_elements_clamped_to_plane_size():
+    """Pad blocks beyond the plane must not count as transmitted coords.
 
-    A (5,) leaf with pack_block=4 views as 2 blocks (3 pad zeros); at
-    p=1.0 both blocks are kept so naive accounting says 8 > 5 real
+    A (130,) tree packs to a 256-coordinate plane; with pack_block=3
+    the block view has 86 blocks (2 pad coords beyond the plane); at
+    p=1.0 every block is kept so naive accounting says 258 > 256 wire
     coordinates.
     """
-    params = {"tiny": jnp.zeros((5,))}
-    cfg = sdm_dsgd.SDMConfig(p=1.0, mode="fixedk_packed", pack_block=4)
-    assert sdm_dsgd.transmitted_elements_per_step(params, cfg) == 5
-    # unpadded leaves are unaffected by the clamp
-    params2 = {"even": jnp.zeros((8,))}
-    assert sdm_dsgd.transmitted_elements_per_step(params2, cfg) == 8
+    params = {"tiny": jnp.zeros((130,))}
+    cfg = sdm_dsgd.SDMConfig(p=1.0, mode="fixedk_packed", pack_block=3)
+    assert sdm_dsgd.transmitted_elements_per_step(params, cfg) == 256
+    # block-aligned planes are unaffected by the clamp
+    cfg4 = sdm_dsgd.SDMConfig(p=1.0, mode="fixedk_packed", pack_block=4)
+    assert sdm_dsgd.transmitted_elements_per_step(params, cfg4) == 256
 
 
 def test_transmitted_elements_no_float_overshoot():
-    """num_kept fix end-to-end: d=100, p=0.07 transmits 7, not 8."""
+    """num_kept fix end-to-end: plane d=128, p=0.07 transmits
+    ceil(8.96) = 9, not the float-overshoot 10."""
     params = {"w": jnp.zeros((100,))}
     cfg = sdm_dsgd.SDMConfig(p=0.07, mode="fixedk_packed")
-    assert sdm_dsgd.transmitted_elements_per_step(params, cfg) == 7
+    assert sdm_dsgd.transmitted_elements_per_step(params, cfg) == \
+        sparsifier.num_kept(128, 0.07) == 9
 
 
 def test_theta_one_p_one_reduces_to_dsgd():

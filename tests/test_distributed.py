@@ -22,12 +22,19 @@ Coverage per group:
                   heterogeneous per-node p in fixed-k mode
                   (pad-to-max-k payloads).
 
+  plane         — the WIRE-PLANE tentpole: a multi-leaf parameter tree
+                  compiles to exactly R collective-permutes per exchange
+                  (leaf-count-independent), and the static wire-bit
+                  accounting equals the HLO payload bits, including the
+                  packed sub-byte qsgd u8 wire.
+
 Packed cases additionally assert the wire payload stays at the fixed-k
-fraction regardless of graph degree (max-k across nodes for het-p), and
-that sender index sets come from the per-step BATCHED draw (sort count
-bounded by schedules, not by shift rounds). Compressed-payload cases
-assert the largest single collective-permute payload stays at the
-compressed bit size (k*32 for fixed-k values, 8 bits/coord for qsgd).
+fraction OF THE WIRE PLANE regardless of graph degree (max-k across
+nodes for het-p), and that sender index sets come from the per-step
+BATCHED draw (sort count bounded by schedules, not by shift rounds or
+leaf count). Compressed-payload cases assert the largest single
+collective-permute payload stays at the compressed bit size (k*32 for
+fixed-k values, bits/coord — u8-packed below a byte — for qsgd).
 """
 import pathlib
 import re
@@ -62,13 +69,17 @@ def _run_group(group: str) -> list[dict]:
 
 
 @pytest.mark.parametrize("group", ["sdm_core", "sdm_variants", "baselines",
-                                   "compressed", "time_varying"])
+                                   "compressed", "time_varying", "plane"])
 def test_method_parity_sweep(group):
     cases = _run_group(group)
     for c in cases:
         err, scale = float(c["MAXERR"]), float(c["SCALE"])
         assert scale > 0.01, c           # the run actually moved
-        assert err < 1e-4 * max(scale, 1.0), c
+        # quantizer cases tolerate one stochastic-rounding threshold flip
+        # (different f32 reduction orders for the norm can flip a level;
+        # the resulting O(norm/levels) delta is not algorithmic drift)
+        tol = 1e-3 if "qsgd" in c["id"] else 1e-4
+        assert err < tol * max(scale, 1.0), c
         if not c["id"].startswith("allreduce"):
             assert c["HAS_CPERM"] == "True", c
         if "WIRE_ELEMS" in c:
@@ -94,3 +105,12 @@ def test_method_parity_sweep(group):
             # ...and the HLO carries the payload over exactly one
             # collective-permute per union round (switch-free delivery)
             assert int(c["PAYLOAD_PERMS"]) == int(c["UNION_ROUNDS"]), c
+        if "CPERM" in c:
+            # the wire-plane tentpole: exactly R collective-permutes per
+            # exchange in the compiled step, independent of leaf count
+            assert int(c["N_LEAVES"]) > 1, c
+            assert int(c["CPERM"]) == int(c["EXPECTED_CPERM"]), c
+        if "HLO_BITS" in c:
+            # static wire-bit accounting == HLO payload bits per step
+            # (value-payload transports, incl. packed sub-byte qsgd)
+            assert int(c["HLO_BITS"]) == int(c["ACC_BITS"]) > 0, c

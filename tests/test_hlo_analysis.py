@@ -34,3 +34,23 @@ def test_done_ops_not_double_counted():
 def test_empty_and_garbage():
     assert hlo_analysis.collective_bytes("") == {"total": 0}
     assert hlo_analysis.collective_bytes("add(f32[2] x, y)") == {"total": 0}
+
+
+def test_permute_payloads_sync_and_async():
+    """The wire-plane acceptance surface: per-permute payload bits,
+    dtype-aware, with async -start tuple forms (operand mirror + u32
+    context words) counted ONCE like the sync lowering."""
+    hlo = """
+ENTRY main {
+  %cp = f32[8,128]{1,0} collective-permute(%x), source_target_pairs={{0,1}}
+  %q = u8[512]{0} collective-permute(%y), source_target_pairs={{0,1}}
+  %cps = (f32[8,128]{1,0}, f32[8,128]{1,0}, u32[], u32[]) collective-permute-start(%x)
+  %cpd = f32[8,128]{1,0} collective-permute-done(%cps)
+}
+"""
+    pls = hlo_analysis.permute_payloads(hlo)
+    assert [p["bits"] for p in pls] == [8 * 128 * 32, 512 * 8, 8 * 128 * 32]
+    assert pls[0]["elems"] == {"f32": 1024}
+    assert pls[1]["elems"] == {"u8": 512}       # sub-byte qsgd u8 lanes
+    assert pls[2]["elems"] == {"f32": 1024}     # start counted once
+    assert hlo_analysis.collective_permute_count(hlo) == 3  # done skipped

@@ -7,8 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (baselines, gossip, gradient_push, method, privacy,
-                        sdm_dsgd, topology)
+from repro.core import (baselines, gossip, gradient_push, method,
+                        plane as plane_mod, privacy, sdm_dsgd, topology)
 
 
 # ---------------------------------------------------------------------------
@@ -168,8 +168,11 @@ def test_replica_state_templates_on_time_varying_schedules():
     tv = method.state_fields_of(meth, cfg, seq)
     assert ("xhat", method.REPLICA) in tv
     x = {"w": jax.ShapeDtypeStruct((8, 7), jnp.float32)}
+    # replica slots stack WIRE PLANES: (n, r, rows, LANE) f32
+    lane = plane_mod.LANE
     sds = method.state_shape_dtype(meth, x, cfg, seq=seq)
-    assert sds.xhat["w"].shape == (8, r, 7)
+    assert sds.xhat[0].shape == (8, r, 1, lane)
+    assert sds.s[0].shape == (8, 1, lane)
     assert method.state_shape_dtype(meth, x, cfg, seq=ring).xhat is None
 
     # compressed gradient-push: xhat_nb replica stack only when BOTH
@@ -183,15 +186,20 @@ def test_replica_state_templates_on_time_varying_schedules():
     assert ("xhat_nb", method.REPLICA) not in method.state_fields_of(
         gp, gradient_push.GradientPushConfig(), seq)
     gsds = method.state_shape_dtype(gp, x, gcfg, seq=seq)
-    assert gsds.xhat_nb["w"].shape == (8, r, 7)
+    assert gsds.xhat_nb[0].shape == (8, r, 1, lane)
 
-    # stacked init materializes the replica stacks at the shared x_0
+    # stacked init materializes the replica stacks at the shared
+    # (plane-packed) x_0 — the first 7 plane coords carry x_0, the pad
+    # is zero
     stack = {"w": jnp.ones((8, 7), jnp.float32)}
     st = meth.init_stacked(stack, seq, cfg)
-    assert st.xhat["w"].shape == (8, r, 7)
-    np.testing.assert_array_equal(np.asarray(st.xhat["w"]), 1.0)
+    assert st.xhat[0].shape == (8, r, 1, lane)
+    np.testing.assert_array_equal(
+        np.asarray(st.xhat[0]).reshape(8, r, lane)[:, :, :7], 1.0)
+    np.testing.assert_array_equal(
+        np.asarray(st.xhat[0]).reshape(8, r, lane)[:, :, 7:], 0.0)
     gst = gp.init_stacked(stack, seq, gp.coerce_config(gcfg))
-    assert gst.xhat_nb["w"].shape == (8, r, 7)
+    assert gst.xhat_nb[0].shape == (8, r, 1, lane)
     # reference construction no longer rejects the combination
     gp.make_reference(seq, gcfg)
 
@@ -227,10 +235,12 @@ def test_per_node_p_length_must_match_graph():
 
 def test_transmitted_elements_per_node_p():
     params = {"a": jnp.zeros((10, 10)), "b": jnp.zeros((37,))}
+    # plane convention: 137 tree elements pad to a 256-coordinate plane
+    d = plane_mod.ParamPlane.for_tree(params).padded_size
     cfg = sdm_dsgd.SDMConfig(p=(0.1, 0.2, 0.3), theta=0.05)
     per_node = [sdm_dsgd.transmitted_elements_per_step(params, cfg, i)
                 for i in range(3)]
-    assert per_node == [round(0.1 * 137), round(0.2 * 137), round(0.3 * 137)]
+    assert per_node == [round(0.1 * d), round(0.2 * d), round(0.3 * d)]
     # node=None: the across-node mean, so total = mean * n as before
     mean = sdm_dsgd.transmitted_elements_per_step(params, cfg)
     assert mean == round(sum(per_node) / 3)

@@ -1,0 +1,197 @@
+"""ParamPlane (repro.core.plane): the wire-plane flatten/unflatten spec.
+
+Covers the tentpole's correctness surface:
+  * pack/unpack round-trip across mixed dtypes / ranks / padding,
+    property-tested (hypothesis; offline fallback in hermetic runs),
+  * bucket assignment by sharding key (default flat bucket vs TP buckets
+    whose lane IS the sharded trailing dim), incl. the steps.py
+    ``bucket_keys_from_axes`` policy,
+  * bit-equality of plane-granular compressor draws with the historical
+    per-leaf path on single-leaf lane-multiple trees (same key, same
+    element count -> identical threefry stream),
+  * spec caching/hashability (safe to close over in jit) and the
+    stacked (vmapped) variants the reference executors use.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compressor, plane, sdm_dsgd, sparsifier
+
+LANE = plane.LANE
+
+
+# ---------------------------------------------------------------------------
+# Round-trip property.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_leaves=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2 ** 16),
+    lane=st.sampled_from([8, 128, 1024]),
+    row_multiple=st.sampled_from([1, 4]),
+)
+def test_pack_unpack_roundtrip_property(n_leaves, seed, lane, row_multiple):
+    rng = np.random.default_rng(seed)
+    dtypes = [jnp.float32, jnp.bfloat16, jnp.float16]
+    tree = {}
+    for i in range(n_leaves):
+        rank = int(rng.integers(1, 4))
+        shape = tuple(int(rng.integers(1, 9)) for _ in range(rank))
+        dt = dtypes[int(rng.integers(0, len(dtypes)))]
+        tree[f"leaf{i}"] = jnp.asarray(
+            rng.normal(size=shape), jnp.float32).astype(dt)
+    spec = plane.ParamPlane.for_tree(tree, lane=lane,
+                                     row_multiple=row_multiple)
+    planes = spec.pack(tree)
+    # geometry: padded rows, row_multiple respected, zero pad
+    total = sum(int(v.size) for v in tree.values())
+    assert spec.total_size == total
+    for p, b in zip(planes, spec.buckets):
+        assert p.shape == (b.rows, b.lane) and p.dtype == jnp.float32
+        assert b.rows % row_multiple == 0
+        flat = np.asarray(p).reshape(-1)
+        np.testing.assert_array_equal(flat[b.size:], 0.0)
+    back = spec.unpack(planes)
+    for k, v in tree.items():
+        assert back[k].dtype == v.dtype and back[k].shape == v.shape
+        # f32 leaves are exact; low-precision leaves round-trip through
+        # f32 losslessly as well (f32 is a superset)
+        np.testing.assert_array_equal(np.asarray(back[k], np.float32),
+                                      np.asarray(v, np.float32))
+
+
+def test_stacked_pack_unpack_matches_per_node():
+    rng = np.random.default_rng(0)
+    tree = {"a": jnp.asarray(rng.normal(size=(4, 3, 5)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(4, 7)), jnp.float32)}
+    spec = plane.ParamPlane.for_stacked(tree)
+    stacked = spec.pack_stacked(tree)
+    for i in range(4):
+        per_node = spec.pack(jax.tree.map(lambda v: v[i], tree))
+        for s_, p_ in zip(stacked, per_node):
+            np.testing.assert_array_equal(np.asarray(s_[i]), np.asarray(p_))
+    back = spec.unpack_stacked(stacked)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+
+
+# ---------------------------------------------------------------------------
+# Bucket assignment by sharding key.
+# ---------------------------------------------------------------------------
+
+def test_bucket_assignment_by_key():
+    tree = {"dense1": jnp.zeros((4, 16)), "tp1": jnp.zeros((8, 32)),
+            "tp2": jnp.zeros((2, 3, 32)), "dense2": jnp.zeros((5,)),
+            "tp_other": jnp.zeros((4, 64))}
+    keys = {"dense1": None, "tp1": ("model", 32), "tp2": ("model", 32),
+            "dense2": None, "tp_other": ("model", 64)}
+    spec = plane.ParamPlane.for_tree(tree, buckets=keys)
+    assert spec.n_buckets == 3
+    by_key = {b.key: b for b in spec.buckets}
+    flat = by_key[None]
+    assert flat.lane == LANE and flat.size == 4 * 16 + 5
+    tp32 = by_key[("model", 32)]
+    # TP bucket: lane IS the shared trailing dim, rows = stacked rows
+    assert tp32.lane == 32 and tp32.shape == (8 + 6, 32)
+    assert by_key[("model", 64)].shape == (4, 64)
+    # pack keeps TP rows contiguous and round-trips
+    planes = spec.pack(tree)
+    back = spec.unpack(planes)
+    assert jax.tree.map(lambda v: v.shape, back) == \
+        jax.tree.map(lambda v: v.shape, tree)
+
+
+def test_bucket_keys_from_axes_policy():
+    axes = {"wq": ("embed", "heads"), "emb": ("vocab", "embed"),
+            "bias": ("mlp",), "scale": ()}
+    shapes = {"wq": (16, 8), "emb": (100, 16), "bias": (32,), "scale": ()}
+    mapping = {"heads": "model", "mlp": "model", "vocab": "model",
+               "embed": None}
+    keys = plane.bucket_keys_from_axes(axes, shapes, mapping)
+    assert keys["wq"] == ("model", 8)       # trailing axis model-sharded
+    assert keys["emb"] is None              # trailing axis unsharded
+    assert keys["bias"] == ("model", 32)
+    assert keys["scale"] is None
+
+
+def test_use_buckets_context_scopes_for_tree():
+    tree = {"a": jnp.zeros((4, 8)), "b": jnp.zeros((3,))}
+    keys = {"a": ("model", 8), "b": None}
+    spec_flat = plane.ParamPlane.for_tree(tree)
+    assert spec_flat.n_buckets == 1
+    with plane.use_buckets(keys):
+        spec_tp = plane.ParamPlane.for_tree(tree)
+        assert spec_tp.n_buckets == 2
+    # context popped: back to the flat default (and cached specs distinct)
+    assert plane.ParamPlane.for_tree(tree) is spec_flat
+    assert spec_tp is not spec_flat
+
+
+def test_spec_is_cached_and_hashable():
+    tree = {"a": jnp.zeros((4, 8))}
+    s1 = plane.ParamPlane.for_tree(tree)
+    s2 = plane.ParamPlane.for_tree({"a": jnp.ones((4, 8))})
+    assert s1 is s2             # same treedef/shapes/dtypes -> same spec
+    hash(s1)                    # closable over in jit/shard_map
+    assert plane.ParamPlane.for_tree(tree, lane=64) is not s1
+
+
+# ---------------------------------------------------------------------------
+# Bit-equality with the per-leaf draw on single-leaf lane-multiple trees.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec_name", ["bernoulli", "fixedk", "rows"])
+def test_single_leaf_lane_multiple_draws_bit_equal(spec_name):
+    """On a single-leaf tree whose size is a LANE multiple the plane is
+    a pure reshape, so the plane-granular compressor draw must be
+    BIT-EQUAL to compressing the leaf directly (same key, same element
+    count -> identical threefry stream). This pins the PR-5 trajectory
+    break to exactly the padded-draw granularity, nothing else."""
+    d = 4 * LANE
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(d,)), jnp.float32)
+    comp = compressor.make(spec_name, p=0.25)
+    key = jax.random.PRNGKey(11)
+    spec = plane.ParamPlane.for_tree({"w": x})
+    (pl,) = spec.pack({"w": x})
+    via_plane = spec.unpack(
+        (comp.decompress(comp.compress(key, pl)),))["w"]
+    if spec_name == "rows":
+        # rows blocks differ between a (d,) leaf (rows of 1 elem) and
+        # the (4, LANE) plane — compare against the plane-shaped leaf
+        direct = comp.decompress(
+            comp.compress(key, x.reshape(4, LANE))).reshape(-1)
+    else:
+        direct = comp.decompress(comp.compress(key, x))
+    np.testing.assert_array_equal(np.asarray(via_plane),
+                                  np.asarray(direct.reshape(-1)))
+
+
+def test_plane_distributed_state_shapes():
+    """init_distributed_state carries s/d (and replica xhat) as planes."""
+    params = {"a": jnp.ones((9, 5)), "b": jnp.zeros((40,))}
+    st = sdm_dsgd.init_distributed_state(params, self_weight=1.0 / 3.0)
+    spec = plane.ParamPlane.for_tree(params)
+    assert isinstance(st.s, tuple) and len(st.s) == spec.n_buckets
+    (rows, lane), = spec.plane_shapes()
+    assert st.s[0].shape == (rows, lane) and st.d[0].shape == (rows, lane)
+    # s0 = (1 - W_ii) x0 on the plane, pad included (zeros stay zero)
+    xp = spec.pack(params)[0]
+    np.testing.assert_allclose(np.asarray(st.s[0]),
+                               np.asarray((1 - 1.0 / 3.0) * xp), rtol=1e-6)
+    st_r = sdm_dsgd.init_distributed_state(params, 0.5, n_replicas=3)
+    assert st_r.xhat[0].shape == (3, rows, lane)
+
+
+def test_wire_shape_tree_accounting_surface():
+    params = {"a": jnp.zeros((10, 10)), "b": jnp.zeros((37,))}
+    wire = sdm_dsgd.wire_shape_tree(params)
+    assert [tuple(w.shape) for w in wire] == [(2, LANE)]
+    # one num_kept ceil over the whole plane — the round-once convention
+    cfg = sdm_dsgd.SDMConfig(p=0.21, mode="fixedk_packed")
+    assert sdm_dsgd.transmitted_elements_per_step(params, cfg) == \
+        sparsifier.num_kept(2 * LANE, 0.21)

@@ -7,9 +7,10 @@ Two halves of the PR-4 contract:
   mixes with the full current-round matrix, no incremental state — for
   sequence lengths L in {2, 3}, dense and fixedk-packed payloads,
   homogeneous and heterogeneous per-node p.
-* REGRESSION: static-schedule trajectories are byte-for-byte unchanged
-  from PR 3 (golden loss values generated by the pre-replica code), so
-  the replica machinery is provably elided on the fast path.
+* REGRESSION: static-schedule trajectories are byte-for-byte stable
+  (golden loss values; regenerated ONCE at PR 5 when sparsifier draws
+  moved to wire-plane granularity), so the replica machinery is provably
+  elided on the fast path.
 
 Plus unit coverage of the union-schedule compiler and the per-link
 schedule-aware accounting it feeds.
@@ -24,7 +25,7 @@ import numpy as np
 import pytest
 
 from repro.core import (gossip, gradient_push, method as method_mod,
-                        sdm_dsgd, sparsifier, topology)
+                        plane as plane_mod, sdm_dsgd, sparsifier, topology)
 
 sys.path.insert(0, str(pathlib.Path(__file__).parent / "helpers"))
 from dense_oracle import sdm_dense_wt_oracle  # noqa: E402
@@ -126,22 +127,26 @@ def test_time_varying_reference_equals_dense_oracle(rounds, mode, het):
 # REGRESSION: static trajectories byte-for-byte unchanged from PR 3.
 # ---------------------------------------------------------------------------
 
-# Golden loss sequences generated by the PRE-replica code (PR 3) on the
-# deterministic micro-problem below; the replica machinery must be elided
-# on static schedules so these reproduce EXACTLY.
+# Golden loss sequences on the deterministic micro-problem below; the
+# replica machinery must be elided on static schedules so these
+# reproduce EXACTLY. REGENERATED at PR 5: the wire-plane transport draws
+# sparsifier bits at PLANE granularity (one draw over the padded
+# (rows, LANE) buffer instead of per leaf), which — exactly like the
+# PR-1 break when draws moved to the canonical LANE-padded shape —
+# changed trajectories once; they are byte-stable from here on.
 _GOLDEN = {
-    "sdm_ring4_fixedk": ([0.8207862377, 0.8104922771, 0.7920023203,
-                          0.806050539, 0.8034803867, 0.7933874726,
-                          0.7804383039, 0.781647563, 0.7812483907,
-                          0.7819154263], 0.9279871582984924),
-    "sdm_ring4_bernoulli": ([0.8207862377, 0.8084282875, 0.8082659841,
-                             0.7916328907, 0.7894970775, 0.8006534576,
-                             0.7872066498, 0.7955648303, 0.8322873712,
-                             0.844601512], 1.1717040538787842),
-    "gp_dring4_fixedk": ([0.8207862377, 0.7841586471, 0.752879262,
-                          0.726587534, 0.7041360736, 0.6880596876,
-                          0.6759392023, 0.6694539785, 0.664726913,
-                          0.6609789133], 0.6608107686042786),
+    "sdm_ring4_fixedk": ([0.8207862377, 0.8122178316, 0.789454937,
+                          0.7885785699, 0.7895878553, 0.7811986804,
+                          0.7827057838, 0.7814177275, 0.787466526,
+                          0.7879382968], 1.2856959104537964),
+    "sdm_ring4_bernoulli": ([0.8207862377, 0.8118773699, 0.8107442856,
+                             0.8062922955, 0.7979011536, 0.7980082631,
+                             0.7842214108, 0.7939969301, 0.807949543,
+                             0.804894805], 1.2652111053466797),
+    "gp_dring4_fixedk": ([0.8207862377, 0.7841868401, 0.7529057264,
+                          0.7272599936, 0.7051187158, 0.686771512,
+                          0.6751340628, 0.6677007675, 0.6625115871,
+                          0.6598061323], 0.655038595199585),
 }
 
 _GOLDEN_CASES = {
@@ -203,7 +208,11 @@ def test_static_trajectories_unchanged_from_pr3(name):
 def test_schedule_aware_accounting():
     params = {"w": jnp.zeros((100,))}
     cfg = sdm_dsgd.SDMConfig(p=0.3, theta=0.2, mode="fixedk_packed")
-    k = sparsifier.num_kept(100, 0.3)
+    # plane convention: the 100-element tree pads to one (1, LANE) plane
+    # and ONE k = ceil(p * plane) ceil covers the whole tree
+    d = plane_mod.ParamPlane.for_tree(params).padded_size
+    assert d == plane_mod.LANE
+    k = sparsifier.num_kept(d, 0.3)
     # legacy (no schedule): one payload per step, unchanged
     assert sdm_dsgd.transmitted_elements_per_step(params, cfg) == k
     # static ring: out-degree 2
@@ -223,8 +232,8 @@ def test_schedule_aware_accounting():
     dsgd = method_mod.get("dsgd")
     dcfg = baselines.DSGDConfig()
     assert method_mod.transmitted_elements(dsgd, params, dcfg,
-                                           seq=ring) == 200
-    assert method_mod.transmitted_elements(dsgd, params, dcfg, seq=seq) == 100
+                                           seq=ring) == 2 * d
+    assert method_mod.transmitted_elements(dsgd, params, dcfg, seq=seq) == d
     # push-sum: compressed payload rides the union graph, the mass scalar
     # the current-round graph
     gp = method_mod.get("gradient-push")
@@ -260,23 +269,23 @@ def test_union_schedule_rejects_duplicate_shifts():
 def test_het_p_mean_rounds_once():
     """Satellite: node=None het-p accounting takes the EXACT-Fraction
     mean and rounds once — per-node-round-then-round-again can drift."""
-    # engineered so per-node rounding disagrees with the exact mean:
-    # exact per-node counts 10.5, 10.5, 10.5 -> exact mean 10.5 -> 10
-    # (banker's rounding), while round-per-node gives (10, 10, 10) on
-    # python's round-half-even but (11, 11, 11) would on round-half-up.
+    # engineered so fractional halves survive the plane padding: the
+    # 30-element tree pads to a LANE=128 plane, and p = k/256 budgets
+    # give exact per-node counts of k/2 — .5 cases where round-per-node
+    # vs round-the-mean visibly differ under half-even rounding.
     params = {"w": jnp.zeros((30,))}
-    cfg = sdm_dsgd.SDMConfig(p=(0.35, 0.35, 0.35), theta=0.1)
-    exact = Fraction("0.35") * 30           # 10.5 exactly
+    d = plane_mod.ParamPlane.for_tree(params).padded_size       # 128
+    cfg = sdm_dsgd.SDMConfig(p=(0.33984375,) * 3, theta=0.1)
+    exact = Fraction("0.33984375") * d      # 43.5 exactly
     assert sdm_dsgd.transmitted_elements_per_step(params, cfg) == round(exact)
-    # a genuinely drifting case: exact per-node 4.5, 7.5, 10.5 over d=30
-    cfg2 = sdm_dsgd.SDMConfig(p=(0.15, 0.25, 0.35), theta=0.05)
-    mean_exact = (Fraction("0.15") + Fraction("0.25")
-                  + Fraction("0.35")) * 30 / 3      # 7.5 exactly
+    # a genuinely drifting case: exact per-node 19.5, 31.5, 43.5
+    ps = (0.15234375, 0.24609375, 0.33984375)
+    cfg2 = sdm_dsgd.SDMConfig(p=ps, theta=0.05)
+    mean_exact = sum(Fraction(repr(p)) for p in ps) * d / 3   # 31.5 exactly
     got = sdm_dsgd.transmitted_elements_per_step(params, cfg2)
     assert got == round(mean_exact)
-    # old convention: round each (4, 8, 10 under half-even) then round
-    # the mean (22/3 -> 7) — can differ from the tree-level convention;
-    # the Fraction path CANNOT.
+    # old convention: round each then round the mean — can differ from
+    # the tree-level convention; the Fraction path CANNOT.
     per_node = [sdm_dsgd.transmitted_elements_per_step(params, cfg2, i)
                 for i in range(3)]
-    assert per_node == [round(Fraction(repr(p)) * 30) for p in cfg2.p]
+    assert per_node == [round(Fraction(repr(p)) * d) for p in ps]

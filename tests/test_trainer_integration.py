@@ -39,11 +39,14 @@ def test_sdm_training_improves_accuracy_and_tracks_privacy(tmp_path):
     assert res.eval_accuracy[-1] > 0.5          # well above 0.25 chance
     # privacy epsilon accumulates monotonically
     assert all(b >= a for a, b in zip(res.epsilons, res.epsilons[1:]))
-    # comm metric is per-link and schedule-aware: p*d per payload, one
-    # payload per out-edge (the symmetric ring has out-degree 2), exact
-    # Fraction arithmetic rounded once
+    # comm metric is per-link and schedule-aware: p * wire-plane size per
+    # payload (the transport compresses the padded (rows, LANE) plane),
+    # one payload per out-edge (the symmetric ring has out-degree 2),
+    # exact Fraction arithmetic rounded once
     from fractions import Fraction
-    d = sum(int(x.size) for x in jax.tree.leaves(stack)) // N
+    from repro.core import plane
+    d = plane.ParamPlane.for_tree(
+        jax.tree.map(lambda x: x[0], stack)).padded_size
     assert res.comm_elements[0] == round(Fraction("0.3") * d * 2) * N
     # checkpoints written
     import os
@@ -63,6 +66,9 @@ def test_dsgd_and_dcdsgd_paths():
         params_stack=stack, grad_fn=grad_fn, batches=batches, steps=80)
     assert res1.losses[-1] < res1.losses[0]
     assert res2.losses[-1] < res2.losses[0]
-    # DSGD sends the full model on both ring out-edges every step
-    d = sum(int(x.size) for x in jax.tree.leaves(stack)) // N
+    # DSGD sends the full model (as its padded wire plane) on both ring
+    # out-edges every step
+    from repro.core import plane
+    d = plane.ParamPlane.for_tree(
+        jax.tree.map(lambda x: x[0], stack)).padded_size
     assert res1.comm_elements[0] == d * 2 * N
