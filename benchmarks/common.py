@@ -5,7 +5,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import gossip, topology
 from repro.data import classification_dataset, node_partitioned_batches

@@ -7,7 +7,6 @@ accuracy. ``--methods`` extends the sweep with any registry method
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common
 from repro.core import baselines, method as method_mod, sdm_dsgd, theory

@@ -12,8 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.core import compressor as compressor_mod, gossip, sparsifier, \
-    topology
+from repro.core import compressor as compressor_mod, gossip, sparsifier
 from repro.kernels.flash_attn.ops import flash_attention
 from repro.kernels.sdm_update import ref as sdm_ref
 from repro.kernels.sdm_update.sdm_update import LANE, sdm_update_pallas
@@ -65,7 +64,7 @@ def run_gossip_schedules(topologies=GOSSIP_TOPOLOGIES, n_nodes: int = 16,
             f"packed_fraction={packed / dense:.4f};"
             f"packed_bits/node/step={mean_deg * packed_bits_sync:.0f};"
             f"packed_bits_explicit_idx={mean_deg * packed_bits_idx:.0f};"
-            f"index_overhead_frac="
+            "index_overhead_frac="
             f"{packed_bits_idx / packed_bits_sync - 1.0:.4f}")
 
 
@@ -97,7 +96,7 @@ def run():
 
     # flash attention: streaming (block_q x block_k) tiles vs dense scores.
     b, s, h, dh = 1, 256, 4, 64
-    q = f2 = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
     k = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
     v = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
     us_ref = common.timeit_us(

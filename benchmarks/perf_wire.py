@@ -87,7 +87,7 @@ def _emit() -> None:
             lambda s: jnp.asarray(rng.normal(size=s) * 0.1, jnp.float32),
             PARAM_SHAPES, is_leaf=is_shape)
         stack = jax.tree.map(
-            lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), p0)
+            lambda v: jnp.broadcast_to(v[None], (n,) + v.shape), p0)
 
         mesh = compat.make_mesh((n,), ("data",))
         ex = meth.make_distributed(seq, cfg, "data")

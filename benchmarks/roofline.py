@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 PEAK_FLOPS = 197e12     # bf16 per chip
 HBM_BW = 819e9          # B/s per chip

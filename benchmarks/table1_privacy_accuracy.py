@@ -8,12 +8,10 @@ the privacy loss based on Theorem 1"). Claims verified:
 """
 from __future__ import annotations
 
-import math
 
-import numpy as np
 
 from benchmarks import common
-from repro.core import baselines, privacy, sdm_dsgd, theory
+from repro.core import privacy, sdm_dsgd, theory
 from repro.train.trainer import run_decentralized
 
 G_CLIP = 5.0      # the paper's C = 5 coordinate clip

@@ -4,7 +4,6 @@ Lemma 1's four-term bound evaluated on the experimental topology.
 """
 from __future__ import annotations
 
-import math
 
 from benchmarks import common
 from repro.core import privacy, theory, topology
@@ -45,7 +44,7 @@ def run():
     derived = (f"m4_ratios={[round(r, 2) for r in ratios]};"
                f"p2_gaps={[round(g, 1) for g in gaps]};"
                f"lemma1_dominant={dominant};"
-               f"terms=" + ",".join(f"{k}:{v:.3e}" for k, v in terms.items()))
+               "terms=" + ",".join(f"{k}:{v:.3e}" for k, v in terms.items()))
     common.emit("theory_tradeoff", 0.0, derived)
     return terms
 

@@ -11,9 +11,8 @@ delta)-DP spend from the Theorem-1 accountant.
 import jax
 import jax.numpy as jnp
 
-from repro.core import (PrivacyParams, ReferenceSimulator, SDMConfig,
+from repro.core import (PrivacyParams, SDMConfig,
                         sdm_dsgd, topology)
-from repro.core.privacy import PrivacyAccountant
 from repro.data import classification_dataset, node_partitioned_batches
 from repro.models import vision_small
 from repro.train.trainer import run_decentralized

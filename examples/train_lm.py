@@ -11,7 +11,6 @@ Gaussian masking), with loss dropping well below the unigram floor.
 import argparse
 import dataclasses
 import os
-import sys
 import time
 
 

@@ -1,0 +1,37 @@
+"""Static analysis over compiled train steps (no execution).
+
+Three passes, one CLI (``python -m repro.analysis``):
+
+* ``jaxpr_taint``  — interprocedural data-taint: no un-sanitized
+  data-derived tensor may reach a collective (``ppermute``/``psum``),
+  where "sanitized" means it passed the ``tagging.sanitize`` mark that
+  ``masked_grad`` applies after clip -> + sigma*normal (sigma > 0).
+* ``prng_lint``    — PRNG hygiene: no key consumed twice (draw+draw,
+  draw+split), no scan-iteration-invariant key drawn inside the
+  training loop, no mask/noise draw at a kernel-padded plane shape.
+* ``wire_audit``   — registry-wide HLO invariants: collective-permute
+  count == schedule rounds (leaf-count-independent), payload bits ==
+  the static wire accounting, every permute operand wire-tagged.
+
+The passes run over the method x compressor x topology matrix on a
+4-node host mesh; see ``wire_audit.MATRIX``.
+"""
+__all__ = ["analyze_taint", "analyze_prng", "audit_config", "MATRIX",
+           "expected_permutes"]
+
+_EXPORTS = {
+    "analyze_taint": "repro.analysis.jaxpr_taint",
+    "analyze_prng": "repro.analysis.prng_lint",
+    "audit_config": "repro.analysis.wire_audit",
+    "MATRIX": "repro.analysis.wire_audit",
+    "expected_permutes": "repro.analysis.wire_audit",
+}
+
+
+def __getattr__(name):
+    # lazy: wire_audit builds meshes at import, keep `import repro.analysis`
+    # cheap for callers that only want one pass.
+    if name in _EXPORTS:
+        import importlib
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(name)

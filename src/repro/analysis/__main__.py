@@ -1,0 +1,106 @@
+"""``python -m repro.analysis``: sweep the audit matrix, emit
+``LINT_report.json``, exit nonzero on any NEW violation.
+
+Must configure the fake host mesh BEFORE jax initializes, so all the
+jax-touching imports live inside ``main``. Findings already listed in
+the suppression baseline (``baseline.json`` next to this module, or
+``--baseline``) are reported but do not fail the run — the mechanism
+for landing the auditor before a pre-existing violation is fixed, kept
+EMPTY on a clean main.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+
+def _fingerprint(config_id: str, finding: dict) -> str:
+    kind = finding.get("kind", "?")
+    detail = finding.get("key") or finding.get("primitive") \
+        or finding.get("label") or ""
+    return f"{config_id}|{kind}|{detail}"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr taint / PRNG hygiene / wire-invariant auditor")
+    ap.add_argument("--out", default="LINT_report.json",
+                    help="report path ('' to skip writing)")
+    ap.add_argument("--baseline", default=None,
+                    help="suppression baseline json (default: bundled)")
+    ap.add_argument("--filter", default="",
+                    help="only configs whose id contains this substring")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke subset of the matrix")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="fake host device count (>= mesh nodes)")
+    args = ap.parse_args(argv)
+
+    os.environ.setdefault(
+        "XLA_FLAGS",
+        f"--xla_force_host_platform_device_count={args.devices}")
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    import jax
+
+    from repro.analysis import wire_audit
+
+    base_path = pathlib.Path(args.baseline) if args.baseline else \
+        pathlib.Path(__file__).parent / "baseline.json"
+    suppressions = set()
+    if base_path.exists():
+        suppressions = set(json.loads(base_path.read_text())
+                           .get("suppressions", []))
+
+    configs = [ac for ac in wire_audit.MATRIX if args.filter in ac.id]
+    if args.quick:
+        configs = [ac for ac in configs if ac.id in wire_audit.QUICK_IDS]
+
+    rows, new_violations = [], []
+    for ac in configs:
+        try:
+            row = wire_audit.audit_config(ac)
+        except Exception as e:                          # audit must not crash
+            row = {"id": ac.id, "status": "error", "error": repr(e),
+                   "taint": [], "prng": [], "wire": []}
+            new_violations.append(f"{ac.id}|audit-error|{e!r}")
+        for finding in row["taint"] + row["prng"] + row["wire"]:
+            fp = _fingerprint(row["id"], finding)
+            if fp in suppressions:
+                finding["suppressed"] = True
+            else:
+                new_violations.append(fp)
+        rows.append(row)
+        n_bad = sum(1 for f in row["taint"] + row["prng"] + row["wire"]
+                    if not f.get("suppressed"))
+        print(f"AUDIT {row['id']:55s} {row['status']:5s}"
+              f" findings={n_bad}", flush=True)
+
+    report = {
+        "jax": jax.__version__,
+        "n_configs": len(rows),
+        "suppression_baseline": sorted(suppressions),
+        "new_violations": new_violations,
+        "configs": rows,
+        "summary": {
+            "pass": sum(r["status"] == "pass" for r in rows),
+            "fail": sum(r["status"] == "fail" for r in rows),
+            "error": sum(r["status"] == "error" for r in rows),
+        },
+    }
+    if args.out:
+        pathlib.Path(args.out).write_text(json.dumps(report, indent=2))
+        print(f"wrote {args.out}")
+    print(f"SUMMARY pass={report['summary']['pass']} "
+          f"fail={report['summary']['fail']} "
+          f"error={report['summary']['error']} "
+          f"new_violations={len(new_violations)}")
+    return 1 if new_violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

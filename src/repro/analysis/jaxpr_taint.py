@@ -1,0 +1,120 @@
+"""Interprocedural privacy-taint analysis over a train-step jaxpr.
+
+Threat model (paper §4 / Theorem 1): the adversary sees everything that
+crosses the wire, and the private object is the local sample. So taint
+SOURCES are the designated data inputs (batches); everything computed
+from them — loss, raw gradients — carries the taint; the one SANITIZER
+is the ``tagging.sanitize`` mark that ``sdm_dsgd.masked_grad`` applies
+after clip -> + sigma*normal (only when sigma > 0, i.e. when the config
+actually claims privacy); SINKS are the cross-node collectives
+(``ppermute``, ``psum``, ``all_gather``, ``all_to_all``). Any
+sanitizer-free source->sink path is a finding.
+
+Two more jaxpr-level invariants ride along:
+
+* every ``ppermute`` operand must be the direct output of a
+  ``tagging.wire_payload`` mark — i.e. the buffer went through the one
+  vetted transport layer in ``repro.core.gossip`` (finding kind
+  ``untagged-wire`` otherwise);
+* ``tagging.declared_release`` clears taint but is recorded, so the
+  report lists every deliberate data-derived release (the loss metric)
+  instead of silently blessing it.
+
+Abstract value: ``(labels, wire_tagged)`` where ``labels`` is a
+frozenset of source labels and ``wire_tagged`` marks the direct output
+of a wire tag (not propagated through any other op — adjacency is the
+property being checked).
+"""
+from __future__ import annotations
+
+from typing import Dict, FrozenSet, List, Tuple
+
+from repro.analysis import jaxpr_walk
+from repro.core import tagging
+
+__all__ = ["analyze_taint", "TaintFinding"]
+
+Val = Tuple[FrozenSet[str], bool]
+
+#: collectives whose operands leave the node
+SINKS = frozenset({"ppermute", "psum", "all_gather", "all_to_all",
+                   "pmax", "pmin", "reduce_scatter"})
+
+
+class TaintFinding(dict):
+    """dict with stable keys: kind, primitive, labels, site."""
+
+
+class _TaintInterp(jaxpr_walk.JaxprInterpreter):
+    def __init__(self):
+        self.findings: List[TaintFinding] = []
+        self.releases: List[Dict] = []
+        self.sanitized_sites: List[str] = []
+        self._seen = set()
+
+    # lattice -------------------------------------------------------------
+    def bottom(self) -> Val:
+        return (frozenset(), False)
+
+    def join(self, a: Val, b: Val) -> Val:
+        return (a[0] | b[0], a[1] and b[1])
+
+    # transfer ------------------------------------------------------------
+    def default_out(self, eqn, in_vals, ctx):
+        labels = frozenset().union(*(v[0] for v in in_vals)) \
+            if in_vals else frozenset()
+        return [(labels, False) for _ in eqn.outvars]
+
+    def _emit(self, **kw):
+        fp = tuple(sorted((k, str(v)) for k, v in kw.items()))
+        if fp not in self._seen:
+            self._seen.add(fp)
+            self.findings.append(TaintFinding(kw))
+
+    def on_eqn(self, eqn, in_vals, ctx, def_prim):
+        name = eqn.primitive.name
+        if name == tagging.SANITIZE:
+            self.sanitized_sites.append(jaxpr_walk.format_site(eqn))
+            return [(frozenset(), False)]
+        if name == tagging.RELEASE:
+            if in_vals[0][0]:
+                self.releases.append({
+                    "label": eqn.params.get("label", "?"),
+                    "labels": sorted(in_vals[0][0]),
+                    "site": jaxpr_walk.format_site(eqn)})
+            return [(frozenset(), False)]
+        if name == tagging.WIRE:
+            return [(in_vals[0][0], True)]
+        if name in SINKS:
+            site = jaxpr_walk.format_site(eqn)
+            for v in in_vals:
+                if v[0]:
+                    self._emit(kind="tainted-collective", primitive=name,
+                               labels=sorted(v[0]), site=site)
+            if name == "ppermute" and not all(v[1] for v in in_vals):
+                self._emit(kind="untagged-wire", primitive=name, site=site)
+            # received values carry the peers' (identically-labelled) taint
+            labels = frozenset().union(*(v[0] for v in in_vals)) \
+                if in_vals else frozenset()
+            return [(labels, False) for _ in eqn.outvars]
+        return None
+
+
+def analyze_taint(closed_jaxpr, source_labels: Dict[int, str]):
+    """Run the taint pass.
+
+    ``source_labels`` maps top-level invar positions to a label (e.g.
+    ``{1: "data", 2: "data"}``). Returns a dict with ``findings`` (list
+    of TaintFinding), ``releases`` (declared data releases seen) and
+    ``n_sanitize_sites``.
+    """
+    interp = _TaintInterp()
+    jaxpr, _ = jaxpr_walk._unpack(closed_jaxpr)
+    in_vals: List[Val] = []
+    for i, _var in enumerate(jaxpr.invars):
+        lbl = source_labels.get(i)
+        in_vals.append((frozenset([lbl]) if lbl else frozenset(), False))
+    interp.run(closed_jaxpr, in_vals)
+    return {"findings": interp.findings,
+            "releases": interp.releases,
+            "n_sanitize_sites": len(interp.sanitized_sites)}

@@ -1,0 +1,241 @@
+"""PRNG-hygiene lint over a train-step jaxpr.
+
+Tracks key provenance by VALUE NUMBERING: every typed key gets an
+interned identity built from its derivation chain —
+
+    root(const | invar)  --fold_in(data)-->  ('fold', parent, data)
+                         --split-->          ('split', parent) [i]
+
+where ``data`` is the literal value when static and a stable symbolic
+id of the operand variable otherwise. Two keys with the same identity
+hold the same bits, however independently the Python code rebuilt them
+(the seed-synced transport reconstructs peers' keys this way on
+purpose — with DIFFERENT node operands, which is what keeps them
+distinct here).
+
+Consumption events are ``random_bits`` draws (every ``jax.random``
+sampler bottoms out there on this toolchain) and ``random_split``.
+Findings:
+
+* ``key-reuse``       — one key identity consumed by two events that can
+  co-occur at runtime (draw+draw, draw+split, split+split). Mutually
+  exclusive ``lax.switch`` branches are NOT co-occurring.
+* ``scan-invariant-key`` — a draw inside a ``lax.scan`` body (length>1)
+  whose key does not depend on any loop-carried value: the same bits
+  every iteration, which silently voids the DP accounting (the PR-1
+  bug class, generalized).
+* ``padded-draw-shape``  — a (rows, lane) draw at a kernel-padded plane
+  shape instead of the canonical plane-spec shape: the threefry
+  trajectory would depend on a tiling parameter (the literal PR-1 bug).
+
+``fold_in`` is a non-consuming derivation (jax's fold_in never reveals
+the parent's bits), so deriving many children from one root is clean.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis import jaxpr_walk
+from repro.analysis.jaxpr_walk import branch_compatible
+
+__all__ = ["analyze_prng"]
+
+# abstract value: (key_id | None, loop_varying)
+Val = Tuple[Optional[int], bool]
+
+_DRAW_PRIMS = frozenset({"random_bits", "threefry2x32"})
+_LANES = (128, 1024)
+
+
+class _Interner:
+    def __init__(self):
+        self._tab: Dict[tuple, int] = {}
+        self._names: List[tuple] = []
+
+    def __call__(self, key: tuple) -> int:
+        if key not in self._tab:
+            self._tab[key] = len(self._names)
+            self._names.append(key)
+        return self._tab[key]
+
+    def name(self, i: int) -> str:
+        kind = self._names[i][0]
+        return f"{kind}#{i}"
+
+
+def _lit(v):
+    if jaxpr_walk._is_literal(v):
+        val = v.val
+        try:
+            return ("lit", val.item() if hasattr(val, "item") else val)
+        except Exception:
+            return ("lit", str(val))
+    return None
+
+
+class _PrngInterp(jaxpr_walk.JaxprInterpreter):
+    def __init__(self, allowed_shapes):
+        self.intern = _Interner()
+        self.events: List[dict] = []   # key_id, kind, shape, site, branch, in_loop, loopvar
+        self.findings: List[dict] = []
+        self.allowed_shapes = allowed_shapes
+        self._var_uid = itertools.count()
+        self._var_ids: Dict[int, int] = {}
+        # fixpoint re-evaluations replay the same eqn on the same call
+        # path: one runtime event, recorded once. Two distinct call
+        # sites of a shared subjaxpr differ in ctx.path and are kept.
+        self._event_keys = set()
+
+    # lattice -------------------------------------------------------------
+    def bottom(self) -> Val:
+        return (None, False)
+
+    def join(self, a: Val, b: Val) -> Val:
+        key = a[0] if a[0] == b[0] else None
+        return (key, a[1] or b[1])
+
+    def const(self, c, ctx) -> Val:
+        return (self.intern(("const", id(c))), False)
+
+    def loop_carry_seed(self, val: Val, ctx) -> Val:
+        return (val[0], True)
+
+    # helpers -------------------------------------------------------------
+    def _sym(self, var) -> tuple:
+        uid = self._var_ids.setdefault(id(var), next(self._var_uid))
+        return ("var", uid)
+
+    def _data_repr(self, var, val: Val) -> tuple:
+        lit = _lit(var)
+        if lit is not None:
+            return lit
+        if val[0] is not None:
+            return ("id", val[0])
+        return self._sym(var)
+
+    def _record(self, kind, key_val: Val, eqn, ctx, shape=None):
+        if key_val[0] is None:
+            return
+        dedup = (key_val[0], kind, id(eqn), ctx.branch, ctx.path)
+        if dedup in self._event_keys:
+            return
+        self._event_keys.add(dedup)
+        self.events.append({
+            "key_id": key_val[0], "kind": kind, "shape": shape,
+            "site": jaxpr_walk.format_site(eqn), "branch": ctx.branch,
+            "in_loop": ctx.in_loop(), "loopvar": key_val[1]})
+
+    # transfer ------------------------------------------------------------
+    def default_out(self, eqn, in_vals, ctx):
+        loopvar = any(v[1] for v in in_vals)
+        return [(None, loopvar) for _ in eqn.outvars]
+
+    def on_eqn(self, eqn, in_vals, ctx, def_prim):
+        name = eqn.primitive.name
+        if name in ("random_wrap", "random_unwrap"):
+            v = in_vals[0]
+            if v[0] is None:
+                v = (self.intern(("root",) + self._sym(eqn.invars[0])), v[1])
+            return [v]
+        if name == "random_fold_in":
+            parent, data = in_vals[0], in_vals[1]
+            if parent[0] is None:
+                parent = (self.intern(("root",) + self._sym(eqn.invars[0])),
+                          parent[1])
+            kid = self.intern(("fold", parent[0],
+                               self._data_repr(eqn.invars[1], data)))
+            return [(kid, parent[1] or data[1])]
+        if name == "random_split":
+            parent = in_vals[0]
+            self._record("split", parent, eqn, ctx)
+            if parent[0] is None:
+                return None
+            return [(self.intern(("split", parent[0])), parent[1])]
+        if name in _DRAW_PRIMS:
+            key = in_vals[0]
+            shape = None
+            try:
+                shape = tuple(eqn.outvars[0].aval.shape)
+            except Exception:
+                pass
+            self._record("draw", key, eqn, ctx, shape=shape)
+            self._check_shape(shape, eqn)
+            return None
+        if name in ("slice", "squeeze", "dynamic_slice"):
+            # key extraction from a split-array: ('split', p) -> child
+            src = in_vals[0]
+            if src[0] is not None:
+                base = self.intern._names[src[0]]
+                if base[0] == "split":
+                    if name == "squeeze":
+                        return [src]
+                    idx = eqn.params.get("start_indices")
+                    if idx is None:   # dynamic: symbolic index operand
+                        idx = self._data_repr(eqn.invars[1],
+                                              in_vals[1] if len(in_vals) > 1
+                                              else (None, False))
+                    kid = self.intern(("split_child", src[0], str(idx)))
+                    return [(kid, src[1])]
+            return None
+        return None
+
+    def _check_shape(self, shape, eqn):
+        if (shape and len(shape) == 2 and shape[1] in _LANES
+                and shape not in self.allowed_shapes):
+            canon = {s for s in self.allowed_shapes
+                     if len(s) == 2 and s[1] == shape[1]}
+            if any(shape[0] > s[0] for s in canon):
+                self.findings.append({
+                    "kind": "padded-draw-shape", "shape": list(shape),
+                    "allowed": sorted(map(list, canon)),
+                    "site": jaxpr_walk.format_site(eqn)})
+
+
+def _conflicts(a: dict, b: dict) -> bool:
+    return branch_compatible(a["branch"], b["branch"])
+
+
+def analyze_prng(closed_jaxpr, key_roots: Dict[int, str] | None = None,
+                 allowed_shapes=()):
+    """Run the PRNG pass.
+
+    ``key_roots`` maps top-level invar positions holding PRNG keys to a
+    name (unnamed keys are rooted lazily at first wrap/fold).
+    ``allowed_shapes`` is the set of canonical (rows, lane) plane shapes
+    random draws are allowed to use; 2-D draws at a LARGER row count on
+    a known lane are the padded-shape bug class.
+    """
+    interp = _PrngInterp(frozenset(tuple(s) for s in allowed_shapes))
+    jaxpr, _ = jaxpr_walk._unpack(closed_jaxpr)
+    in_vals: List[Val] = []
+    for i, var in enumerate(jaxpr.invars):
+        if key_roots and i in key_roots:
+            in_vals.append((interp.intern(("root", "arg", key_roots[i])),
+                            False))
+        else:
+            in_vals.append((None, False))
+    interp.run(closed_jaxpr, in_vals)
+
+    findings = list(interp.findings)
+    by_key: Dict[int, List[dict]] = {}
+    for ev in interp.events:
+        by_key.setdefault(ev["key_id"], []).append(ev)
+    for key_id, evs in by_key.items():
+        for i in range(len(evs)):
+            for j in range(i + 1, len(evs)):
+                a, b = evs[i], evs[j]
+                if _conflicts(a, b):
+                    findings.append({
+                        "kind": "key-reuse",
+                        "key": interp.intern.name(key_id),
+                        "events": [f"{a['kind']}@{a['site']}",
+                                   f"{b['kind']}@{b['site']}"]})
+    for ev in interp.events:
+        if ev["kind"] == "draw" and ev["in_loop"] and not ev["loopvar"]:
+            findings.append({
+                "kind": "scan-invariant-key",
+                "key": interp.intern.name(ev["key_id"]),
+                "site": ev["site"]})
+    return {"findings": findings, "n_draws": sum(
+        1 for e in interp.events if e["kind"] == "draw")}

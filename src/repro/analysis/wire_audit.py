@@ -1,0 +1,323 @@
+"""Registry-wide wire/privacy audit: compile every configuration, prove
+the invariants, execute nothing.
+
+For each ``AuditConfig`` in ``MATRIX`` (method x compressor x topology
+on a 4-node host mesh) the auditor builds the same tiny least-squares
+distributed train step the parity sweep uses, traces it to a jaxpr and
+compiles it to HLO, then checks:
+
+* **taint** (``jaxpr_taint``): privacy-claiming configs (sigma > 0 on a
+  method that applies ``masked_grad``) must have NO un-sanitized
+  data->collective path; known-non-private configs (``expect_taint``,
+  e.g. allreduce's raw-gradient pmean, or sigma=0) must be FLAGGED —
+  an empty report there means the analyzer lost its teeth, which is
+  itself a failure.
+* **prng** (``prng_lint``): no key reuse, no scan-invariant key, no
+  kernel-padded draw shapes — on every config.
+* **wire** (this module): ``collective_permute_count`` equals the
+  schedule-derived expectation (leaf-count independence, PR 5); on
+  static schedules the summed HLO permute payload bits equal the
+  static accounting (``transmitted_bits``) exactly for deterministic
+  wire formats; on time-varying schedules the payload-sized permutes
+  equal the union-graph round count (the branch-free replica
+  transport). The "every permute operand is Payload-derived" half is
+  enforced at the jaxpr level by the taint pass's ``untagged-wire``
+  rule (every operand must come through ``gossip._wire_ppermute``).
+
+Needs >= 4 visible devices: run via ``python -m repro.analysis`` (which
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=...`` before
+importing jax) or from a test subprocess that does the same.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.analysis import jaxpr_taint, prng_lint
+from repro.core import (baselines, gossip, gradient_push,
+                        method as method_mod, plane as plane_mod, sdm_dsgd,
+                        tagging, topology)
+from repro.kernels.sdm_update.sdm_update import LANE as KERNEL_LANE
+from repro.launch import hlo_analysis
+
+__all__ = ["AuditConfig", "MATRIX", "audit_config", "expected_permutes",
+           "allowed_draw_shapes"]
+
+N_NODES = 4
+DIM = 2 * plane_mod.LANE          # one (2, 128) wire plane
+STEPS = 3                         # scan length: exercises the loop rules
+BATCH = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditConfig:
+    method: str                   # registry name ("sdm-dsgd", ...)
+    topo: str                     # "ring4" | "dring4" | "matchings4x2"
+    mode: str                     # gossip mode / compressor spec, "-" = dense
+    sigma: float = 1.0
+    expect_taint: bool = False    # True: the config is KNOWN non-private
+
+    @property
+    def id(self) -> str:
+        tag = "dirty" if self.expect_taint else f"sigma{self.sigma:g}"
+        return f"{self.method}/{self.topo}/{self.mode}/{tag}"
+
+
+#: the audited registry sweep: every method, every compressor family,
+#: static + directed + genuinely time-varying schedules — plus two
+#: known-dirty negative controls proving the taint pass has teeth.
+MATRIX: Tuple[AuditConfig, ...] = (
+    AuditConfig("sdm-dsgd", "ring4", "bernoulli"),
+    AuditConfig("sdm-dsgd", "ring4", "fixedk_packed"),
+    AuditConfig("sdm-dsgd", "ring4", "fixedk_rows"),
+    AuditConfig("sdm-dsgd", "ring4", "qsgd:8"),
+    AuditConfig("sdm-dsgd", "ring4", "qsgd:4"),
+    AuditConfig("sdm-dsgd", "matchings4x2", "bernoulli"),
+    AuditConfig("sdm-dsgd", "matchings4x2", "fixedk_packed"),
+    AuditConfig("sdm-dsgd-fused", "ring4", "fixedk_packed"),
+    AuditConfig("sdm-dsgd-fused", "matchings4x2", "fixedk_packed"),
+    AuditConfig("dc-dsgd", "ring4", "bernoulli"),
+    AuditConfig("dsgd", "ring4", "-"),
+    AuditConfig("dsgd", "matchings4x2", "-"),
+    AuditConfig("gradient-push", "dring4", "-"),
+    AuditConfig("gradient-push", "dring4", "fixedk"),
+    AuditConfig("gradient-push", "dring4", "qsgd"),
+    AuditConfig("gradient-push", "matchings4x2", "fixedk"),
+    # negative controls: the analyzer MUST flag these
+    AuditConfig("allreduce", "ring4", "-", expect_taint=True),
+    AuditConfig("sdm-dsgd", "ring4", "fixedk_packed", sigma=0.0,
+                expect_taint=True),
+)
+
+#: the quick subset for smoke runs (--quick)
+QUICK_IDS = frozenset({
+    "sdm-dsgd/ring4/fixedk_packed/sigma1",
+    "sdm-dsgd/ring4/qsgd:4/sigma1",
+    "sdm-dsgd/matchings4x2/fixedk_packed/sigma1",
+    "dsgd/ring4/-/sigma1",
+    "gradient-push/dring4/fixedk/sigma1",
+    "allreduce/ring4/-/dirty",
+})
+
+
+def parse_topo(spec: str) -> gossip.ScheduleSequence:
+    if spec == "ring4":
+        return gossip.ensure_sequence(
+            gossip.schedule_from_topology(topology.ring(N_NODES)))
+    if spec == "dring4":
+        return gossip.ensure_sequence(gossip.schedule_from_topology(
+            topology.directed_ring(N_NODES)))
+    if spec == "matchings4x2":
+        return gossip.sequence_from_topologies(
+            topology.random_matchings(N_NODES, 2, seed=0), name=spec)
+    raise ValueError(f"unknown audit topology {spec!r}")
+
+
+def make_cfg(ac: AuditConfig, meth):
+    if meth.config_cls is sdm_dsgd.SDMConfig:
+        kw = dict(p=0.25, theta=0.15, gamma=0.2, sigma=ac.sigma, clip_c=1.0)
+        if ac.mode.startswith("qsgd:"):
+            return meth.coerce_config(
+                sdm_dsgd.SDMConfig(compressor=ac.mode, **kw))
+        return meth.coerce_config(sdm_dsgd.SDMConfig(mode=ac.mode, **kw))
+    if meth.config_cls is gradient_push.GradientPushConfig:
+        return gradient_push.GradientPushConfig(
+            gamma=0.2, sigma=ac.sigma, clip_c=1.0,
+            compressor=None if ac.mode == "-" else ac.mode, p=0.25)
+    return baselines.DSGDConfig(gamma=0.2, sigma=ac.sigma, clip_c=1.0)
+
+
+def expected_permutes(meth_name: str, mode: str, seq) -> int:
+    """Collective-permutes per compiled step on the plane transport.
+
+    R schedule rounds x wire leaves per payload (1 for dense/packed, 2
+    for compressor payloads: values + scale|indices), + R for the
+    push-sum mass scalar. Leaf-count-INDEPENDENT: this is the PR-5
+    tentpole, now the analyzer's canonical contract (the parity sweep
+    imports this).
+    """
+    r = seq.schedules[0].n_rounds
+    base_mode = mode.split(":")[0]
+    if mode == "-":
+        leaves = 0 if meth_name == "allreduce" else 1
+    elif base_mode in ("qsgd", "fixedk", "block"):
+        # exchange_payload pytrees: values + scale (qsgd) / indices
+        leaves = 2 if (meth_name == "gradient-push"
+                       or base_mode == "qsgd") else 1
+    else:
+        leaves = 1
+    extra = r if meth_name == "gradient-push" else 0
+    return r * leaves + extra
+
+
+def allowed_draw_shapes(per_node) -> frozenset:
+    """Canonical (rows, lane) shapes mask/noise draws may use: the wire
+    plane spec per bucket, plus the fused kernel's LANE-padded plane.
+    Anything 2-D on a known lane but taller is kernel-tile padding — the
+    PR-1 bug class."""
+    spec = plane_mod.ParamPlane.for_tree(per_node)
+    shapes = set(spec.plane_shapes())
+    total = spec.total_size
+    shapes.add((-(-total // KERNEL_LANE), KERNEL_LANE))
+    return frozenset(shapes)
+
+
+def _build(ac: AuditConfig):
+    """Trace + compile ``ac``'s distributed train step (never executed)."""
+    meth = method_mod.get(ac.method)
+    seq = parse_topo(ac.topo)
+    n = seq.n_nodes
+    cfg = make_cfg(ac, meth)
+
+    rng = np.random.default_rng(0)
+    a_stack = jnp.asarray(rng.normal(size=(n, BATCH, DIM)) / 4.0, jnp.float32)
+    b_stack = jnp.asarray(rng.normal(size=(n, BATCH)), jnp.float32)
+    params0 = jnp.asarray(rng.normal(size=(DIM,)) * 0.1, jnp.float32)
+    params_stack = {"w": jnp.broadcast_to(params0, (n, DIM))}
+    base_key = jax.random.PRNGKey(42)
+
+    mesh = compat.make_mesh((n,), ("data",))
+    ex = meth.make_distributed(seq, cfg, "data")
+
+    def dist_train(params_stack, a_st, b_st):
+        def inner(p, a, b):
+            p = jax.tree.map(lambda v: jnp.squeeze(v, 0), p)
+            a, b = jnp.squeeze(a, 0), jnp.squeeze(b, 0)
+            me = jax.lax.axis_index("data")
+            state = ex.init(p, me)
+
+            def grads_at(tree):
+                r = a @ tree["w"] - b
+                return {"w": a.T @ r / a.shape[0]}, jnp.mean(r * r)
+
+            def body(state, _):
+                state, aux = ex.step(state, grads_at, base_key=base_key)
+                return state, aux
+
+            state, losses = jax.lax.scan(body, state, None, length=STEPS)
+            # the metric release every real train step performs
+            loss = jax.lax.pmean(
+                tagging.declared_release(losses[-1], label="loss"), "data")
+            return jax.tree.map(lambda v: v[None], state.x), loss[None]
+
+        return compat.shard_map(inner, mesh=mesh,
+                                in_specs=(P("data"), P("data"), P("data")),
+                                out_specs=(P("data"), P("data")),
+                                axis_names={"data"},
+                                check_vma=False)(params_stack, a_st, b_st)
+
+    args = (params_stack, a_stack, b_stack)
+    jaxpr = jax.make_jaxpr(dist_train)(*args)
+    hlo = jax.jit(dist_train).lower(*args).compile().as_text()
+    per_node = jax.tree.map(lambda v: v[0], params_stack)
+    return meth, seq, cfg, jaxpr, hlo, per_node
+
+
+def _exact_bits(meth, meth_name: str, mode: str, cfg, per_node, seq
+                ) -> Optional[int]:
+    """Static accounting where it equals the HLO payload bits EXACTLY.
+
+    Deterministic wire formats only: fixed-k / rows / qsgd ship a known
+    payload every round. Bernoulli's accounting is the EXPECTED p*d
+    (paper convention) while the wire carries the dense masked plane, so
+    equality is structurally impossible there (checked by payload shape
+    instead). Mass-scalar bits for push-sum ride the same accounting.
+    """
+    base = mode.split(":")[0]
+    if meth_name.startswith("sdm-dsgd") or meth_name == "dc-dsgd":
+        if base in ("fixedk_packed", "fixedk_rows", "qsgd"):
+            return int(sdm_dsgd.transmitted_bits_per_step(
+                per_node, cfg, seq=seq))
+        return None
+    if meth_name == "dsgd":
+        return int(method_mod.transmitted_bits(meth, per_node, cfg, seq=seq))
+    return None
+
+
+def _wire_findings(ac: AuditConfig, meth, seq, cfg, hlo, per_node) -> List:
+    findings: List[dict] = []
+    payloads = hlo_analysis.permute_payloads(hlo)
+    cperm = hlo_analysis.collective_permute_count(hlo)
+    spec = plane_mod.ParamPlane.for_tree(per_node)
+    (p_rows, p_lane), = spec.plane_shapes()
+    plane_elems = p_rows * p_lane
+
+    if seq.length == 1:
+        exp = expected_permutes(ac.method, ac.mode, seq)
+        if cperm != exp:
+            findings.append({"kind": "permute-count", "got": cperm,
+                             "expected": exp})
+        exact = _exact_bits(meth, ac.method, ac.mode, cfg, per_node, seq)
+        if exact is not None:
+            hlo_bits = sum(pl["bits"] for pl in payloads)
+            if hlo_bits != exact:
+                findings.append({"kind": "payload-bits", "got": hlo_bits,
+                                 "expected": exact})
+        if ac.mode == "bernoulli":
+            # dense masked plane: every payload permute ships the full
+            # plane, one per round
+            dense = [pl for pl in payloads
+                     if pl["elems"].get("f32", 0) == plane_elems]
+            r = seq.schedules[0].n_rounds
+            if len(dense) != r:
+                findings.append({"kind": "dense-payload-rounds",
+                                 "got": len(dense), "expected": r})
+    else:
+        # replica transport: branch-free payload over every union round
+        useq = gossip.union_schedule(seq)
+        base = ac.mode.split(":")[0]
+        if base == "qsgd":
+            pperms = sum(1 for pl in payloads
+                         if pl["bits"] >= plane_elems * 8)
+        elif ac.mode == "bernoulli":
+            pperms = sum(1 for pl in payloads
+                         if pl["elems"].get("f32", 0) == plane_elems)
+        elif ac.mode == "-":
+            pperms = sum(1 for pl in payloads
+                         if pl["elems"].get("f32", 0) == plane_elems)
+        else:
+            from repro.core import sparsifier
+            k = sparsifier.num_kept(plane_elems, 0.25)
+            pperms = sum(1 for pl in payloads
+                         if pl["elems"].get("f32", 0) == k)
+        if pperms != useq.n_replicas:
+            findings.append({"kind": "union-payload-rounds", "got": pperms,
+                             "expected": useq.n_replicas})
+    return findings
+
+
+def audit_config(ac: AuditConfig) -> dict:
+    """Run all three passes on one configuration; returns the report row."""
+    meth, seq, cfg, jaxpr, hlo, per_node = _build(ac)
+
+    taint = jaxpr_taint.analyze_taint(jaxpr, {1: "data", 2: "data"})
+    prng = prng_lint.analyze_prng(
+        jaxpr, allowed_shapes=allowed_draw_shapes(per_node))
+    wire = _wire_findings(ac, meth, seq, cfg, hlo, per_node)
+
+    taint_findings = list(taint["findings"])
+    if ac.expect_taint:
+        if taint_findings:
+            taint_findings = []     # expected dirt, analyzer has teeth
+        else:
+            taint_findings = [{"kind": "expected-taint-missing",
+                               "detail": "known-non-private config produced "
+                                         "no taint finding"}]
+    violations = taint_findings + prng["findings"] + wire
+    return {
+        "id": ac.id,
+        "expect_taint": ac.expect_taint,
+        "taint": taint_findings,
+        "prng": prng["findings"],
+        "wire": wire,
+        "releases": taint["releases"],
+        "n_draws": prng["n_draws"],
+        "n_sanitize_sites": taint["n_sanitize_sites"],
+        "status": "fail" if violations else "pass",
+    }

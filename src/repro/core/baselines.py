@@ -32,7 +32,6 @@ import jax.numpy as jnp
 from repro.core import gossip
 from repro.core import plane as plane_mod
 from repro.core.sdm_dsgd import SDMConfig, masked_grad
-from repro.core.topology import Topology
 
 __all__ = ["DSGDConfig", "DSGDState", "DSGDReference",
            "dcdsgd_config", "dsgd_distributed_step"]

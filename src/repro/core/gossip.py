@@ -58,7 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import sparsifier
+from repro.core import sparsifier, tagging
 
 __all__ = [
     "mix_dense",
@@ -461,7 +461,7 @@ def union_exchange(useq: UnionSchedule, x: jax.Array, axis_name) -> jax.Array:
     weight is zero at every sequence position, so the unused replica is
     never read).
     """
-    return jnp.stack([jax.lax.ppermute(x, axis_name, rnd.perm)
+    return jnp.stack([_wire_ppermute(x, axis_name, rnd.perm)
                       for rnd in useq.rounds])
 
 
@@ -477,7 +477,7 @@ def union_exchange_payload(useq: UnionSchedule, payload, decompress,
     outs = []
     for rnd in useq.rounds:
         recv = jax.tree.map(
-            lambda v: jax.lax.ppermute(v, axis_name, rnd.perm), payload)
+            lambda v: _wire_ppermute(v, axis_name, rnd.perm), payload)
         outs.append(decompress(recv))
     return jnp.stack(outs)
 
@@ -503,7 +503,7 @@ def _union_packed_exchange(useq: UnionSchedule, db: jax.Array, unpack, *,
     sender_idx = _batched_sender_indices(
         useq, me, base_key=base_key, step=step, nb=nb_blocks, kb=kb)
     incr = jnp.stack([
-        unpack(jax.lax.ppermute(my_vals, axis_name, rnd.perm),
+        unpack(_wire_ppermute(my_vals, axis_name, rnd.perm),
                sender_idx[i])
         for i, rnd in enumerate(useq.rounds)])
     return own_sparse, incr
@@ -588,6 +588,17 @@ def _me(axis_name, node_index):
     return jax.lax.axis_index(axis_name)
 
 
+def _wire_ppermute(x: jax.Array, axis_name, perm) -> jax.Array:
+    """The ONE ppermute call site of the transport layer.
+
+    Every buffer this module puts on the wire goes through here, tagged
+    ``tagging.wire_payload`` so ``repro.analysis`` can prove (a) no
+    collective-permute bypasses the vetted transport and (b) the operand
+    carries no unsanitized data-taint. Identity at runtime.
+    """
+    return jax.lax.ppermute(tagging.wire_payload(x), axis_name, perm)
+
+
 def _round_weight(rnd: ScheduleRound, me, dtype) -> jax.Array:
     return jnp.asarray(rnd.recv_weights, jnp.float32)[me].astype(dtype)
 
@@ -611,7 +622,7 @@ def exchange(schedule, x: jax.Array, axis_name,
     def one(sched: PermuteSchedule, v: jax.Array) -> jax.Array:
         total = jnp.zeros_like(v)
         for rnd in sched.rounds:
-            recv = jax.lax.ppermute(v, axis_name, rnd.perm)
+            recv = _wire_ppermute(v, axis_name, rnd.perm)
             total = total + _round_weight(rnd, me, v.dtype) * recv
         return total
 
@@ -650,7 +661,7 @@ def exchange_payload(schedule, payload, decompress, axis_name, *,
         total = jnp.zeros_like(template)
         for rnd in sched.rounds:
             recv = jax.tree.map(
-                lambda v: jax.lax.ppermute(v, axis_name, rnd.perm), pl)
+                lambda v: _wire_ppermute(v, axis_name, rnd.perm), pl)
             w = _round_weight(rnd, me, total.dtype)
             total = total + w * decompress(recv)
         return total
@@ -743,7 +754,7 @@ def _packed_exchange(seq: ScheduleSequence, db: jax.Array, unpack, *,
             sched, me, base_key=base_key, step=step, nb=nb_blocks, kb=kb)
         for i, rnd in enumerate(sched.rounds):
             # Wire traffic: only the packed (kb, block) values move.
-            vals = jax.lax.ppermute(vals_out, axis_name, rnd.perm)
+            vals = _wire_ppermute(vals_out, axis_name, rnd.perm)
             w = _round_weight(rnd, me, own_sparse.dtype)
             nb_sum = nb_sum + w * unpack(vals, sender_idx[i])
         return nb_sum
@@ -812,8 +823,8 @@ def ring_exchange(x, axis_name) -> Tuple[jax.Array, jax.Array]:
     ``from_left[i] = x[i-1]`` and ``from_right[i] = x[i+1]``.
     """
     n = jax.lax.psum(1, axis_name)
-    from_left = jax.lax.ppermute(x, axis_name, _perm(n, +1))
-    from_right = jax.lax.ppermute(x, axis_name, _perm(n, -1))
+    from_left = _wire_ppermute(x, axis_name, _perm(n, +1))
+    from_right = _wire_ppermute(x, axis_name, _perm(n, -1))
     return from_left, from_right
 
 
@@ -866,8 +877,8 @@ def ring_exchange_packed(d_flat: jax.Array, *, axis_name, base_key: jax.Array,
     my_vals = jnp.take(db, my_idx, axis=0) * scale   # (kb, block)
 
     # Wire traffic: only the packed (kb, block) values move.
-    vals_from_left = jax.lax.ppermute(my_vals, axis_name, _perm(n, +1))
-    vals_from_right = jax.lax.ppermute(my_vals, axis_name, _perm(n, -1))
+    vals_from_left = _wire_ppermute(my_vals, axis_name, _perm(n, +1))
+    vals_from_right = _wire_ppermute(my_vals, axis_name, _perm(n, -1))
 
     # Receivers regenerate sender index sets (no index traffic).
     left_idx = sparsifier.fixedk_indices(
@@ -914,8 +925,8 @@ def ring_exchange_packed_rows(d: jax.Array, *, axis_name, base_key: jax.Array,
         node_round_key(base_key, me, step), rows, kb)
     my_vals = jnp.take(db, my_idx, axis=0) * scale      # (kb, cols)
 
-    vals_from_left = jax.lax.ppermute(my_vals, axis_name, _perm(n, +1))
-    vals_from_right = jax.lax.ppermute(my_vals, axis_name, _perm(n, -1))
+    vals_from_left = _wire_ppermute(my_vals, axis_name, _perm(n, +1))
+    vals_from_right = _wire_ppermute(my_vals, axis_name, _perm(n, -1))
 
     left_idx = sparsifier.fixedk_indices(
         node_round_key(base_key, (me - 1) % n, step), rows, kb)

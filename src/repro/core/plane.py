@@ -251,7 +251,7 @@ class ParamPlane:
                 if cols < 1 or size % cols:
                     raise ValueError(
                         f"bucket {key!r}: leaf {i} shape {shape} has no "
-                        f"whole trailing-dim rows")
+                        "whole trailing-dim rows")
                 gkey = ("k", key, cols)
             else:
                 gkey = ("flat",)

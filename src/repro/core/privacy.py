@@ -81,10 +81,17 @@ class PrivacyParams:
             raise ValueError("p must be in (0, 1]")
         if not (0.0 < self.tau <= 1.0):
             raise ValueError("tau must be in (0, 1]")
-        if self.sigma < 0:
-            raise ValueError("sigma must be >= 0")
+        if not self.sigma > 0.0:
+            raise ValueError(
+                f"sigma must be > 0, got {self.sigma!r}: the accountant's "
+                "per-step RDP is (tau*G/(m*sigma))^2 — sigma=0 claims no "
+                "privacy and every downstream epsilon would be inf/NaN")
         if not (0.0 < self.delta < 1.0):
             raise ValueError("delta must be in (0, 1)")
+        if not self.G > 0.0:
+            raise ValueError(f"G (sensitivity bound) must be > 0, got {self.G!r}")
+        if self.m < 1:
+            raise ValueError(f"m (local dataset size) must be >= 1, got {self.m!r}")
 
     @classmethod
     def from_compressor(cls, comp, *, G: float, m: int, tau: float,
@@ -114,8 +121,18 @@ class PrivacyParams:
         return min(self.p) if isinstance(self.p, tuple) else self.p
 
 
+def _check_eps_target(eps: float) -> None:
+    if not eps > 0.0:
+        raise ValueError(
+            f"eps_target must be > 0, got {eps!r}: Theorem 1's Rényi order "
+            "alpha = 2*log(1/delta)/eps + 1 diverges at eps=0")
+
+
 def rdp_alpha(eps: float, delta: float) -> float:
     """Theorem 1's Rényi order: alpha = 2 log(1/delta)/eps + 1."""
+    _check_eps_target(eps)
+    if not (0.0 < delta < 1.0):
+        raise ValueError("delta must be in (0, 1)")
     return 2.0 * math.log(1.0 / delta) / eps + 1.0
 
 
@@ -126,8 +143,6 @@ def per_step_rdp(params: PrivacyParams, alpha: float) -> float:
     worst-case (max) node budget when p is per-node.
     Requires sigma^2 >= 1/1.25 for the subsampling amplification.
     """
-    if params.sigma == 0.0:
-        return math.inf
     return 4.0 * alpha * params.p_worst * (
         params.tau * params.G / (params.m * params.sigma)) ** 2
 
@@ -176,6 +191,13 @@ def sigma_for_budget(G: float, m: int, p: float, T: int, eps: float,
     Corollary 2 asks, so the run is at least (eps, delta)-DP and the
     amplification lemma stays valid.
     """
+    _check_eps_target(eps)
+    if not (0.0 < p <= 1.0):
+        raise ValueError(f"p must be in (0, 1], got {p!r}")
+    if not G > 0.0:
+        raise ValueError(f"G must be > 0, got {G!r}")
+    if T < 1:
+        raise ValueError(f"T must be >= 1, got {T!r}")
     sigma_sq = 8.0 * p * T * G ** 2 * (2.0 * math.log(1.0 / delta) + eps) / (
         m ** 4 * eps ** 2)
     if sigma_sq < SIGMA_SQ_MIN:
@@ -183,7 +205,7 @@ def sigma_for_budget(G: float, m: int, p: float, T: int, eps: float,
             return math.sqrt(SIGMA_SQ_MIN)
         raise ValueError(
             f"Corollary 2 precondition violated: sigma^2={sigma_sq:.4g} < 1/1.25. "
-            f"Increase T or decrease eps (need eps <~ 10*p*T*G^2/m^4 = "
+            "Increase T or decrease eps (need eps <~ 10*p*T*G^2/m^4 = "
             f"{10.0 * p * T * G**2 / m**4:.4g}).")
     return math.sqrt(sigma_sq)
 
@@ -195,6 +217,9 @@ def max_iterations(G: float, m: int, p: float, eps: float,
     The maximum iteration count under a fixed (eps, delta) budget. The
     state of the art prior to this paper scaled as O(m^2) (Remark 5).
     """
+    _check_eps_target(eps)
+    if not (0.0 < p <= 1.0):
+        raise ValueError(f"p must be in (0, 1], got {p!r}")
     return max(1, int(m ** 4 * eps ** 2 / (20.0 * G ** 2 * math.log(1.0 / delta) * p)))
 
 

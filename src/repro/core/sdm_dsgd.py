@@ -60,7 +60,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import clipping, compressor as compressor_mod, gossip
-from repro.core import plane as plane_mod
+from repro.core import plane as plane_mod, tagging
 from repro.core.topology import Topology
 
 __all__ = ["SDMConfig", "SDMState", "ReferenceSimulator", "masked_grad",
@@ -287,6 +287,9 @@ def masked_grad(grads: PyTree, key: jax.Array, *, sigma: float,
     if sigma > 0.0:
         noise = _noise_like(key, grads, sigma)
         grads = jax.tree.map(jnp.add, grads, noise)
+        # the analyzer-visible sanitizer mark: ONLY the clipped+noised
+        # gradient counts as DP-sanitized (sigma == 0 stays tainted).
+        grads = tagging.sanitize(grads)
     return grads
 
 

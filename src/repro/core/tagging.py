@@ -1,0 +1,75 @@
+"""Identity tag primitives the static analyzer keys on.
+
+The privacy argument (paper Theorem 1) is about the EMITTED computation:
+what crosses a collective must be a clipped, Gaussian-masked, sparsified
+differential. ``repro.analysis`` proves that over the jaxpr — but a
+jaxpr has no notion of "this add was the DP mask"; these three
+primitives give it one. Each is a semantic no-op (identity impl,
+identity lowering, vectorized batching, linear AD) that survives
+tracing into the jaxpr where the analyzer can see it:
+
+* ``sanitize(tree)``    — applied by ``sdm_dsgd.masked_grad`` after the
+  clip -> + sigma*normal mask (only when sigma > 0: an un-noised
+  gradient is NOT sanitized). Clears data-taint in the analyzer.
+* ``wire_payload(x)``   — applied by ``gossip`` to every ppermute
+  operand: the single blessed transport layer. A ppermute whose operand
+  is not tag-adjacent bypassed the vetted wire path — a finding.
+* ``declared_release(x)`` — an explicitly acknowledged release of a
+  data-derived aggregate (the training-loss pmean). Clears taint but is
+  counted separately so the audit report lists every declared release.
+
+XLA sees nothing: the lowering returns the operand unchanged, so tagged
+and untagged programs compile to identical HLO.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+try:  # jax >= 0.4.16 keeps Primitive importable from jax.extend
+    from jax.extend.core import Primitive
+except ImportError:  # pragma: no cover - older jax
+    from jax.core import Primitive  # type: ignore[attr-defined,no-redef]
+
+from jax.interpreters import ad, batching, mlir
+
+PyTree = Any
+
+SANITIZE = "privacy_sanitize"
+WIRE = "wire_payload"
+RELEASE = "declared_release"
+
+#: jaxpr-level names of every tag primitive (the analyzer's contract).
+TAG_PRIMITIVES = frozenset({SANITIZE, WIRE, RELEASE})
+
+
+def _identity_primitive(name: str) -> Primitive:
+    prim = Primitive(name)
+    prim.def_impl(lambda x, **params: x)
+    prim.def_abstract_eval(lambda x, **params: x)
+    mlir.register_lowering(prim, lambda ctx, x, **params: [x])
+    batching.defvectorized(prim)
+    ad.deflinear2(prim, lambda ct, x, **params: [ct])
+    return prim
+
+
+sanitize_p = _identity_primitive(SANITIZE)
+wire_payload_p = _identity_primitive(WIRE)
+declared_release_p = _identity_primitive(RELEASE)
+
+
+def sanitize(tree: PyTree, *, label: str = "gaussian_mask") -> PyTree:
+    """Mark every leaf of ``tree`` as DP-sanitized (identity at runtime)."""
+    return jax.tree.map(lambda v: sanitize_p.bind(v, label=label), tree)
+
+
+def wire_payload(x: jax.Array, *, label: str = "gossip") -> jax.Array:
+    """Mark ``x`` as a vetted wire buffer (identity at runtime)."""
+    return wire_payload_p.bind(x, label=label)
+
+
+def declared_release(tree: PyTree, *, label: str = "metric") -> PyTree:
+    """Mark ``tree`` as a deliberate data-derived release (identity)."""
+    return jax.tree.map(lambda v: declared_release_p.bind(v, label=label),
+                        tree)

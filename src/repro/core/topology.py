@@ -223,7 +223,7 @@ def random_matchings(n: int, rounds: int, seed: int = 0,
             return out
     raise RuntimeError(
         f"no connected union of {rounds} matchings on {n} nodes "
-        f"within 1000 reseeds")
+        "within 1000 reseeds")
 
 
 def laplacian_consensus_matrix(adjacency: np.ndarray) -> np.ndarray:

@@ -17,8 +17,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterator, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["TokenStream", "classification_dataset",
@@ -55,7 +53,9 @@ class TokenStream:
         b, s, v = self.batch, self.seq_len, self.vocab_size
         toks = np.empty((b, s + 1), np.int64)
         toks[:, 0] = rng.choice(v, size=b, p=self._unigram)
-        gumbel_keys = rng.random((b, s)).astype(np.float32)
+        # historical warm-up draw: keeps the rng stream (and every
+        # pinned batch downstream) identical across revisions
+        _ = rng.random((b, s)).astype(np.float32)
         for t in range(s):
             logits = self._emb[toks[:, t]] @ self._out  # (b, v)
             logits = logits / 2.0 + np.log(self._unigram)[None, :]
@@ -63,7 +63,6 @@ class TokenStream:
             g = -np.log(-np.log(
                 rng.random((b, v)).astype(np.float32) + 1e-9) + 1e-9)
             toks[:, t + 1] = np.argmax(logits + g, axis=-1)
-        del gumbel_keys
         return toks[:, :-1].astype(np.int32), toks[:, 1:].astype(np.int32)
 
 

@@ -14,7 +14,6 @@ accounting (including packed sub-byte qsgd u8 lanes).
 """
 from __future__ import annotations
 
-import math
 import re
 from collections import defaultdict
 from typing import Dict, List

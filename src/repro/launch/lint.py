@@ -1,0 +1,13 @@
+"""Launcher wiring for the static auditor: ``python -m repro.launch.lint``
+is ``python -m repro.analysis`` (same flags, same LINT_report.json) —
+kept next to ``dryrun``/``bench`` so the launch surface lists every CI
+entry point in one place.
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.analysis.__main__ import main
+
+if __name__ == "__main__":
+    sys.exit(main())

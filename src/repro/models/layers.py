@@ -6,7 +6,6 @@ declared through a ``ParamSpec`` carrying its logical sharding axes, so
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 

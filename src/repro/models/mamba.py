@@ -11,7 +11,7 @@ dt_rank = d_model/16.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -121,7 +121,6 @@ def mamba_decode_step(params: Dict[str, jax.Array], cfg: ModelConfig,
                       ) -> Tuple[jax.Array, MambaState]:
     """One-token step. x: (b, 1, d); O(1) in sequence length."""
     b, _, d = x.shape
-    dc = cfg.mamba_d_conv
     residual = x
     h = rms_norm(x, params["norm"], cfg.norm_eps)
     xz = jnp.einsum("bsd,de->bse", h, params["w_in"])

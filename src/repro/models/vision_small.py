@@ -121,7 +121,6 @@ def resnet20_apply(params: PyTree, x_flat: jax.Array) -> jax.Array:
     x = x_flat.reshape(-1, 32, 32, 3)
     x = jax.nn.relu(_gn(_conv(x, params["stem"], 0.0), params["stem_g"],
                         params["stem_b"]))
-    cin = 16
     for stage, cout in enumerate((16, 32, 64)):
         for block in range(3):
             pre = f"s{stage}b{block}"
@@ -138,7 +137,6 @@ def resnet20_apply(params: PyTree, x_flat: jax.Array) -> jax.Array:
                     x, params[f"{pre}_proj"], (stride, stride), "SAME",
                     dimension_numbers=("NHWC", "HWIO", "NHWC"))
             x = jax.nn.relu(h + sc)
-            cin = cout
     x = x.mean(axis=(1, 2))
     return x @ params["fc"] + params["fc_b"]
 

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Any, Mapping, Optional, Sequence, Tuple
+from typing import Any, Mapping, Optional, Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

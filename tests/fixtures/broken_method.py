@@ -1,0 +1,39 @@
+"""Deliberately-broken distributed step: the analyzer's negative fixture.
+
+Reproduces the PR-1 bug class on purpose, twice over:
+
+* **key reuse** — the per-(node, round) key is consumed by TWO draws
+  (noise and sparsifier mask), so mask bits and privacy noise are
+  correlated; ``prng_lint`` must report exactly one ``key-reuse``.
+* **un-noised wire** — the sparsified differential goes on the wire
+  WITHOUT the Gaussian mask (no ``masked_grad``/``sanitize`` between
+  the raw gradient and the ppermute), so ``jaxpr_taint`` must report
+  exactly one ``tainted-collective``.
+
+The transport itself is the vetted ``gossip.exchange`` (wire-tagged),
+so no ``untagged-wire`` finding rides along: the test pins the finding
+set to exactly these two kinds. Never executed — only traced.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import gossip
+
+
+def broken_step(x, a, b, *, axis_name, schedule, base_key, step,
+                gamma=0.2, sigma=1.0, p=0.25):
+    """One un-private gossip step over a least-squares gradient."""
+    r = a @ x - b
+    g = a.T @ r / a.shape[0]                       # raw gradient (tainted)
+
+    me = jax.lax.axis_index(axis_name)
+    key = gossip.node_round_key(base_key, me, step)
+    noise = sigma * jax.random.normal(key, g.shape)        # draw 1
+    mask = jax.random.bernoulli(key, p, g.shape)           # draw 2: BUG —
+    # same key consumed twice; mask bits and noise are correlated.
+
+    d = jnp.where(mask, g, 0.0)
+    # BUG: the differential ships without the noise — the sanitizer
+    # (masked_grad's clip -> + sigma*normal) never ran on the wire path.
+    nbr = gossip.exchange(schedule, d, axis_name, step=step)
+    return x - gamma * (g + 1e-6 * noise) + 0.0 * nbr

@@ -220,25 +220,9 @@ def plane_payload_expectations(spec_plane, mode: str, cfg):
     return sparsifier.num_kept(nb, p_worst) * block
 
 
-def expected_permutes(meth_name: str, mode: str, seq) -> int:
-    """Collective-permutes per compiled step on the plane transport.
-
-    R schedule rounds x wire leaves per payload (1 for dense/packed, 2
-    for compressor payloads: values + scale|indices), + R for the
-    push-sum mass scalar. Leaf-count-INDEPENDENT: this is the tentpole.
-    """
-    r = seq.schedules[0].n_rounds
-    base_mode = mode.split(":")[0]
-    if mode == "-":
-        leaves = 0 if meth_name == "allreduce" else 1
-    elif base_mode in ("qsgd", "fixedk", "block"):
-        # exchange_payload pytrees: values + scale (qsgd) / indices
-        leaves = 2 if (meth_name == "gradient-push"
-                       or base_mode == "qsgd") else 1
-    else:
-        leaves = 1
-    extra = r if meth_name == "gradient-push" else 0
-    return r * leaves + extra
+# The permute-count contract lives with the static auditor now; the
+# parity sweep asserts the SAME expectation the lint matrix enforces.
+from repro.analysis.wire_audit import expected_permutes  # noqa: E402
 
 
 def run_case(meth_key: str, topo_spec: str, mode: str,
@@ -276,7 +260,7 @@ def run_case(meth_key: str, topo_spec: str, mode: str,
         b_stack = jnp.zeros((n, 1), jnp.float32)
         p0 = jax.tree.map(lambda t: 0.1 * t[0] + 0.05, a_stack)
         params_stack = jax.tree.map(
-            lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), p0)
+            lambda v: jnp.broadcast_to(v[None], (n,) + v.shape), p0)
 
         def grads_of(tree, targets, b):
             del b

@@ -1,0 +1,228 @@
+"""The static auditor audits itself.
+
+Three layers:
+
+* **in-process unit tests** of the two jaxpr analyzers on tiny traced
+  functions (no collectives, so the 1-device pytest process suffices):
+  key-reuse / clean-split discrimination, fold_in non-consumption,
+  scan-invariant-key detection, and the padded-draw-shape rule.
+* **the broken fixture** (tests/fixtures/broken_method.py), traced on a
+  4-node fake mesh in a subprocess: the analyzer must report EXACTLY
+  the two seeded findings — one ``tainted-collective`` (un-noised wire)
+  and one ``key-reuse`` (noise key consumed twice) — and nothing else.
+  This regression-proofs the PR-1 bug class end to end.
+* **the CLI quick matrix** (``python -m repro.analysis --quick``): zero
+  findings, zero new violations, exit 0 on clean main — the same gate
+  CI runs over the full matrix.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+HELPER = pathlib.Path(__file__).parent / "helpers" / "analysis_check.py"
+REPO = pathlib.Path(__file__).parent.parent
+SRC = str(REPO / "src")
+ENV = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root",
+       "JAX_PLATFORMS": "cpu"}
+
+
+# ---------------------------------------------------------------- unit layer
+
+def _trace(fn, *args):
+    import jax
+
+    return jax.make_jaxpr(fn)(*args)
+
+
+def _prng(fn, *args, **kw):
+    from repro.analysis import prng_lint
+
+    return prng_lint.analyze_prng(_trace(fn, *args), **kw)
+
+
+def test_prng_clean_split_has_no_findings():
+    import jax
+
+    def good(key):
+        k1, k2 = jax.random.split(key)
+        return jax.random.normal(k1, (4,)) + jax.random.normal(k2, (4,))
+
+    rep = _prng(good, jax.random.PRNGKey(0))
+    assert rep["findings"] == []
+    assert rep["n_draws"] == 2
+
+
+def test_prng_flags_double_draw():
+    import jax
+
+    def bad(key):
+        return jax.random.normal(key, (4,)) + jax.random.uniform(key, (4,))
+
+    rep = _prng(bad, jax.random.PRNGKey(0))
+    kinds = [f["kind"] for f in rep["findings"]]
+    assert kinds == ["key-reuse"]
+
+
+def test_prng_flags_draw_then_split():
+    import jax
+
+    def bad(key):
+        x = jax.random.normal(key, (4,))
+        k1, _ = jax.random.split(key)
+        return x + jax.random.normal(k1, (4,))
+
+    rep = _prng(bad, jax.random.PRNGKey(0))
+    kinds = [f["kind"] for f in rep["findings"]]
+    assert kinds == ["key-reuse"]
+
+
+def test_prng_fold_in_children_are_distinct():
+    import jax
+
+    def good(key):
+        a = jax.random.normal(jax.random.fold_in(key, 0), (4,))
+        b = jax.random.normal(jax.random.fold_in(key, 1), (4,))
+        return a + b
+
+    assert _prng(good, jax.random.PRNGKey(0))["findings"] == []
+
+
+def test_prng_reconstructed_fold_is_reuse():
+    import jax
+
+    def bad(key):
+        # two independent reconstructions of the SAME derived key
+        a = jax.random.normal(jax.random.fold_in(key, 3), (4,))
+        b = jax.random.normal(jax.random.fold_in(key, 3), (4,))
+        return a + b
+
+    kinds = [f["kind"] for f in _prng(bad, jax.random.PRNGKey(0))["findings"]]
+    assert kinds == ["key-reuse"]
+
+
+def test_prng_scan_invariant_key_flagged():
+    import jax
+
+    def bad(key):
+        def body(c, _):
+            return c + jax.random.normal(key, ()), None
+
+        out, _ = jax.lax.scan(body, 0.0, None, length=3)
+        return out
+
+    kinds = [f["kind"] for f in _prng(bad, jax.random.PRNGKey(0))["findings"]]
+    assert "scan-invariant-key" in kinds
+
+
+def test_prng_loop_folded_key_is_clean():
+    import jax
+
+    def good(key):
+        def body(c, i):
+            return c + jax.random.normal(jax.random.fold_in(key, i), ()), None
+
+        import jax.numpy as jnp
+
+        out, _ = jax.lax.scan(body, 0.0, jnp.arange(3))
+        return out
+
+    assert _prng(good, jax.random.PRNGKey(0))["findings"] == []
+
+
+def test_prng_padded_draw_shape():
+    import jax
+
+    def bad(key):
+        return jax.random.normal(key, (4, 128))
+
+    rep = _prng(bad, jax.random.PRNGKey(0), allowed_shapes=[(2, 128)])
+    kinds = [f["kind"] for f in rep["findings"]]
+    assert "padded-draw-shape" in kinds
+    # the canonical shape itself is fine
+    def good(key):
+        return jax.random.normal(key, (2, 128))
+
+    assert _prng(good, jax.random.PRNGKey(0),
+                 allowed_shapes=[(2, 128)])["findings"] == []
+
+
+def test_taint_sanitize_clears_and_release_is_recorded():
+    import jax
+
+    from repro.analysis import jaxpr_taint
+    from repro.core import tagging
+
+    def step(x, data):
+        g = data * x
+        g = tagging.sanitize(g)
+        loss = tagging.declared_release((data ** 2).sum(), label="loss")
+        return g.sum() + loss
+
+    import jax.numpy as jnp
+
+    jaxpr = jax.make_jaxpr(step)(jnp.ones(4), jnp.ones(4))
+    rep = jaxpr_taint.analyze_taint(jaxpr, {1: "data"})
+    assert rep["findings"] == []
+    assert rep["n_sanitize_sites"] == 1
+    assert [r["label"] for r in rep["releases"]] == ["loss"]
+
+
+def test_expected_permutes_contract():
+    from repro.analysis import wire_audit
+    from repro.core import gossip, topology
+
+    ring = gossip.ensure_sequence(
+        gossip.schedule_from_topology(topology.ring(4)))
+    r = ring.schedules[0].n_rounds
+    assert wire_audit.expected_permutes("sdm-dsgd", "bernoulli", ring) == r
+    assert wire_audit.expected_permutes("sdm-dsgd", "qsgd:4", ring) == 2 * r
+    assert wire_audit.expected_permutes("allreduce", "-", ring) == 0
+    assert wire_audit.expected_permutes("gradient-push", "fixedk", ring) \
+        == 3 * r
+
+
+# ------------------------------------------------------------- fixture layer
+
+@pytest.mark.slow
+def test_broken_fixture_flags_exactly_the_seeded_bugs():
+    out = subprocess.run([sys.executable, str(HELPER)], capture_output=True,
+                         text=True, env=ENV, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    rep = json.loads(out.stdout.splitlines()[-1])
+
+    taint_kinds = [f["kind"] for f in rep["taint"]]
+    prng_kinds = [f["kind"] for f in rep["prng"]]
+    assert taint_kinds == ["tainted-collective"], rep["taint"]
+    assert prng_kinds == ["key-reuse"], rep["prng"]
+    # both events of the reuse land in the fixture, not the library
+    events = rep["prng"][0]["events"]
+    assert len(events) == 2
+    assert all("broken_method.py" in e for e in events)
+    # nothing pretended to sanitize
+    assert rep["n_sanitize_sites"] == 0
+    assert rep["n_draws"] == 2
+
+
+# ----------------------------------------------------------------- CLI layer
+
+@pytest.mark.slow
+def test_cli_quick_matrix_is_clean(tmp_path):
+    report = tmp_path / "LINT_report.json"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--quick", "--devices", "4",
+         "--out", str(report)],
+        capture_output=True, text=True, env=ENV, timeout=1200)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-3000:]
+    rep = json.loads(report.read_text())
+    assert rep["new_violations"] == []
+    assert rep["summary"]["fail"] == 0 and rep["summary"]["error"] == 0
+    assert rep["summary"]["pass"] == rep["n_configs"] > 0
+    # privacy-claiming configs each sanitized exactly once and declared
+    # exactly one release (the loss metric)
+    for row in rep["configs"]:
+        if not row["expect_taint"]:
+            assert row["n_sanitize_sites"] == 1, row["id"]
+            assert len(row["releases"]) == 1, row["id"]

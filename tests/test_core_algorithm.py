@@ -1,5 +1,4 @@
 """SDM-DSGD algorithm behaviour: convergence, consensus, baselines, Fig. 2."""
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -75,6 +75,52 @@ def test_accountant_tracks_composition():
     assert acc.epsilon == pytest.approx(privacy.epsilon_sdm(params, 1000, 0.5))
 
 
+@pytest.mark.parametrize("bad", [0.0, -1.0])
+def test_params_reject_nonpositive_sigma(bad):
+    with pytest.raises(ValueError, match="sigma"):
+        privacy.PrivacyParams(**{**BASE, "sigma": bad})
+
+
+@pytest.mark.parametrize("bad", [0.0, -0.1, 1.5])
+def test_params_reject_p_outside_unit(bad):
+    with pytest.raises(ValueError, match="p must be"):
+        privacy.PrivacyParams(**{**BASE, "p": bad})
+
+
+def test_params_reject_bad_scale_inputs():
+    with pytest.raises(ValueError, match="G"):
+        privacy.PrivacyParams(**{**BASE, "G": 0.0})
+    with pytest.raises(ValueError, match="m"):
+        privacy.PrivacyParams(**{**BASE, "m": 0})
+    with pytest.raises(ValueError, match="delta"):
+        privacy.PrivacyParams(**{**BASE, "delta": 0.0})
+
+
+@pytest.mark.parametrize("bad_eps", [0.0, -0.5])
+def test_eps_target_must_be_positive(bad_eps):
+    params = privacy.PrivacyParams(**BASE)
+    with pytest.raises(ValueError, match="eps_target"):
+        privacy.rdp_alpha(bad_eps, 1e-5)
+    with pytest.raises(ValueError, match="eps_target"):
+        privacy.epsilon_sdm(params, 100, bad_eps)
+    with pytest.raises(ValueError, match="eps_target"):
+        privacy.PrivacyAccountant(params, eps_target=bad_eps)
+
+
+def test_sigma_for_budget_rejects_bad_inputs():
+    good = dict(G=5.0, m=300, p=0.2, T=200_000, eps=0.05)
+    with pytest.raises(ValueError, match="eps_target"):
+        privacy.sigma_for_budget(**{**good, "eps": 0.0})
+    with pytest.raises(ValueError, match="p must be"):
+        privacy.sigma_for_budget(**{**good, "p": 1.5})
+    with pytest.raises(ValueError, match="G"):
+        privacy.sigma_for_budget(**{**good, "G": -1.0})
+    with pytest.raises(ValueError, match="T"):
+        privacy.sigma_for_budget(**{**good, "T": 0})
+    with pytest.raises(ValueError, match="p must be"):
+        privacy.max_iterations(G=5.0, m=100, p=0.0, eps=1.0)
+
+
 @given(p=st.floats(0.01, 1.0), T=st.integers(1, 10_000),
        sigma=st.floats(1.0, 50.0))
 @settings(max_examples=100, deadline=None)

@@ -1,5 +1,4 @@
 """Convergence-theory calculators: Lemma 1, Corollary 3, Remark 1."""
-import math
 
 import pytest
 from hypothesis import given, settings, strategies as st

@@ -37,7 +37,6 @@ collective-permute payload stays at the compressed bit size (k*32 for
 fixed-k values, bits/coord — u8-packed below a byte — for qsgd).
 """
 import pathlib
-import re
 import subprocess
 import sys
 

@@ -1,7 +1,6 @@
 """Dry-run integration smoke: one cheap (arch x shape) per step kind
 lowers + compiles on the 512-device production mesh, in a subprocess
 (XLA device-count faking must precede jax init)."""
-import json
 import pathlib
 import subprocess
 import sys

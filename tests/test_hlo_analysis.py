@@ -36,6 +36,68 @@ def test_empty_and_garbage():
     assert hlo_analysis.collective_bytes("add(f32[2] x, y)") == {"total": 0}
 
 
+def test_shape_bytes_direct():
+    """The low-level shape parser every helper rests on."""
+    sb = hlo_analysis._shape_bytes
+    assert sb("f32[2,512]") == 2 * 512 * 4
+    assert sb("bf16[1024]") == 1024 * 2
+    assert sb("f32[]") == 4                      # scalar: empty dims = 1 elem
+    assert sb("(f32[8], s32[8])") == 8 * 4 + 8 * 4
+    assert sb("u8[512]") == 512                  # packed qsgd wire lane
+    assert sb("pred[16]") == 16                  # bool mask plane
+    assert sb("token[]") == 0                    # unknown dtype skipped
+    assert sb("") == 0
+    # byte-floor convention for sub-byte element types
+    assert sb("u4[32]") == 32 * hlo_analysis.DTYPE_BYTES["u4"]
+
+
+def test_permute_payloads_mixed_dtype_tuple():
+    """Compressed payload wire: f32 values + s32 indices ride one permute
+    (sync tuple form) — the parser must keep the dtypes separate so the
+    index side-channel is visible in the accounting."""
+    hlo = """
+ENTRY main {
+  %cp = (f32[51]{0}, s32[51]{0}) collective-permute(%v, %i), source_target_pairs={{0,1}}
+}
+"""
+    pls = hlo_analysis.permute_payloads(hlo)
+    assert len(pls) == 1
+    assert pls[0]["elems"] == {"f32": 51, "s32": 51}
+    assert pls[0]["bits"] == 51 * 32 + 51 * 32
+
+
+def test_permute_payloads_async_mixed_tuple_counted_once():
+    """Async -start with a 2-leaf payload: the tuple is (operands...,
+    results..., u32 context words). Context dropped, mirror halved —
+    payload counted ONCE, exactly like the sync form."""
+    hlo = """
+ENTRY main {
+  %cps = (f32[51]{0}, s32[51]{0}, f32[51]{0}, s32[51]{0}, u32[], u32[]) collective-permute-start(%v, %i)
+  %cpd = (f32[51]{0}, s32[51]{0}) collective-permute-done(%cps)
+}
+"""
+    pls = hlo_analysis.permute_payloads(hlo)
+    assert len(pls) == 1                          # done skipped
+    assert pls[0]["elems"] == {"f32": 51, "s32": 51}
+    assert pls[0]["bits"] == 51 * 32 + 51 * 32
+    assert hlo_analysis.collective_permute_count(hlo) == 1
+
+
+def test_collective_bytes_counts_permute_start_result_shape():
+    """collective_bytes uses the raw result-shape convention (roofline
+    traffic), so the async tuple's operand mirror IS counted there —
+    permute_payloads is the one-payload-once view."""
+    hlo = """
+ENTRY main {
+  %cps = (f32[64]{0}, f32[64]{0}, u32[], u32[]) collective-permute-start(%x)
+  %cpd = f32[64]{0} collective-permute-done(%cps)
+}
+"""
+    out = hlo_analysis.collective_bytes(hlo)
+    assert out["collective-permute"] == 2 * 64 * 4 + 2 * 4
+    assert hlo_analysis.permute_payloads(hlo)[0]["bits"] == 64 * 32
+
+
 def test_permute_payloads_sync_and_async():
     """The wire-plane acceptance surface: per-permute payload bits,
     dtype-aware, with async -start tuple forms (operand mirror + u32

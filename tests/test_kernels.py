@@ -2,7 +2,6 @@
 
 Kernels execute in interpret mode (CPU container; TPU is the target).
 """
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -11,7 +10,6 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attn.ops import flash_attention
-from repro.kernels.flash_attn.ref import attention_ref
 from repro.kernels.sdm_update import ref as sdm_ref
 from repro.kernels.sdm_update.ops import sdm_update
 from repro.kernels.sdm_update.sdm_update import LANE, sdm_update_pallas

@@ -1,6 +1,5 @@
 """The unified Method registry: lookup, config coercion, directed
 push-sum consensus, time-varying schedules, heterogeneous per-node p."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

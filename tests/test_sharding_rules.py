@@ -1,11 +1,9 @@
 """MeshRules / logical-axis sharding unit tests (single device: specs only)."""
-import jax
 import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.sharding import MeshRules, logical, use_rules
+from repro.sharding import MeshRules, logical
 from repro.train.steps import INNER_RULES, outer_rules, serving_rules
 
 

@@ -1,5 +1,4 @@
 """Substrate tests: data pipeline, optimizers, checkpointing, serving."""
-import os
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """End-to-end trainer integration: the paper's loop on a small testbed."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import PrivacyParams, SDMConfig, sdm_dsgd, topology
 from repro.data import classification_dataset, node_partitioned_batches
