@@ -27,6 +27,9 @@ BENCHES = {
     "perf": ("benchmarks.perf_wire",
              "wire-plane perf snapshot -> BENCH_perf.json (permutes/step, "
              "wire bits, sorts, fusion factor)"),
+    "sim": ("benchmarks.sim_edge",
+            "edge-fleet simulation -> BENCH_sim.json (simulated seconds-"
+            "to-target, wire bits, epsilon per method x fault scenario)"),
 }
 
 

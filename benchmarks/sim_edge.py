@@ -1,0 +1,133 @@
+"""Edge-fleet simulation benchmark -> BENCH_sim.json.
+
+Runs every (method, scenario) case of the event-driven fleet simulator
+(``repro.sim``) on a small MLR testbed and records the quantities the
+paper's edge-deployment story turns on:
+
+    sim_seconds          simulated wall-clock for the whole run (compute
+                         + bandwidth-limited transmission per round)
+    time_to_target       simulated seconds until the loss first reaches
+                         the no-fault-derived target (None = never)
+    wire_bits            cumulative delivered payload bits
+    epsilon              final (eps, delta)-DP spend under participation
+                         amplification (q < 1 folds into the accountant)
+    loss_gap_vs_no_fault graceful-degradation check: how much worse the
+                         faulty scenario's final loss is than the same
+                         method's no-fault run
+
+Scenarios are the named presets (no-fault | straggler | dropout | churn);
+methods compare the paper's SDM-DSGD against the dense DSGD baseline —
+same fleet, same faults, so the sparse wire format's bandwidth advantage
+shows up directly in simulated seconds.
+
+Run via ``python -m benchmarks.run --only sim`` (writes BENCH_sim.json at
+the repo root; CI uploads it next to BENCH_perf.json) or directly:
+``python -m benchmarks.sim_edge``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import PrivacyParams, SDMConfig, topology
+from repro.data import classification_dataset, node_partitioned_batches
+from repro.models import vision_small
+from repro.sim import SCENARIOS, simulate
+
+OUT_PATH = os.environ.get("BENCH_SIM_OUT", "BENCH_sim.json")
+
+N_NODES = 8
+ROUNDS = 60
+BATCH_PER_NODE = 16
+M_LOCAL = 2000 // N_NODES
+
+METHODS = {
+    # (cfg, privacy): dsgd releases every coordinate (p=1), SDM only p
+    "sdm-dsgd": (SDMConfig(p=0.4, theta=0.3, gamma=0.1, sigma=1.0,
+                           clip_c=5.0),
+                 PrivacyParams(G=5.0, m=M_LOCAL, tau=BATCH_PER_NODE / M_LOCAL,
+                               p=0.4, sigma=1.0)),
+    "dsgd": (SDMConfig(p=1.0, theta=1.0, gamma=0.1, sigma=1.0, clip_c=5.0),
+             PrivacyParams(G=5.0, m=M_LOCAL, tau=BATCH_PER_NODE / M_LOCAL,
+                           p=1.0, sigma=1.0)),
+}
+
+
+def _testbed(seed=0):
+    (x_tr, y_tr), _ = classification_dataset(64, 10, 2000, 200, seed=seed)
+    params0 = vision_small.mlr_init(jax.random.PRNGKey(seed), 64, 10)
+    stack = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (N_NODES,) + p.shape), params0)
+    grad_fn = vision_small.make_stacked_grad_fn(vision_small.mlr_apply)
+    batches = node_partitioned_batches(x_tr, y_tr, N_NODES, BATCH_PER_NODE,
+                                       seed=seed)
+    return stack, grad_fn, batches
+
+
+def _one(method: str, scenario: str, target_loss=None):
+    cfg, pp = METHODS[method]
+    stack, grad_fn, batches = _testbed()
+    return simulate(topo=topology.ring(N_NODES), algorithm=method,
+                    sdm_cfg=cfg, params_stack=stack, grad_fn=grad_fn,
+                    batches=batches, rounds=ROUNDS, scenario=scenario,
+                    seed=0, privacy=pp, eps_target=1.0,
+                    target_loss=target_loss)
+
+
+def run(out_path: str = OUT_PATH) -> dict:
+    cases = []
+    for method in METHODS:
+        # the no-fault run defines the method's target loss: 80% of the
+        # way from the initial to the final no-fault loss
+        base = _one(method, "no-fault")
+        bl = base.result.losses
+        target = bl[0] - 0.8 * (bl[0] - bl[-1])
+        base = _one(method, "no-fault", target_loss=target)
+        by_scenario = {"no-fault": base}
+        for scenario in sorted(SCENARIOS):
+            if scenario != "no-fault":
+                by_scenario[scenario] = _one(method, scenario,
+                                             target_loss=target)
+        for scenario, res in by_scenario.items():
+            r = res.result
+            rec = {
+                "method": method,
+                "scenario": scenario,
+                "rounds": res.rounds,
+                "sim_seconds": round(res.sim_seconds, 6),
+                "target_loss": round(target, 6),
+                "time_to_target": (None if res.time_to_target is None
+                                   else round(res.time_to_target, 6)),
+                "rounds_to_target": res.rounds_to_target,
+                "wire_bits": r.comm_bits[-1],
+                "epsilon": (r.epsilons[-1] if r.epsilons else None),
+                "final_loss": round(r.losses[-1], 6),
+                "loss_gap_vs_no_fault": round(
+                    r.losses[-1] - base.result.losses[-1], 6),
+                "straggler_rounds": res.straggler_rounds,
+                "dropout_rounds": res.dropout_rounds,
+                "recompiles": res.recompiles,
+                "wall_s": round(r.wall_s, 3),
+            }
+            cases.append(rec)
+            tt = rec["time_to_target"]
+            emit(f"sim_edge/{method}/{scenario}",
+                 r.wall_s / max(res.rounds, 1) * 1e6,
+                 f"t_sim={rec['sim_seconds']}s "
+                 f"t_target={'never' if tt is None else f'{tt}s'} "
+                 f"bits={rec['wire_bits']} eps={rec['epsilon']} "
+                 f"gap={rec['loss_gap_vs_no_fault']}")
+
+    report = {"n_nodes": N_NODES, "rounds": ROUNDS, "cases": cases}
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {out_path} ({len(cases)} cases)")
+    return report
+
+
+if __name__ == "__main__":
+    run()

@@ -89,6 +89,13 @@ MATRIX: Tuple[AuditConfig, ...] = (
     AuditConfig("gradient-push", "dring4", "fixedk"),
     AuditConfig("gradient-push", "dring4", "qsgd"),
     AuditConfig("gradient-push", "matchings4x2", "fixedk"),
+    # partial-participation (edge-fleet simulator) schedules: per-round
+    # masked induced subgraphs, q=0.75 participation trace — the sim's
+    # round graphs must satisfy the same taint/prng/wire contract
+    AuditConfig("sdm-dsgd", "subring4x3", "fixedk_packed"),
+    AuditConfig("sdm-dsgd", "subring4x3", "bernoulli"),
+    AuditConfig("dsgd", "subring4x3", "-"),
+    AuditConfig("gradient-push", "subdring4x3", "fixedk"),
     # negative controls: the analyzer MUST flag these
     AuditConfig("allreduce", "ring4", "-", expect_taint=True),
     AuditConfig("sdm-dsgd", "ring4", "fixedk_packed", sigma=0.0,
@@ -102,6 +109,7 @@ QUICK_IDS = frozenset({
     "sdm-dsgd/matchings4x2/fixedk_packed/sigma1",
     "dsgd/ring4/-/sigma1",
     "gradient-push/dring4/fixedk/sigma1",
+    "sdm-dsgd/subring4x3/fixedk_packed/sigma1",
     "allreduce/ring4/-/dirty",
 })
 
@@ -116,6 +124,19 @@ def parse_topo(spec: str) -> gossip.ScheduleSequence:
     if spec == "matchings4x2":
         return gossip.sequence_from_topologies(
             topology.random_matchings(N_NODES, 2, seed=0), name=spec)
+    if spec in ("subring4x3", "subdring4x3"):
+        # the edge-fleet simulator's partial-participation schedule: a
+        # q=0.75 Bernoulli participation trace (the sim's own fleet PRNG,
+        # so the audited graphs are exactly what a sim run compiles)
+        # masking the base ring / directed ring per round
+        from repro.sim.fleet import Fleet
+
+        base = (topology.directed_ring(N_NODES) if spec == "subdring4x3"
+                else topology.ring(N_NODES))
+        fleet = Fleet(N_NODES, "q=0.75", seed=0)
+        sets = [np.nonzero(fleet.sample_participants())[0]
+                for _ in range(3)]
+        return gossip.sequence_from_active_sets(base, sets, name=spec)
     raise ValueError(f"unknown audit topology {spec!r}")
 
 
@@ -286,9 +307,17 @@ def _wire_findings(ac: AuditConfig, meth, seq, cfg, hlo, per_node) -> List:
             k = sparsifier.num_kept(plane_elems, 0.25)
             pperms = sum(1 for pl in payloads
                          if pl["elems"].get("f32", 0) == k)
-        if pperms != useq.n_replicas:
+        if ac.method == "dsgd":
+            # dense full-state exchange lowers to a lax.switch over the
+            # L per-round branches (only the live round executes), so the
+            # compiled graph carries EVERY branch's permutes — unlike the
+            # branch-free union replica transport of the masked payloads.
+            expected = sum(s.n_rounds for s in seq.schedules)
+        else:
+            expected = useq.n_replicas
+        if pperms != expected:
             findings.append({"kind": "union-payload-rounds", "got": pperms,
-                             "expected": useq.n_replicas})
+                             "expected": expected})
     return findings
 
 

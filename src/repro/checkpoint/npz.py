@@ -68,6 +68,17 @@ def restore_checkpoint(directory: str, exemplar: PyTree,
             key = "/".join(_path_str(q) for q in p)
             arr = data[key]
             if hasattr(leaf, "dtype"):
+                if arr.dtype.kind == "V":
+                    # np.load hands back raw void bytes for ml_dtypes
+                    # leaves (bfloat16, float8, ...): reinterpret with
+                    # the exemplar's dtype before casting.
+                    want = np.dtype(leaf.dtype)
+                    if want.itemsize != arr.dtype.itemsize:
+                        raise ValueError(
+                            f"checkpoint leaf {key!r} has opaque dtype "
+                            f"{arr.dtype} ({arr.dtype.itemsize} B) but the "
+                            f"exemplar expects {want} ({want.itemsize} B)")
+                    arr = arr.view(want)
                 arr = arr.astype(leaf.dtype)
             leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves)

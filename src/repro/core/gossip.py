@@ -274,28 +274,74 @@ def sequence_from_topologies(topos, name: str | None = None
 
 def sequence_by_name(spec: str, n_nodes: int, *,
                      self_weight: float | None = None,
-                     seed: int = 0) -> ScheduleSequence:
+                     seed: int = 0, placement: bool = False
+                     ) -> ScheduleSequence:
     """Parse a CLI spec into a ScheduleSequence.
 
     Static ``topology.by_name`` specs give a length-1 sequence;
     ``matchings`` / ``matchings:<L>`` gives L random per-round matchings
     (B-connected time-varying gossip), cycled by the step counter.
+
+    ``placement=True`` renumbers the logical nodes with
+    ``topology.greedy_placement`` before compiling, so high-traffic
+    shifts land on nearest-neighbour ICI permutations (time-varying
+    sequences place their UNION graph — one consistent renumbering for
+    every round). Spectrum-preserving (``apply_placement`` permutes W
+    symmetrically) and monotone: applied only when it strictly lowers
+    the ring-hop cost, so optimal layouts compile byte-identically.
     """
     from repro.core import topology as topology_mod
+
+    def placed(topos):
+        if not placement:
+            return topos
+        union = np.zeros((n_nodes, n_nodes), dtype=np.int64)
+        for t in topos:
+            union |= np.asarray(t.adjacency, dtype=np.int64)
+        order = topology_mod.greedy_placement(union)
+        if topology_mod.placement_cost(union, order) < \
+                topology_mod.placement_cost(union):
+            return [topology_mod.apply_placement(t, order) for t in topos]
+        return topos
 
     spec = spec.strip().lower()
     if spec.startswith("matchings") and n_nodes > 1:
         rounds = int(spec.split(":", 1)[1]) if ":" in spec else 4
-        topos = topology_mod.random_matchings(
+        topos = placed(topology_mod.random_matchings(
             n_nodes, rounds, seed=seed,
-            self_weight=0.5 if self_weight is None else self_weight)
+            self_weight=0.5 if self_weight is None else self_weight))
         return sequence_from_topologies(
             topos, name=f"matchings{n_nodes}x{rounds}_s{seed}")
     if spec.startswith("matchings"):    # n_nodes == 1 degenerate
         spec = "complete"
     topo = topology_mod.by_name(spec, n_nodes, self_weight=self_weight,
                                 seed=seed)
+    [topo] = placed([topo])
     return ensure_sequence(schedule_from_topology(topo))
+
+
+def sequence_from_active_sets(topo, active_sets, name: str | None = None
+                              ) -> ScheduleSequence:
+    """Compile a partial-participation trace into a ScheduleSequence.
+
+    ``active_sets`` is one iterable of participating node indices per
+    round (the edge-fleet simulator's sampled subgraphs); each round
+    compiles the induced ``topology.masked_subgraph`` — inactive nodes
+    isolated, active-active edges reweighted on the induced graph. The
+    result is an ordinary (usually genuinely time-varying, hence
+    replica-transported) sequence, so every executor and the analyzer
+    matrix consume it like any other schedule.
+    """
+    active_sets = list(active_sets)
+    if not active_sets:
+        raise ValueError("need >= 1 active set")
+    from repro.core import topology as topology_mod
+
+    topos = [topology_mod.masked_subgraph(topo, a,
+                                          name=f"{topo.name}_sub_r{t}")
+             for t, a in enumerate(active_sets)]
+    return sequence_from_topologies(
+        topos, name=name or f"{topo.name}_part{len(active_sets)}")
 
 
 # --------------------------------------------------------------------------

@@ -68,7 +68,9 @@ from repro.core import (baselines, compressor as compressor_mod, gossip,
 __all__ = ["Method", "DistributedExecutor", "register", "get", "names",
            "normalize", "PARAM", "SCALAR", "COUNTER", "PLANE", "REPLICA",
            "state_fields_of", "state_shape_dtype", "state_shardings",
-           "transmitted_elements", "transmitted_bits"]
+           "transmitted_elements", "transmitted_bits",
+           "stale_capable", "withhold_differential", "defer_differential",
+           "select_node_rows"]
 
 PyTree = Any
 
@@ -204,6 +206,79 @@ def transmitted_bits(meth: Method, params: PyTree, cfg,
         return meth.transmitted_bits_fn(params, cfg, value_bits=value_bits,
                                         seq=seq)
     return meth.transmitted_elements(params, cfg, seq=seq) * value_bits
+
+
+# --------------------------------------------------------------------------
+# Stale-gossip (straggler) semantics over the stacked reference executors.
+# --------------------------------------------------------------------------
+#
+# The edge-fleet simulator (repro.sim) needs one-step-stale delivery: a
+# node that misses the round deadline transmits NOTHING this round, so its
+# neighbours mix with its one-step-stale public copy, and the withheld
+# update goes out (merged) next round. Differential methods encode the
+# pending transmission explicitly — the accumulator ``d`` whose sparsified
+# S(d) is the wire payload — so staleness is exact state surgery: zero a
+# straggler's d before the step (S(0) = 0 crosses the wire; its public
+# copies everywhere stay put) and add the withheld d back afterwards (the
+# differential is late, never lost — Σ of transmitted increments is
+# preserved). Methods that transmit ABSOLUTE state (dsgd, gradient-push,
+# allreduce) have no pending-payload buffer to defer; for them stragglers
+# degrade to round non-participation (the masked-subgraph path).
+
+def stale_capable(meth: Method) -> bool:
+    """Whether one-step-stale straggler semantics are exact for ``meth``.
+
+    True iff the method's wire payload is a deferred differential (a
+    ``d`` accumulator in its state) rather than absolute state.
+    """
+    return any(fname == "d" for fname, _ in meth.state_fields)
+
+
+def withhold_differential(meth: Method, state, send_mask):
+    """Suppress the outgoing payload of masked-out nodes for one step.
+
+    ``send_mask`` is a (n,) bool vector — True where the node makes the
+    round deadline. Returns ``(state', withheld)``: straggler rows of the
+    differential zeroed (so the sparsifier transmits exactly nothing for
+    them), plus the withheld rows to merge back via
+    ``defer_differential`` after the step.
+    """
+    if not stale_capable(meth):
+        raise ValueError(
+            f"{meth.name} transmits absolute state — no differential to "
+            "defer; treat stragglers as non-participants instead")
+    mask = jnp.asarray(send_mask, bool)
+    d = state.d
+    bcast = lambda v: mask.reshape((mask.shape[0],) + (1,) * (v.ndim - 1))
+    masked = jax.tree.map(lambda v: jnp.where(bcast(v), v, 0), d)
+    withheld = jax.tree.map(lambda v: jnp.where(bcast(v), 0, v), d)
+    return state._replace(d=masked), withheld
+
+
+def defer_differential(meth: Method, state, withheld):
+    """Merge a withheld differential back: it transmits next round."""
+    return state._replace(
+        d=jax.tree.map(jnp.add, state.d, withheld))
+
+
+def select_node_rows(active_mask, on_state, off_state):
+    """Per-node row select across every state leaf (freeze semantics).
+
+    Node i's slice comes from ``on_state`` where ``active_mask[i]`` and
+    from ``off_state`` (its pre-round state — the node did nothing)
+    otherwise. Leaves without a leading node axis (the shared scalar
+    step counter) advance with the round unconditionally.
+    """
+    mask = jnp.asarray(active_mask, bool)
+    n = mask.shape[0]
+
+    def pick(on, off):
+        if getattr(on, "ndim", 0) >= 1 and on.shape[0] == n:
+            return jnp.where(mask.reshape((n,) + (1,) * (on.ndim - 1)),
+                             on, off)
+        return on
+
+    return jax.tree.map(pick, on_state, off_state)
 
 
 def _n_replicas(seq) -> int:

@@ -61,6 +61,15 @@ class PrivacyParams:
          epsilon upper-bounds each node's true spend.
       sigma: Gaussian masking noise std-dev (per coordinate).
       delta: target delta.
+      participation_q: per-round node participation fraction. With
+         partial participation (the edge-fleet simulator samples an
+         active subgraph of expected size q*n per round) a node's data
+         enters a release only in rounds it participates in, and the
+         participation sampling composes with the paper's data
+         subsampling: the effective subsampled-Gaussian rate is q*tau,
+         so the per-step RDP picks up a q^2 amplification factor
+         (Wang-Balle-Kasiviswanathan, same lemma that gives the tau^2).
+         q = 1 (default) is full participation and changes nothing.
     """
 
     G: float
@@ -69,6 +78,7 @@ class PrivacyParams:
     p: "float | tuple"
     sigma: float
     delta: float = 1e-5
+    participation_q: float = 1.0
 
     def __post_init__(self) -> None:
         if isinstance(self.p, (list, tuple)):
@@ -81,6 +91,12 @@ class PrivacyParams:
             raise ValueError("p must be in (0, 1]")
         if not (0.0 < self.tau <= 1.0):
             raise ValueError("tau must be in (0, 1]")
+        if not (0.0 < self.participation_q <= 1.0):
+            raise ValueError(
+                f"participation_q must be in (0, 1], got {self.participation_q!r}: "
+                "q is a sampling fraction — q=0 means no node ever "
+                "participates (nothing is released, but nothing trains "
+                "either) and q>1 is not a probability")
         if not self.sigma > 0.0:
             raise ValueError(
                 f"sigma must be > 0, got {self.sigma!r}: the accountant's "
@@ -95,7 +111,8 @@ class PrivacyParams:
 
     @classmethod
     def from_compressor(cls, comp, *, G: float, m: int, tau: float,
-                        sigma: float, delta: float = 1e-5
+                        sigma: float, delta: float = 1e-5,
+                        participation_q: float = 1.0
                         ) -> "PrivacyParams":
         """Accountant parameters with the release probability READ OFF
         the compressor (``repro.core.compressor``).
@@ -108,7 +125,7 @@ class PrivacyParams:
         worst-case (max-p) node as always.
         """
         return cls(G=G, m=m, tau=tau, p=comp.release_probability,
-                   sigma=sigma, delta=delta)
+                   sigma=sigma, delta=delta, participation_q=participation_q)
 
     @property
     def p_worst(self) -> float:
@@ -139,12 +156,18 @@ def rdp_alpha(eps: float, delta: float) -> float:
 def per_step_rdp(params: PrivacyParams, alpha: float) -> float:
     """Expected per-step RDP of the released S(d_t) (Theorem 1 proof).
 
-    rho_t = 4 * alpha * p * (tau * G / (m * sigma))^2, with p the
-    worst-case (max) node budget when p is per-node.
+    rho_t = 4 * alpha * p * (q * tau * G / (m * sigma))^2, with p the
+    worst-case (max) node budget when p is per-node and q the per-round
+    participation fraction: partial participation composes with the
+    data subsampling into an effective subsampled-Gaussian rate q*tau,
+    so q < 1 amplifies privacy quadratically (subsampled RDP, same
+    Wang-Balle-Kasiviswanathan lemma as the tau^2 factor). q = 1
+    recovers Theorem 1 verbatim.
     Requires sigma^2 >= 1/1.25 for the subsampling amplification.
     """
     return 4.0 * alpha * params.p_worst * (
-        params.tau * params.G / (params.m * params.sigma)) ** 2
+        params.participation_q * params.tau * params.G
+        / (params.m * params.sigma)) ** 2
 
 
 def epsilon_sdm(params: PrivacyParams, T: int, eps_target: float) -> float:

@@ -29,6 +29,7 @@ __all__ = [
     "directed_ring",
     "directed_erdos_renyi",
     "random_matchings",
+    "masked_subgraph",
     "by_name",
     "placement_cost",
     "greedy_placement",
@@ -224,6 +225,42 @@ def random_matchings(n: int, rounds: int, seed: int = 0,
     raise RuntimeError(
         f"no connected union of {rounds} matchings on {n} nodes "
         "within 1000 reseeds")
+
+
+def masked_subgraph(topo, active, name: str | None = None):
+    """The induced partial-participation round graph on ``active`` nodes.
+
+    The edge-fleet simulator samples an active subset per round; this
+    builds that round's mixing graph WITHOUT renumbering: inactive nodes
+    stay in the index space but become isolated (their W row/column is
+    the identity row — they neither send nor receive, their parameters
+    are untouched by the round), and the surviving active-active edges
+    get weights recomputed ON THE INDUCED SUBGRAPH so the matrix stays
+    valid whatever subset was drawn.
+
+    Undirected topologies get Metropolis-Hastings weights (symmetric
+    doubly stochastic for ANY induced adjacency, disconnected included);
+    directed ones get the uniform column-stochastic push split (isolated
+    senders keep all mass: P_jj = 1). The induced graph need not be
+    connected — a single faulty round only slows mixing, and the
+    B-connectivity the convergence theory needs is a property of the
+    round SEQUENCE, not of each round.
+    """
+    n = topo.n_nodes
+    mask = np.zeros(n, dtype=bool)
+    mask[np.asarray(sorted(int(i) for i in active), dtype=np.int64)] = True
+    label = name or f"{topo.name}_sub{int(mask.sum())}"
+    if mask.all():
+        # full participation keeps the base graph's OWN weights (ring
+        # self-weights, Laplacian ER matrices, ...) so a no-fault round
+        # mixes byte-identically to the lock-step trainer.
+        return dataclasses.replace(topo, name=label)
+    adj = (np.asarray(topo.adjacency) * np.outer(mask, mask)).astype(np.int64)
+    if isinstance(topo, DirectedTopology):
+        return DirectedTopology(name=label, n_nodes=n, adjacency=adj,
+                                weights=column_stochastic_weights(adj))
+    return Topology(name=label, n_nodes=n, adjacency=adj,
+                    weights=metropolis_hastings_weights(adj))
 
 
 def laplacian_consensus_matrix(adjacency: np.ndarray) -> np.ndarray:

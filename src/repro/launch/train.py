@@ -55,6 +55,15 @@ def main() -> None:
                     help="ER graph / matching sampling seed")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sim", default=None,
+                    help="run under the event-driven edge-fleet simulator "
+                         "instead of the lock-step distributed step: a "
+                         "preset (no-fault | straggler | dropout | churn) "
+                         "or a scenario spec like "
+                         "'q=0.8,deadline=1.5,straggle=0.25x8,dropout=0.05,"
+                         "churn=0.02:5' (see repro.sim.fleet)")
+    ap.add_argument("--sim-rounds", type=int, default=None,
+                    help="global rounds to simulate (defaults to --steps)")
     args = ap.parse_args()
 
     import jax
@@ -100,6 +109,10 @@ def main() -> None:
           f"topology={sched.name} gossip_rounds={sched.n_rounds}"
           + (f" time_varying_L={sched.length}" if sched.length > 1 else ""))
 
+    if args.sim:
+        _run_simulated(args, cfg, sdm_cfg, meth_name, n_nodes, batch, seq)
+        return
+
     state = steps_mod.init_distributed_state(tc, mesh,
                                              jax.random.PRNGKey(args.seed))
     step_fn = jax.jit(steps_mod.make_distributed_train(tc, mesh))
@@ -122,6 +135,64 @@ def main() -> None:
     if args.checkpoint_dir:
         save_checkpoint(args.checkpoint_dir, args.steps, state)
         print(f"checkpoint written to {args.checkpoint_dir}")
+
+
+def _run_simulated(args, cfg, sdm_cfg, meth_name, n_nodes,
+                   batch, seq) -> None:
+    """The --sim axis: event-driven edge-fleet run on the reference
+    executor (stacked single host), simulated wall-clock per round."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data import TokenStream
+    from repro.models import transformer
+    from repro.sim import Fleet, parse_scenario, simulate
+
+    if cfg.family in ("audio", "vlm"):
+        raise SystemExit("--sim supports text models only")
+    if n_nodes < 2:
+        raise SystemExit("--sim needs a >= 2-node mesh (e.g. --mesh 4x1)")
+
+    rounds = args.sim_rounds or args.steps
+    per_node = max(batch // n_nodes, 1)
+    stream = TokenStream(vocab_size=cfg.vocab_size, batch=n_nodes * per_node,
+                         seq_len=seq, seed=args.seed)
+    params = transformer.init_params(jax.random.PRNGKey(args.seed), cfg,
+                                     jnp.float32)
+    stack = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (n_nodes,) + p.shape), params)
+
+    def one_loss(p, tokens, labels):
+        logits, aux = transformer.forward(p, cfg, tokens)
+        return transformer.lm_loss(logits, labels, cfg.vocab_size, aux)
+
+    def grad_fn(params_stack, batch_stack):
+        tokens, labels = batch_stack
+        losses, grads = jax.vmap(jax.value_and_grad(one_loss))(
+            params_stack, tokens, labels)
+        return grads, jnp.mean(losses)
+
+    def batches():
+        t = 0
+        while True:
+            tokens, labels = stream.batch_at(t)
+            yield (jnp.asarray(tokens).reshape(n_nodes, per_node, -1),
+                   jnp.asarray(labels).reshape(n_nodes, per_node, -1))
+            t += 1
+
+    spec = parse_scenario(args.sim)
+    print("sim fleet: " + Fleet(n_nodes, spec, seed=args.seed).describe())
+    res = simulate(topo=args.topology, algorithm=meth_name, sdm_cfg=sdm_cfg,
+                   params_stack=stack, grad_fn=grad_fn, batches=batches(),
+                   rounds=rounds, scenario=spec, seed=args.seed)
+    r = res.result
+    for t in range(len(r.losses)):
+        print(f"round {t:4d} t_sim {r.sim_time_s[t]:9.3f}s "
+              f"loss {r.losses[t]:.4f} "
+              f"wire_bits {r.comm_bits[t]}", flush=True)
+    print(f"sim done: rounds={res.rounds} t_sim={res.sim_seconds:.3f}s "
+          f"stragglers={res.straggler_rounds} dropouts={res.dropout_rounds} "
+          f"recompiles={res.recompiles} events={len(res.trace)}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,17 @@
+"""Event-driven edge-fleet simulator (see sim.runner module docstring).
+
+Public surface::
+
+    from repro.sim import Fleet, FleetSpec, SCENARIOS, simulate, SimResult
+"""
+from repro.sim.clock import (Event, EventQueue, VirtualClock,   # noqa: F401
+                             trace_signature)
+from repro.sim.fleet import (Distribution, Fleet, FleetSpec,    # noqa: F401
+                             SCENARIOS, parse_scenario,
+                             effective_participation_q)
+from repro.sim.runner import SimResult, simulate                # noqa: F401
+
+__all__ = ["Event", "EventQueue", "VirtualClock", "trace_signature",
+           "Distribution", "Fleet", "FleetSpec", "SCENARIOS",
+           "parse_scenario", "effective_participation_q",
+           "SimResult", "simulate"]

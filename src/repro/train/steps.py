@@ -110,7 +110,8 @@ def _compiled_schedule(spec: str, seed: int, self_weight: float,
                        n_nodes: int) -> gossip.ScheduleSequence:
     return gossip.sequence_by_name(
         spec, n_nodes,
-        self_weight=self_weight if spec == "ring" else None, seed=seed)
+        self_weight=self_weight if spec == "ring" else None, seed=seed,
+        placement=True)
 
 
 def gossip_schedule(tc: DistributedTrainConfig, mesh: Mesh
@@ -122,6 +123,13 @@ def gossip_schedule(tc: DistributedTrainConfig, mesh: Mesh
     ER resampling + the Laplacian eigendecomposition run once and the
     s_0 self-weights can never desynchronize from the train step's.
     Time-varying specs ("matchings:<L>") give a length-L sequence.
+
+    Placement-aware: the node count is read off the mesh's ICI shape and
+    ``topology.greedy_placement`` renumbers the logical nodes before
+    compiling whenever that strictly lowers the ring-hop cost, so e.g.
+    a sampled ER graph's hottest shifts land on physically adjacent
+    devices. Spectrum-preserving — beta / lambda_n and every convergence
+    bound are untouched (asserted in tests/test_core_topology.py).
     """
     return _compiled_schedule(tc.topology, tc.topology_seed,
                               tc.self_weight, _n_nodes(mesh))

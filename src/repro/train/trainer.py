@@ -32,6 +32,11 @@ class TrainResult:
     epsilons: List[float]
     eval_accuracy: List[float]
     wall_s: float
+    # simulated seconds at the END of each round — filled by the
+    # edge-fleet simulator (repro.sim.runner), which charges compute-time
+    # and bandwidth-limited transmission per node; empty for the lock-step
+    # trainer below, whose rounds have no time model.
+    sim_time_s: List[float] = dataclasses.field(default_factory=list)
 
 
 def run_decentralized(

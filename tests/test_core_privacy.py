@@ -142,3 +142,54 @@ def test_theorem4_beats_m2_prior_art(m):
     t_prior = m ** 2
     if m >= 500:
         assert t_paper > t_prior
+
+
+# ---- participation amplification (partial participation, q < 1) ----------
+
+@pytest.mark.parametrize("bad_q", [0.0, -0.3, 1.0001, 2.0])
+def test_participation_q_outside_unit_interval_rejected(bad_q):
+    with pytest.raises(ValueError, match="participation_q must be"):
+        privacy.PrivacyParams(**BASE, participation_q=bad_q)
+
+
+def test_participation_q_one_is_identity():
+    """q=1 (full participation, the default) changes nothing."""
+    base = privacy.PrivacyParams(**BASE)
+    full = privacy.PrivacyParams(**BASE, participation_q=1.0)
+    T, eps_t = 700, 0.5
+    assert privacy.epsilon_sdm(full, T, eps_t) == \
+        privacy.epsilon_sdm(base, T, eps_t)
+
+
+@pytest.mark.parametrize("q", [0.1, 0.5, 0.8])
+def test_participation_amplification_is_quadratic(q):
+    """Subsampled-RDP composition: the eps-part scales with q^2 (the
+    participation fraction multiplies the effective subsampling rate
+    q*tau, and the per-step RDP is quadratic in the rate)."""
+    T, eps_t = 500, 0.4
+    e_full = privacy.epsilon_sdm(privacy.PrivacyParams(**BASE), T, eps_t)
+    e_part = privacy.epsilon_sdm(
+        privacy.PrivacyParams(**BASE, participation_q=q), T, eps_t)
+    assert (e_part - eps_t / 2) == \
+        pytest.approx(q ** 2 * (e_full - eps_t / 2), rel=1e-9)
+    assert e_part < e_full          # strictly amplified
+
+
+def test_accountant_tracks_amplified_epsilon():
+    acct_full = privacy.PrivacyAccountant(
+        privacy.PrivacyParams(**BASE), eps_target=1.0)
+    acct_part = privacy.PrivacyAccountant(
+        privacy.PrivacyParams(**BASE, participation_q=0.5), eps_target=1.0)
+    for _ in range(50):
+        acct_full.step()
+        acct_part.step()
+    assert acct_part.epsilon < acct_full.epsilon
+
+
+def test_from_compressor_passes_participation_q_through():
+    from repro.core import compressor
+    comp = compressor.make("bernoulli", p=0.2)
+    params = privacy.PrivacyParams.from_compressor(
+        comp, G=5.0, m=1200, tau=1 / 1200, sigma=2.0, participation_q=0.7)
+    assert params.participation_q == 0.7
+    assert params.p == comp.release_probability

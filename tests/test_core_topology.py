@@ -131,3 +131,90 @@ def test_placement_cost_rejects_non_permutation():
     with pytest.raises(ValueError, match="permutation"):
         topology.placement_cost(TOPOS["ring8"].adjacency,
                                 np.array([0, 1, 1, 3, 4, 5, 6, 7]))
+
+
+# ---- placement-aware schedule compilation (train.steps wiring) ------------
+
+def test_placed_schedule_preserves_spectrum():
+    """``gossip.sequence_by_name(..., placement=True)`` — the path
+    ``train.steps._compiled_schedule`` compiles through — must renumber
+    without touching the mixing spectrum: apply_placement is a
+    permutation-similarity, so every round's dense W keeps its
+    eigenvalues, and the hop cost never exceeds the identity placement."""
+    from repro.core import gossip
+
+    for spec in ("er:0.5", "star", "matchings:3"):
+        plain = gossip.sequence_by_name(spec, 8, seed=3)
+        placed = gossip.sequence_by_name(spec, 8, seed=3, placement=True)
+        assert placed.length == plain.length
+        for s_plain, s_placed in zip(plain.schedules, placed.schedules):
+            ev_plain = np.sort(np.linalg.eigvals(s_plain.dense_weights()))
+            ev_placed = np.sort(np.linalg.eigvals(s_placed.dense_weights()))
+            np.testing.assert_allclose(ev_placed.real, ev_plain.real,
+                                       atol=1e-9)
+            np.testing.assert_allclose(ev_placed.imag, ev_plain.imag,
+                                       atol=1e-9)
+
+
+def test_placed_schedule_never_costs_more_hops():
+    from repro.core import gossip
+
+    for spec, n in (("er:0.4", 10), ("star", 8)):
+        plain = gossip.sequence_by_name(spec, n, seed=7)
+        placed = gossip.sequence_by_name(spec, n, seed=7, placement=True)
+        cost = lambda seq: sum(
+            topology.placement_cost(
+                (np.abs(s.dense_weights() - np.diag(np.diag(
+                    s.dense_weights()))) > 0).astype(np.int64))
+            for s in seq.schedules)
+        assert cost(placed) <= cost(plain)
+
+
+def test_ring_placement_is_noop():
+    """The ring is already hop-optimal: placement must keep it
+    byte-identical (greedy only applies a strictly better order)."""
+    from repro.core import gossip
+
+    plain = gossip.sequence_by_name("ring", 8)
+    placed = gossip.sequence_by_name("ring", 8, placement=True)
+    assert placed.schedules == plain.schedules
+
+
+# ---- masked participation subgraphs (edge-fleet simulator) ----------------
+
+def test_masked_subgraph_full_participation_is_identity():
+    topo = TOPOS["ring8"]
+    sub = topology.masked_subgraph(topo, range(8))
+    np.testing.assert_array_equal(sub.adjacency, topo.adjacency)
+    # byte-identical weights: no-fault rounds must mix exactly like the
+    # base graph (NOT a recomputed Metropolis-Hastings reweighting)
+    np.testing.assert_array_equal(sub.weights, topo.weights)
+
+
+def test_masked_subgraph_isolates_inactive_rows():
+    topo = TOPOS["ring8"]
+    sub = topology.masked_subgraph(topo, [0, 1, 2, 5])
+    w = np.asarray(sub.weights)
+    # inactive nodes: identity rows/cols (they keep their own state)
+    for i in (3, 4, 6, 7):
+        e = np.zeros(8)
+        e[i] = 1.0
+        np.testing.assert_allclose(w[i], e, atol=1e-12)
+        np.testing.assert_allclose(w[:, i], e, atol=1e-12)
+    # still a valid consensus matrix on the induced graph
+    np.testing.assert_allclose(w.sum(axis=0), 1.0, atol=1e-9)
+    np.testing.assert_allclose(w.sum(axis=1), 1.0, atol=1e-9)
+    np.testing.assert_allclose(w, w.T, atol=1e-12)
+    # no active-inactive edges survive
+    adj = np.asarray(sub.adjacency)
+    assert adj[0, 7] == 0 and adj[2, 3] == 0
+    assert adj[1, 0] == 1 and adj[1, 2] == 1
+
+
+def test_masked_subgraph_directed_column_stochastic():
+    topo = topology.directed_ring(6)
+    sub = topology.masked_subgraph(topo, [0, 1, 2, 3])
+    w = np.asarray(sub.weights)
+    np.testing.assert_allclose(w.sum(axis=0), 1.0, atol=1e-9)
+    for i in (4, 5):
+        assert w[i, i] == pytest.approx(1.0)

@@ -302,3 +302,75 @@ def test_single_node_topologies_degenerate():
         seq = gossip.sequence_by_name(spec, 1)
         assert seq.n_nodes == 1 and seq.schedules[0].n_rounds == 0
         assert seq.schedules[0].self_weights == (1.0,)
+
+
+# ---------------------------------------------------------------------------
+# Stale-gossip state surgery (the edge-fleet simulator's straggler path).
+# ---------------------------------------------------------------------------
+
+def _sdm_state(n=4, d=5, seed=0):
+    meth = method.get("sdm-dsgd")
+    cfg = meth.coerce_config(sdm_dsgd.SDMConfig(p=0.5, theta=0.3,
+                                                gamma=0.1, sigma=0.0))
+    sim = meth.make_reference(topology.ring(n), cfg)
+    key = jax.random.PRNGKey(seed)
+    stack = {"w": jax.random.normal(key, (n, d))}
+    state = sim.init(stack)
+    # give the differential something nonzero to withhold
+    d_tree = jax.tree.map(
+        lambda v: jnp.arange(v.size, dtype=v.dtype).reshape(v.shape) + 1.0,
+        state.d)
+    return meth, state._replace(d=d_tree)
+
+
+def test_stale_capable_is_the_d_field():
+    assert method.stale_capable(method.get("sdm-dsgd"))
+    assert method.stale_capable(method.get("dc-dsgd"))
+    assert not method.stale_capable(method.get("dsgd"))
+    assert not method.stale_capable(method.get("gradient-push"))
+
+
+def test_withhold_then_defer_is_lossless():
+    meth, state = _sdm_state()
+    send = np.array([True, False, True, False])
+    masked, withheld = method.withhold_differential(meth, state,
+                                                    send_mask=send)
+    md = jax.tree.leaves(masked.d)[0]
+    wd = jax.tree.leaves(withheld)[0]
+    # withheld rows are zeroed on the wire copy and preserved aside
+    assert not np.any(np.asarray(md)[1]) and not np.any(np.asarray(md)[3])
+    np.testing.assert_array_equal(np.asarray(md)[0],
+                                  np.asarray(jax.tree.leaves(state.d)[0])[0])
+    np.testing.assert_array_equal(np.asarray(wd)[1],
+                                  np.asarray(jax.tree.leaves(state.d)[0])[1])
+    # masked + withheld == original, elementwise (nothing is ever lost)
+    restored = method.defer_differential(meth, masked, withheld)
+    np.testing.assert_array_equal(np.asarray(jax.tree.leaves(restored.d)[0]),
+                                  np.asarray(jax.tree.leaves(state.d)[0]))
+    # x is untouched by the surgery
+    np.testing.assert_array_equal(np.asarray(masked.x["w"]),
+                                  np.asarray(state.x["w"]))
+
+
+def test_withhold_rejects_absolute_state_methods():
+    meth = method.get("dsgd")
+    sim = meth.make_reference(topology.ring(4),
+                              meth.coerce_config(baselines.DSGDConfig()))
+    state = sim.init({"w": jnp.ones((4, 3))})
+    with pytest.raises(ValueError, match="differential"):
+        method.withhold_differential(meth, state,
+                                     send_mask=np.ones(4, bool))
+
+
+def test_select_node_rows_freezes_per_node():
+    meth, state = _sdm_state()
+    moved = jax.tree.map(lambda v: v + 100.0, state.x)
+    stepped = state._replace(x=moved, step=state.step + 1)
+    keep = np.array([True, False, True, False])
+    merged = method.select_node_rows(keep, stepped, state)
+    out = np.asarray(merged.x["w"])
+    np.testing.assert_array_equal(out[0], np.asarray(moved["w"])[0])
+    np.testing.assert_array_equal(out[1], np.asarray(state.x["w"])[1])
+    np.testing.assert_array_equal(out[3], np.asarray(state.x["w"])[3])
+    # the scalar step counter takes the on-state (it is schedule-global)
+    assert int(merged.step) == int(stepped.step)

@@ -1,0 +1,262 @@
+"""Edge-fleet simulator: determinism, fault semantics, time model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PrivacyParams, SDMConfig, topology
+from repro.data import classification_dataset, node_partitioned_batches
+from repro.models import vision_small
+from repro.sim import (Distribution, EventQueue, Fleet, FleetSpec,
+                       SCENARIOS, VirtualClock, parse_scenario, simulate)
+
+N = 6
+
+
+def _testbed(seed=0):
+    topo = topology.ring(N)
+    (xtr, ytr), _ = classification_dataset(16, 3, 600, 100, seed=seed)
+    p0 = vision_small.mlr_init(jax.random.PRNGKey(seed), 16, 3)
+    stack = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (N,) + p.shape), p0)
+    grad_fn = vision_small.make_stacked_grad_fn(vision_small.mlr_apply)
+    batches = node_partitioned_batches(xtr, ytr, N, 8, seed=seed)
+    return topo, stack, grad_fn, batches
+
+
+def _run(scenario, rounds=24, algorithm="sdm-dsgd", seed=0, **kw):
+    topo, stack, grad_fn, batches = _testbed(seed=seed)
+    cfg = SDMConfig(p=0.4, theta=0.3, gamma=0.1, sigma=0.0)
+    return simulate(topo=topo, algorithm=algorithm, sdm_cfg=cfg,
+                    params_stack=stack, grad_fn=grad_fn, batches=batches,
+                    rounds=rounds, scenario=scenario, seed=seed, **kw)
+
+
+# ---- virtual clock / event queue ------------------------------------------
+
+def test_clock_rejects_backwards_time():
+    clock = VirtualClock()
+    clock.advance_to(2.0)
+    with pytest.raises(ValueError, match="backwards"):
+        clock.advance_to(1.0)
+
+
+def test_equal_time_events_order_by_insertion():
+    q = EventQueue()
+    q.push(1.0, "b")
+    q.push(1.0, "a")
+    q.push(0.5, "c")
+    clock = VirtualClock()
+    out = clock.drain(q, until=2.0)
+    assert [e.kind for e in out] == ["c", "b", "a"]
+    assert [e.seq for e in out] == [2, 0, 1]
+    assert clock.now == pytest.approx(1.0)
+
+
+def test_drain_respects_horizon():
+    q = EventQueue()
+    q.push(1.0, "x")
+    q.push(3.0, "y")
+    clock = VirtualClock()
+    assert [e.kind for e in clock.drain(q, until=2.0)] == ["x"]
+    assert len(q) == 1
+
+
+# ---- fleet model -----------------------------------------------------------
+
+def test_distribution_parse_grammar():
+    assert Distribution.parse("const:2.5").sample(
+        np.random.default_rng(0)) == 2.5
+    assert Distribution.parse(3).kind == "const"
+    with pytest.raises(ValueError, match="unknown distribution"):
+        Distribution.parse("zipf:1")
+    with pytest.raises(ValueError, match="arg"):
+        Distribution.parse("uniform:1")
+
+
+def test_scenario_grammar_and_presets():
+    spec = parse_scenario("q=0.8,deadline=1.5,straggle=0.25x8,"
+                          "dropout=0.05,churn=0.02:5")
+    assert spec.participation_q == 0.8
+    assert spec.deadline == 1.5
+    assert spec.straggler_frac == 0.25 and spec.straggler_slowdown == 8.0
+    assert spec.dropout == 0.05
+    assert spec.churn == 0.02 and spec.churn_min_down == 5
+    assert not SCENARIOS["no-fault"].faulty
+    assert parse_scenario("STRAGGLER") is SCENARIOS["straggler"]
+    with pytest.raises(ValueError, match="unknown scenario key"):
+        parse_scenario("latency=1")
+    with pytest.raises(ValueError, match="q must be"):
+        parse_scenario("q=0")
+
+
+def test_fleet_is_deterministic_per_seed():
+    a = Fleet(8, "dropout", seed=5)
+    b = Fleet(8, "dropout", seed=5)
+    np.testing.assert_array_equal(a.bandwidth, b.bandwidth)
+    for _ in range(20):
+        pa = a.sample_participants()
+        np.testing.assert_array_equal(pa, b.sample_participants())
+        np.testing.assert_array_equal(a.sample_dropouts(pa),
+                                      b.sample_dropouts(pa))
+    c = Fleet(8, "dropout", seed=6)
+    assert not np.array_equal(a.bandwidth, c.bandwidth)
+
+
+def test_participation_never_drops_below_two():
+    fleet = Fleet(4, "q=0.01", seed=0)
+    for _ in range(50):
+        assert int(fleet.sample_participants().sum()) >= 2
+
+
+def test_churn_keeps_two_nodes_up():
+    fleet = Fleet(4, "churn=0.9:1", seed=0)
+    for t in range(100):
+        fleet.churn_step(t)
+        assert int(fleet.up.sum()) >= 2
+
+
+# ---- the simulator ---------------------------------------------------------
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_every_scenario_trains(scenario):
+    res = _run(scenario)
+    r = res.result
+    assert res.rounds == 24
+    assert r.losses[-1] < r.losses[0]
+    # the virtual clock moves forward and the per-round column lines up
+    assert len(r.sim_time_s) == 24
+    assert all(b >= a for a, b in zip(r.sim_time_s, r.sim_time_s[1:]))
+    assert res.sim_seconds == pytest.approx(r.sim_time_s[-1])
+    # wire accounting is cumulative and only counts delivered payloads
+    assert all(b >= a for a, b in zip(r.comm_bits, r.comm_bits[1:]))
+
+
+@pytest.mark.parametrize("scenario", ["straggler", "dropout", "churn"])
+def test_same_seed_replays_bit_identically(scenario):
+    r1 = _run(scenario, rounds=16)
+    r2 = _run(scenario, rounds=16)
+    assert r1.trace_signature == r2.trace_signature
+    for a, b in zip(jax.tree.leaves(r1.final_params),
+                    jax.tree.leaves(r2.final_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert r1.result.losses == r2.result.losses
+    assert r1.result.comm_bits == r2.result.comm_bits
+
+
+def test_different_seed_changes_the_trace():
+    r1 = _run("dropout", rounds=16, seed=0)
+    r2 = _run("dropout", rounds=16, seed=1)
+    assert r1.trace_signature != r2.trace_signature
+
+
+def test_straggler_scenario_counts_and_bounds_rounds():
+    res = _run("straggler")
+    assert res.straggler_rounds > 0
+    # the deadline closes every round: simulated time is bounded by it
+    deadline = SCENARIOS["straggler"].deadline
+    assert res.sim_seconds <= res.rounds * deadline + 1e-9
+    # a withheld payload is never charged: strictly fewer wire bits than
+    # the same fleet with no deadline
+    free = _run("straggle=0.25x6")         # same stragglers, no deadline
+    assert res.result.comm_bits[-1] < free.result.comm_bits[-1]
+    assert res.sim_seconds < free.sim_seconds
+
+
+def test_dropout_scenario_counts_dead_nodes():
+    res = _run("dropout")
+    assert res.dropout_rounds > 0
+    kinds = {ev.kind for ev in res.trace}
+    assert "drop" in kinds and "round-close" in kinds
+
+
+def test_churn_recompiles_membership_segments():
+    res = _run("churn=0.2:3", rounds=20)
+    assert res.recompiles >= 1
+    kinds = [ev.kind for ev in res.trace]
+    assert "recompile" in kinds
+    assert ("leave" in kinds) or ("join" in kinds)
+    # membership changes never abort training
+    assert res.result.losses[-1] < res.result.losses[0]
+
+
+def test_absolute_state_methods_degrade_stragglers():
+    """dsgd has no differential buffer: stragglers fall out of the round
+    instead of going stale, and the run still trains."""
+    res = _run("straggler", algorithm="dsgd")
+    assert res.straggler_rounds > 0
+    assert res.result.losses[-1] < res.result.losses[0]
+
+
+def test_round_close_events_match_rounds():
+    res = _run("no-fault", rounds=12)
+    closes = [ev for ev in res.trace if ev.kind == "round-close"]
+    assert len(closes) == 12
+    assert [dict(ev.data)["t"] for ev in closes] == list(range(12))
+    times = [ev.time for ev in res.trace]
+    assert all(b >= a - 1e-12 for a, b in zip(times, times[1:]))
+
+
+def test_partial_participation_amplifies_privacy():
+    pp = PrivacyParams(G=5.0, m=100, tau=8 / 100, p=0.4, sigma=2.0)
+    full = _run("no-fault", rounds=10, privacy=pp)
+    part = _run("q=0.5", rounds=10, privacy=pp)
+    assert len(full.result.epsilons) == len(part.result.epsilons) == 10
+    assert part.result.epsilons[-1] < full.result.epsilons[-1]
+    # exactly the q^2 subsampled-RDP factor on the eps-part
+    eps_t = 1.0
+    assert (part.result.epsilons[-1] - eps_t / 2) == pytest.approx(
+        0.25 * (full.result.epsilons[-1] - eps_t / 2), rel=1e-9)
+
+
+def test_target_loss_records_simulated_seconds():
+    res = _run("no-fault", rounds=24, target_loss=1e9)
+    assert res.rounds_to_target == 1
+    assert res.time_to_target == pytest.approx(res.result.sim_time_s[0])
+    never = _run("no-fault", rounds=8, target_loss=-1.0)
+    assert never.time_to_target is None and never.rounds_to_target is None
+
+
+def test_topology_spec_string_and_node_mismatch():
+    topo, stack, grad_fn, batches = _testbed()
+    cfg = SDMConfig(p=0.4, theta=0.3, gamma=0.1, sigma=0.0)
+    res = simulate(topo="ring", algorithm="sdm-dsgd", sdm_cfg=cfg,
+                   params_stack=stack, grad_fn=grad_fn, batches=batches,
+                   rounds=4, scenario="no-fault", seed=0)
+    assert res.rounds == 4
+    with pytest.raises(ValueError, match="nodes"):
+        simulate(topo=topology.ring(4), algorithm="sdm-dsgd", sdm_cfg=cfg,
+                 params_stack=stack, grad_fn=grad_fn, batches=batches,
+                 rounds=2)
+
+
+def test_segment_cap_bounds_compiled_sequence_length():
+    """max_segment caps how long one compiled ScheduleSequence gets; the
+    run still covers every round across segments."""
+    res = _run("dropout", rounds=9, max_segment=4)
+    assert res.rounds == 9
+    assert res.recompiles >= 2      # ceil(9/4) - 1 segments after the first
+
+
+def test_no_fault_matches_base_topology_weights():
+    """Full-participation rounds mix with the BASE graph's own weights —
+    the sim introduces no masking artifacts when nothing faults."""
+    from repro.core import gossip
+
+    topo = topology.ring(N)
+    seq = gossip.sequence_from_active_sets(topo, [range(N)] * 3)
+    for s in seq.schedules:
+        np.testing.assert_array_equal(s.dense_weights(), topo.weights)
+    with pytest.raises(ValueError, match="active set"):
+        gossip.sequence_from_active_sets(topo, [])
+
+
+def test_fleet_spec_validation():
+    with pytest.raises(ValueError, match="slowdown"):
+        FleetSpec(straggler_slowdown=0.5)
+    with pytest.raises(ValueError, match="deadline"):
+        FleetSpec(deadline=0.0)
+    with pytest.raises(ValueError, match="dropout"):
+        FleetSpec(dropout=1.5)
+    with pytest.raises(ValueError, match="min-down"):
+        FleetSpec(churn_min_down=0)
