@@ -1,0 +1,109 @@
+"""Perf-smoke comparator: BENCH_perf.json vs the checked-in baseline.
+
+CI runs ``python -m benchmarks.check_perf`` right after the wire-plane
+perf snapshot. It fails the build when the compiled-HLO structure
+regresses past threshold:
+
+* ``permutes_per_step`` may NEVER grow — collectives serialize the
+  wire; one extra permute per step is a real latency regression on any
+  topology (exact match required, they are schedule-derived integers).
+* ``launches`` may grow at most ``LAUNCH_TOL`` (relative) + slack —
+  kernel-launch counts wobble by a couple of fusions across XLA
+  versions, structural blowups (per-leaf loops, un-fused chains) don't.
+* ``wire_bits_hlo`` may never grow for deterministic wire formats —
+  payload bytes are the paper's whole point.
+
+It also pins the FUSED-path wins so they cannot silently rot:
+
+* ``qsgdf`` (fused single-buffer quantizer) must stay STRICTLY below
+  its unfused qsgd counterpart on both launches and permutes_per_step;
+* the fixed-k gather-pack path must stay at most its baseline count
+  (on this CPU host the interpret-mode kernel inlines to the identical
+  HLO, so equality — not reduction — is the honest gate there);
+* every ``overlap=True`` record must report ``overlap_efficiency`` > 0.
+
+Baseline refresh (intentional structure changes): run
+``BENCH_PERF_OUT=benchmarks/baselines/perf_wire.json python -m
+benchmarks.perf_wire`` and commit the diff with the PR that changes the
+structure.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                        "perf_wire.json")
+LAUNCH_TOL = 0.10          # +10%
+LAUNCH_SLACK = 2           # plus two launches of absolute wobble
+
+#: fused case -> unfused counterpart whose cost it must strictly beat
+FUSED_BEATS = {
+    "sdm-dsgd/ring/qsgdf:4": "sdm-dsgd/ring/qsgd:4",
+}
+
+
+def check(bench_path: str = "BENCH_perf.json",
+          baseline_path: str = BASELINE) -> list:
+    with open(baseline_path) as f:
+        base = {r["case"]: r for r in json.load(f)["records"]}
+    with open(bench_path) as f:
+        bench = json.load(f)
+    cur = {r["case"]: r for r in bench["records"]}
+
+    failures = []
+    for case, b in base.items():
+        c = cur.get(case)
+        if c is None:
+            failures.append(f"{case}: present in baseline, missing from "
+                            f"{bench_path}")
+            continue
+        if c["permutes_per_step"] > b["permutes_per_step"]:
+            failures.append(
+                f"{case}: permutes_per_step {c['permutes_per_step']} > "
+                f"baseline {b['permutes_per_step']}")
+        cap = int(b["launches"] * (1 + LAUNCH_TOL)) + LAUNCH_SLACK
+        if c["launches"] > cap:
+            failures.append(f"{case}: launches {c['launches']} > cap {cap} "
+                            f"(baseline {b['launches']})")
+        if c["wire_bits_hlo"] > b["wire_bits_hlo"] \
+                and c["wire_bits_acc"] == b["wire_bits_acc"]:
+            failures.append(
+                f"{case}: wire_bits_hlo {c['wire_bits_hlo']} > baseline "
+                f"{b['wire_bits_hlo']} at unchanged accounting")
+
+    for fused, unfused in FUSED_BEATS.items():
+        f_rec, u_rec = cur.get(fused), base.get(unfused)
+        if f_rec is None or u_rec is None:
+            failures.append(f"fused-beats pair missing: {fused} / {unfused}")
+            continue
+        if f_rec["launches"] >= u_rec["launches"]:
+            failures.append(
+                f"{fused}: launches {f_rec['launches']} not below unfused "
+                f"{unfused} baseline {u_rec['launches']}")
+        if f_rec["permutes_per_step"] >= u_rec["permutes_per_step"]:
+            failures.append(
+                f"{fused}: permutes_per_step {f_rec['permutes_per_step']} "
+                f"not below unfused {u_rec['permutes_per_step']}")
+
+    for case, c in cur.items():
+        if c.get("overlap") and not c.get("overlap_efficiency", 0) > 0:
+            failures.append(f"{case}: overlap=True but overlap_efficiency="
+                            f"{c.get('overlap_efficiency')}")
+    return failures
+
+
+def main(argv: list) -> int:
+    bench_path = argv[1] if len(argv) > 1 else "BENCH_perf.json"
+    failures = check(bench_path)
+    if failures:
+        for msg in failures:
+            print(f"PERF-REGRESSION {msg}")
+        return 1
+    print(f"perf-smoke OK: {bench_path} within {BASELINE} thresholds")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

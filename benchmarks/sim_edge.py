@@ -45,13 +45,25 @@ ROUNDS = 60
 BATCH_PER_NODE = 16
 M_LOCAL = 2000 // N_NODES
 
+_SDM_PRIVACY = PrivacyParams(G=5.0, m=M_LOCAL, tau=BATCH_PER_NODE / M_LOCAL,
+                             p=0.4, sigma=1.0)
+
 METHODS = {
-    # (cfg, privacy): dsgd releases every coordinate (p=1), SDM only p
-    "sdm-dsgd": (SDMConfig(p=0.4, theta=0.3, gamma=0.1, sigma=1.0,
+    # label -> (algorithm, cfg, privacy): dsgd releases every coordinate
+    # (p=1), SDM only p. sdm-dsgd+ov is the SAME wire format under the
+    # overlapped transport: one-step-stale mixing, so each node's round
+    # time is max(compute, transmit) instead of their sum — the simulated
+    # seconds-to-target show what hiding the wire under compute buys.
+    "sdm-dsgd": ("sdm-dsgd",
+                 SDMConfig(p=0.4, theta=0.3, gamma=0.1, sigma=1.0,
                            clip_c=5.0),
-                 PrivacyParams(G=5.0, m=M_LOCAL, tau=BATCH_PER_NODE / M_LOCAL,
-                               p=0.4, sigma=1.0)),
-    "dsgd": (SDMConfig(p=1.0, theta=1.0, gamma=0.1, sigma=1.0, clip_c=5.0),
+                 _SDM_PRIVACY),
+    "sdm-dsgd+ov": ("sdm-dsgd",
+                    SDMConfig(p=0.4, theta=0.3, gamma=0.1, sigma=1.0,
+                              clip_c=5.0, overlap=True),
+                    _SDM_PRIVACY),
+    "dsgd": ("dsgd",
+             SDMConfig(p=1.0, theta=1.0, gamma=0.1, sigma=1.0, clip_c=5.0),
              PrivacyParams(G=5.0, m=M_LOCAL, tau=BATCH_PER_NODE / M_LOCAL,
                            p=1.0, sigma=1.0)),
 }
@@ -69,9 +81,9 @@ def _testbed(seed=0):
 
 
 def _one(method: str, scenario: str, target_loss=None):
-    cfg, pp = METHODS[method]
+    algorithm, cfg, pp = METHODS[method]
     stack, grad_fn, batches = _testbed()
-    return simulate(topo=topology.ring(N_NODES), algorithm=method,
+    return simulate(topo=topology.ring(N_NODES), algorithm=algorithm,
                     sdm_cfg=cfg, params_stack=stack, grad_fn=grad_fn,
                     batches=batches, rounds=ROUNDS, scenario=scenario,
                     seed=0, privacy=pp, eps_target=1.0,

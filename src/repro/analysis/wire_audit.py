@@ -62,11 +62,13 @@ class AuditConfig:
     mode: str                     # gossip mode / compressor spec, "-" = dense
     sigma: float = 1.0
     expect_taint: bool = False    # True: the config is KNOWN non-private
+    overlap: bool = False         # one-step-stale overlapped transport
 
     @property
     def id(self) -> str:
         tag = "dirty" if self.expect_taint else f"sigma{self.sigma:g}"
-        return f"{self.method}/{self.topo}/{self.mode}/{tag}"
+        mode = self.mode + "+ov" if self.overlap else self.mode
+        return f"{self.method}/{self.topo}/{mode}/{tag}"
 
 
 #: the audited registry sweep: every method, every compressor family,
@@ -78,6 +80,15 @@ MATRIX: Tuple[AuditConfig, ...] = (
     AuditConfig("sdm-dsgd", "ring4", "fixedk_rows"),
     AuditConfig("sdm-dsgd", "ring4", "qsgd:8"),
     AuditConfig("sdm-dsgd", "ring4", "qsgd:4"),
+    # fused single-buffer quantizer (kernels/wire_compress): 1 payload
+    # leaf -> half the permutes of qsgd, same exact-bits contract
+    AuditConfig("sdm-dsgd", "ring4", "qsgdf:4"),
+    # overlapped one-step-stale transport: same permute count, same
+    # payload bits, zero findings — staleness is a trajectory property,
+    # not a wire property
+    AuditConfig("sdm-dsgd", "ring4", "fixedk_packed", overlap=True),
+    AuditConfig("sdm-dsgd", "ring4", "qsgdf:4", overlap=True),
+    AuditConfig("gradient-push", "dring4", "fixedk", overlap=True),
     AuditConfig("sdm-dsgd", "matchings4x2", "bernoulli"),
     AuditConfig("sdm-dsgd", "matchings4x2", "fixedk_packed"),
     AuditConfig("sdm-dsgd-fused", "ring4", "fixedk_packed"),
@@ -110,6 +121,7 @@ QUICK_IDS = frozenset({
     "dsgd/ring4/-/sigma1",
     "gradient-push/dring4/fixedk/sigma1",
     "sdm-dsgd/subring4x3/fixedk_packed/sigma1",
+    "sdm-dsgd/ring4/fixedk_packed+ov/sigma1",
     "allreduce/ring4/-/dirty",
 })
 
@@ -142,15 +154,17 @@ def parse_topo(spec: str) -> gossip.ScheduleSequence:
 
 def make_cfg(ac: AuditConfig, meth):
     if meth.config_cls is sdm_dsgd.SDMConfig:
-        kw = dict(p=0.25, theta=0.15, gamma=0.2, sigma=ac.sigma, clip_c=1.0)
-        if ac.mode.startswith("qsgd:"):
+        kw = dict(p=0.25, theta=0.15, gamma=0.2, sigma=ac.sigma,
+                  clip_c=1.0, overlap=ac.overlap)
+        if ac.mode.split(":")[0] in ("qsgd", "qsgdf"):
             return meth.coerce_config(
                 sdm_dsgd.SDMConfig(compressor=ac.mode, **kw))
         return meth.coerce_config(sdm_dsgd.SDMConfig(mode=ac.mode, **kw))
     if meth.config_cls is gradient_push.GradientPushConfig:
         return gradient_push.GradientPushConfig(
             gamma=0.2, sigma=ac.sigma, clip_c=1.0,
-            compressor=None if ac.mode == "-" else ac.mode, p=0.25)
+            compressor=None if ac.mode == "-" else ac.mode, p=0.25,
+            overlap=ac.overlap)
     return baselines.DSGDConfig(gamma=0.2, sigma=ac.sigma, clip_c=1.0)
 
 
@@ -172,6 +186,8 @@ def expected_permutes(meth_name: str, mode: str, seq) -> int:
         leaves = 2 if (meth_name == "gradient-push"
                        or base_mode == "qsgd") else 1
     else:
+        # includes "qsgdf": the fused single-buffer format embeds the
+        # norm in the byte payload, so ONE leaf — half of qsgd's wire
         leaves = 1
     extra = r if meth_name == "gradient-push" else 0
     return r * leaves + extra
@@ -252,7 +268,7 @@ def _exact_bits(meth, meth_name: str, mode: str, cfg, per_node, seq
     """
     base = mode.split(":")[0]
     if meth_name.startswith("sdm-dsgd") or meth_name == "dc-dsgd":
-        if base in ("fixedk_packed", "fixedk_rows", "qsgd"):
+        if base in ("fixedk_packed", "fixedk_rows", "qsgd", "qsgdf"):
             return int(sdm_dsgd.transmitted_bits_per_step(
                 per_node, cfg, seq=seq))
         return None
@@ -265,6 +281,12 @@ def _wire_findings(ac: AuditConfig, meth, seq, cfg, hlo, per_node) -> List:
     findings: List[dict] = []
     payloads = hlo_analysis.permute_payloads(hlo)
     cperm = hlo_analysis.collective_permute_count(hlo)
+    # async overlap lowering must keep start/done pairs balanced — an
+    # unmatched start is a permute whose result is never consumed
+    for kind, pair in hlo_analysis.async_collective_pairs(hlo).items():
+        if pair["start"] != pair["done"]:
+            findings.append({"kind": "async-pair-imbalance", "op": kind,
+                             "got": pair})
     spec = plane_mod.ParamPlane.for_tree(per_node)
     (p_rows, p_lane), = spec.plane_shapes()
     plane_elems = p_rows * p_lane

@@ -52,6 +52,7 @@ from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import sparsifier
 
@@ -62,6 +63,7 @@ __all__ = [
     "FixedKCompressor",
     "RowsCompressor",
     "QSGDCompressor",
+    "FusedQSGDCompressor",
     "make",
     "names",
     "register",
@@ -482,6 +484,83 @@ class QSGDCompressor(Compressor):
         return d * self.bits + 32
 
 
+@dataclasses.dataclass(frozen=True)
+class FusedQSGDCompressor(QSGDCompressor):
+    """QSGD with the quantize+pack chain fused into ONE pallas launch
+    and the norm EMBEDDED in the byte payload (single wire leaf).
+
+    Same mechanism, same bits-on-the-wire accounting as ``qsgd`` — the
+    stochastic levels are BIT-IDENTICAL (uniforms drawn at the canonical
+    plane shape outside the kernel; see kernels/wire_compress) — but the
+    wire format changes in two launch-count-relevant ways:
+
+    * the multi-kernel XLA quantize/offset/shift-or chain collapses into
+      one ``kernels.wire_compress.qsgd_pack`` pallas call per plane;
+    * the f32 norm rides as 4 bitcast bytes appended to the value
+      buffer, so the payload is ONE u8 leaf instead of (values, scale) —
+      halving collective-permutes per gossip round. ``wire_bits`` is
+      inherited unchanged: ceil(d/k)*8 + 32 packed (k = 8/bits) and
+      d*8 + 32 for bits=8 are exactly the single-buffer byte count.
+
+    bits=8 consequently ships OFFSET-encoded u8 (q + s) rather than
+    int8; roundtrip values stay bit-identical to ``qsgd:8``. Odd widths
+    have no exact byte image, hence bits in {2, 4, 8} only.
+    """
+
+    name: str = dataclasses.field(default="qsgdf", init=False, repr=False)
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        if self.bits not in (2, 4, 8):
+            raise ValueError(
+                "qsgdf bits must be in {2, 4, 8}: the fused single-buffer "
+                "format needs an exact byte image")
+
+    def compress(self, key, x, *, node=None) -> Payload:
+        from repro.kernels import wire_compress   # lazy: core -> kernels
+        xf = x.astype(jnp.float32)
+        norm = jnp.sqrt(jnp.sum(jnp.square(xf)))
+        u = jax.random.uniform(key, x.shape)   # canonical-shape draw
+        data = wire_compress.qsgd_pack(xf, u, norm, bits=self.bits)
+        tail = jax.lax.bitcast_convert_type(norm, jnp.uint8)   # (4,) bytes
+        return Payload(values=jnp.concatenate([data, tail]),
+                       shape=tuple(x.shape), meta=("qsgdf", self.bits))
+
+    def decompress(self, payload: Payload) -> jax.Array:
+        bits = payload.meta[1]
+        s = float(2 ** (bits - 1) - 1)
+        v = payload.values
+        # scalar-indexed little-endian reassembly of the f32 norm: stays
+        # an elementwise graph the consumers can fuse (a (4,)u8 -> f32
+        # bitcast lowers to its own reduce-style fusion on CPU).
+        w32 = sum(v[i - 4].astype(jnp.uint32) << (8 * (i))
+                  for i in range(4))
+        norm = jax.lax.bitcast_convert_type(w32, jnp.float32)
+        d = int(math.prod(payload.shape))
+        k = 8 // bits if bits in (2, 4) else 1
+        shape = payload.shape
+        if k == 1:
+            q = (v[:d].astype(jnp.int32) - int(s)).reshape(shape)
+        elif len(shape) == 2 and shape[-1] % k == 0:
+            # lane-aligned planes (the wire transport's only shape):
+            # unpack AT the output shape via a broadcast shift — element
+            # (r, c) is byte (r, c//k) >> ((c % k) * bits). Fuses into
+            # one loop fusion with the scale multiply, unlike the
+            # stack/reshape/slice chain of the generic path.
+            rows, cols = shape
+            b2 = v[:d // k].astype(jnp.int32).reshape(rows, cols // k)
+            sh = jnp.asarray((np.arange(cols) % k) * bits, jnp.int32)
+            rep = jnp.broadcast_to(b2[:, :, None],
+                                   (rows, cols // k, k)).reshape(rows, cols)
+            q = ((rep >> sh[None, :]) & ((1 << bits) - 1)) - int(s)
+        else:
+            mask = (1 << bits) - 1
+            data = v[:-4].astype(jnp.int32)
+            parts = [(data >> (j * bits)) & mask for j in range(k)]
+            q = (jnp.stack(parts, axis=1).reshape(-1)[:d]
+                 - int(s)).reshape(shape)
+        return (norm / s) * q.astype(jnp.float32)
+
 
 # ==========================================================================
 # Registry + CLI spec parsing.
@@ -507,6 +586,8 @@ register("block", lambda p, arg=None: FixedKCompressor(
 register("rows", lambda p, arg=None: RowsCompressor(p=p))
 register("qsgd", lambda p, arg=None: QSGDCompressor(
     p=p, bits=int(arg) if arg else 8))
+register("qsgdf", lambda p, arg=None: FusedQSGDCompressor(
+    p=p, bits=int(arg) if arg else 4))
 
 
 def make(spec: str, p: "float | Tuple[float, ...]" = 0.2) -> Compressor:

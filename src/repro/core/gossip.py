@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from fractions import Fraction
 from typing import Sequence, Tuple
 
@@ -59,6 +60,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sparsifier, tagging
+
+# Fused sender-side fixed-k packing (kernels/wire_compress gather+scale
+# pallas kernel) for the static scalar-p payload path. Bit-exact to the
+# unfused jnp gather, so this is a launch-count knob, never a trajectory
+# knob; REPRO_FUSED_PACK=0 is the escape hatch.
+FUSED_PACK = os.environ.get("REPRO_FUSED_PACK", "1") != "0"
 
 __all__ = [
     "mix_dense",
@@ -771,7 +778,16 @@ def _packed_selection(db: jax.Array, p, me, *, base_key: jax.Array,
         scale = nb_blocks / kb
     my_idx = sparsifier.fixedk_indices(
         node_round_key(base_key, me, step), nb_blocks, kb)
-    my_vals = (jnp.take(db, my_idx, axis=0) * scale).astype(db.dtype)
+    if FUSED_PACK and not isinstance(p, tuple) and db.ndim == 2 \
+            and db.dtype == jnp.float32:
+        # fused sender-side pack: gather + contraction scale in ONE
+        # pallas launch (bit-exact to the jnp pair below, so enabling
+        # it never changes a trajectory). The het-p path keeps the jnp
+        # ops: its scale is a traced per-node mask, not a static scalar.
+        from repro.kernels import wire_compress   # lazy: core -> kernels
+        my_vals = wire_compress.fixedk_gather_pack(db, my_idx, scale=scale)
+    else:
+        my_vals = (jnp.take(db, my_idx, axis=0) * scale).astype(db.dtype)
     return kb, my_idx, my_vals
 
 

@@ -111,12 +111,27 @@ class GradientPushConfig:
     compressor: str | None = None
     p: "float | Tuple[float, ...]" = 0.2
     chi: float = 0.3
+    # Overlapped transport (one-step-stale, compressed variant only): the
+    # differential payload exchanged at step t lands in a pending double
+    # buffer and folds into the neighbour sum s at step t+1, so the
+    # permutes can hide under the gradient computation. Only the PAYLOAD
+    # planes go stale; the scalar mass w (a few bytes) stays synchronous,
+    # so z = x / w de-biasing is unchanged. Mass conservation holds in
+    # the delayed telescoping sense: the in-flight increments carry the
+    # missing mass and land exactly one step later. Static (non-replica)
+    # schedules only.
+    overlap: bool = False
 
     def __post_init__(self) -> None:
         if isinstance(self.p, (list, tuple)):
             object.__setattr__(self, "p", tuple(float(v) for v in self.p))
         if not (0.0 < self.chi <= 1.0):
             raise ValueError("chi in (0, 1]")
+        if self.overlap and self.compressor is None:
+            raise ValueError(
+                "overlap=True is a differential-transport feature: the "
+                "uncompressed push mixes ABSOLUTE state, which has no "
+                "S(0)=0 staleness invariant — set a compressor")
         if self.compressor is not None:
             compressor_mod.make(self.compressor, p=self.p)  # fail fast
 
@@ -137,6 +152,9 @@ class GradientPushState(NamedTuple):
     xhat_nb: PyTree = None  # per-neighbour replica stack (compressed AND
     #                         genuinely time-varying only; leading
     #                         (n_replicas,) axis per leaf)
+    nb: PyTree = None  # overlapped-transport pending increments (cfg.overlap
+    #                    only): last step's weighted differential deliveries,
+    #                    folded into s one step late
 
 
 def _debias(x_tree: PyTree, w) -> PyTree:
@@ -186,6 +204,9 @@ class GradientPushReference:
         # round-invariant — and stays the byte-identical fast path there).
         self.replica_exact = (self.comp is not None
                               and gossip.needs_replicas(self.seq))
+        if cfg.overlap and gossip.needs_replicas(self.seq):
+            raise ValueError(
+                "overlap=True needs a static (non-replica) schedule")
 
     def init(self, params_stack: PyTree) -> GradientPushState:
         n = jax.tree.leaves(params_stack)[0].shape[0]
@@ -207,7 +228,9 @@ class GradientPushReference:
             lambda x: gossip.apply_weights_dense(
                 self.weights, x, include_self=False).astype(x.dtype),
             params_stack)
-        return base._replace(xhat=params_stack, s=s0)
+        nb = jax.tree.map(jnp.zeros_like, params_stack) \
+            if self.cfg.overlap else None
+        return base._replace(xhat=params_stack, s=s0, nb=nb)
 
     def step(self, state: GradientPushState, grad_fn, batch_stack: PyTree,
              key: jax.Array) -> Tuple[GradientPushState, PyTree]:
@@ -243,6 +266,15 @@ class GradientPushReference:
             s = jax.tree.map(
                 lambda xh: gossip.apply_weights_dense(
                     p_t, xh, include_self=False).astype(xh.dtype), xhat)
+        elif cfg.overlap:
+            # one-step-stale: consume LAST step's pending weighted
+            # increments; this step's deliveries wait in the double
+            # buffer (weights of the round the payload crossed).
+            s = jax.tree.map(jnp.add, state.s, state.nb)
+            nb = jax.tree.map(
+                lambda dh, s_: gossip.apply_weights_dense(
+                    p_t, dh, include_self=False).astype(s_.dtype),
+                delta_hat, s)
         else:
             # incremental neighbour sum: the weights of the round the
             # differential was exchanged in (matches the distributed
@@ -261,7 +293,8 @@ class GradientPushReference:
             x_half, xhat, s)
         w = state.w + cfg.chi * (p_t @ state.w - state.w)
         return GradientPushState(x=x, w=w, step=state.step + 1, xhat=xhat,
-                                 s=None if self.replica_exact else s), aux
+                                 s=None if self.replica_exact else s,
+                                 nb=nb if cfg.overlap else None), aux
 
     def consensus_mean(self, state: GradientPushState) -> PyTree:
         """sum_i x_i / sum_i w_i — exact by mass conservation (the
@@ -285,7 +318,8 @@ def init_push_state(params: PyTree) -> GradientPushState:
 
 
 def init_compressed_push_state(params: PyTree, nb_row_sum,
-                               n_replicas: int | None = None
+                               n_replicas: int | None = None,
+                               overlap: bool = False
                                ) -> GradientPushState:
     """Compressed-variant per-node state. ``nb_row_sum`` is the node's
     sum_{j != i} P_ij (from ``PermuteSchedule.neighbor_weight_sums()``;
@@ -297,6 +331,9 @@ def init_compressed_push_state(params: PyTree, nb_row_sum,
     the shape the compressed differential transport consumes."""
     xp = plane_mod.ParamPlane.for_tree(params).pack(params)
     if n_replicas:
+        if overlap:
+            raise ValueError("overlap=True needs a static (non-replica) "
+                             "schedule")
         # replica path: s is recomputed fresh from xhat_nb every step and
         # never read from state — drop the buffer (one model-size saving
         # per node on top of the replica stack).
@@ -305,9 +342,10 @@ def init_compressed_push_state(params: PyTree, nb_row_sum,
                                  xhat=xp, s=None,
                                  xhat_nb=_replica_planes(xp, n_replicas))
     s0 = tuple(nb_row_sum * p for p in xp)
+    nb0 = tuple(jnp.zeros_like(p) for p in xp) if overlap else None
     return GradientPushState(x=params, w=jnp.ones((), jnp.float32),
                              step=jnp.zeros((), jnp.int32),
-                             xhat=xp, s=s0)
+                             xhat=xp, s=s0, nb=nb0)
 
 
 def gradient_push_distributed_step(state: GradientPushState, grads: PyTree, *,
@@ -350,6 +388,9 @@ def gradient_push_distributed_step(state: GradientPushState, grads: PyTree, *,
 
     delta = tuple(h - xh for h, xh in zip(spec.pack(x_half), state.xhat))
     contract = lambda pl: _contract_payload(comp, pl, node=me)
+    if cfg.overlap and gossip.needs_replicas(seq):
+        raise ValueError("overlap=True needs a static (non-replica) "
+                         "schedule")
     if gossip.needs_replicas(seq):
         # replica-correct time-varying path: increments cross every UNION
         # edge every round (replicas exact by construction) and the
@@ -365,7 +406,7 @@ def gradient_push_distributed_step(state: GradientPushState, grads: PyTree, *,
         # NOT stored: replica-path state carries s=None (dead buffer).
         s = tuple(jnp.tensordot(wv.astype(xh.dtype), xh, axes=([0], [0]))
                   for xh in xhat_nb)
-        s_store = None
+        s_store = nb_store = None
     else:
         # the SAME plane payload transport (and key schedule) SDM's
         # qsgd path uses, contraction applied to each payload pre-wire.
@@ -375,7 +416,15 @@ def gradient_push_distributed_step(state: GradientPushState, grads: PyTree, *,
             node_index=node_index, transform=contract)
         xhat = tuple(xh + dh for xh, dh in zip(state.xhat, delta_hat))
         xhat_nb = state.xhat_nb
-        s = tuple(s_ + nb for s_, nb in zip(state.s, nb_sum))
+        if cfg.overlap:
+            # one-step-stale double buffer: consume last step's pending
+            # deliveries; this step's exchange result feeds ONLY the loop
+            # carry, so its permutes can fly under the next gradient.
+            s = tuple(s_ + p_ for s_, p_ in zip(state.s, state.nb))
+            nb_store = nb_sum
+        else:
+            s = tuple(s_ + nb for s_, nb in zip(state.s, nb_sum))
+            nb_store = None
         s_store = s
     # x <- x_half + chi ((P - I) xhat); mass rides the same damped
     # operator M = I + chi (P - I) so z = x / w stays de-biased.
@@ -383,4 +432,4 @@ def gradient_push_distributed_step(state: GradientPushState, grads: PyTree, *,
     x = jax.tree.map(jnp.add, x_half, spec.unpack(corr))
     w = state.w + cfg.chi * (w_push - state.w)
     return GradientPushState(x=x, w=w, step=state.step + 1, xhat=xhat,
-                             s=s_store, xhat_nb=xhat_nb)
+                             s=s_store, xhat_nb=xhat_nb, nb=nb_store)

@@ -384,6 +384,10 @@ def _coerce_sdm(cfg) -> sdm_dsgd.SDMConfig:
 def _sdm_fields(cfg, seq=None) -> Tuple[Tuple[str, str], ...]:
     if seq is not None and gossip.needs_replicas(seq):
         return _SDM_FIELDS + (("xhat", REPLICA),)
+    if cfg is not None and getattr(cfg, "overlap", False):
+        # overlapped transport: pending-received double buffer (one-step
+        # -stale neighbour increments, consumed by the NEXT advance).
+        return _SDM_FIELDS + (("nb", PLANE),)
     return _SDM_FIELDS
 
 
@@ -391,6 +395,8 @@ def _fused_fields(cfg, seq=None) -> Tuple[Tuple[str, str], ...]:
     base = (("x", PARAM), ("s", PLANE), ("step", COUNTER))
     if seq is not None and gossip.needs_replicas(seq):
         return base + (("xhat", REPLICA),)
+    if cfg is not None and getattr(cfg, "overlap", False):
+        return base + (("nb", PLANE),)
     return base
 
 
@@ -411,9 +417,11 @@ def _sdm_init_stacked(stack: PyTree, seq: gossip.ScheduleSequence, cfg
     s = tuple(w * p for p in xp)
     xhat = _stacked_plane_replicas(xp, seq) if gossip.needs_replicas(seq) \
         else None
+    nb = tuple(jnp.zeros_like(p) for p in xp) \
+        if getattr(cfg, "overlap", False) else None
     return sdm_dsgd.SDMState(
         x=stack, s=s, d=tuple(jnp.zeros_like(p) for p in xp),
-        step=_stacked_counter(n), xhat=xhat)
+        step=_stacked_counter(n), xhat=xhat, nb=nb)
 
 
 def _sdm_distributed(seq: gossip.ScheduleSequence, cfg, axis_name
@@ -422,7 +430,8 @@ def _sdm_distributed(seq: gossip.ScheduleSequence, cfg, axis_name
 
     def init(params, me):
         return sdm_dsgd.init_distributed_state(
-            params, seq.self_weight_of(me, 0), n_replicas=n_rep)
+            params, seq.self_weight_of(me, 0), n_replicas=n_rep,
+            overlap=getattr(cfg, "overlap", False))
 
     def step(state, grads_at, *, base_key, node_index=None):
         state = sdm_dsgd.distributed_advance(
@@ -440,7 +449,7 @@ def _sdm_distributed(seq: gossip.ScheduleSequence, cfg, axis_name
 def _fused_init_stacked(stack, seq, cfg) -> sdm_dsgd.SDMFusedState:
     full = _sdm_init_stacked(stack, seq, cfg)
     return sdm_dsgd.SDMFusedState(x=full.x, s=full.s, step=full.step,
-                                  xhat=full.xhat)
+                                  xhat=full.xhat, nb=full.nb)
 
 
 def _fused_distributed(seq, cfg, axis_name) -> DistributedExecutor:
@@ -448,7 +457,9 @@ def _fused_distributed(seq, cfg, axis_name) -> DistributedExecutor:
 
     def init(params, me):
         return sdm_dsgd.init_fused_state(params, seq.self_weight_of(me, 0),
-                                         n_replicas=n_rep)
+                                         n_replicas=n_rep,
+                                         overlap=getattr(cfg, "overlap",
+                                                         False))
 
     def step(state, grads_at, *, base_key, node_index=None):
         grads, aux = grads_at(state.x)
@@ -551,7 +562,8 @@ def _coerce_push(cfg) -> gradient_push.GradientPushConfig:
         # --compressor CLI axis); the legacy mode= spelling does not.
         return gradient_push.GradientPushConfig(
             gamma=cfg.gamma, sigma=cfg.sigma, clip_c=cfg.clip_c,
-            compressor=cfg.compressor, p=cfg.p)
+            compressor=cfg.compressor, p=cfg.p,
+            overlap=cfg.overlap and cfg.compressor is not None)
     if isinstance(cfg, baselines.DSGDConfig):
         return gradient_push.GradientPushConfig(
             gamma=cfg.gamma, sigma=cfg.sigma, clip_c=cfg.clip_c)
@@ -567,6 +579,8 @@ def _push_fields(cfg, seq=None) -> Tuple[Tuple[str, str], ...]:
             # no persistent s buffer, the replica stack replaces it.
             return base + (("xhat", PLANE), ("xhat_nb", REPLICA))
         base = base + (("xhat", PLANE), ("s", PLANE))
+        if getattr(cfg, "overlap", False):
+            base = base + (("nb", PLANE),)
     return base
 
 
@@ -583,7 +597,9 @@ def _push_init_stacked(stack, seq, cfg) -> gradient_push.GradientPushState:
     w0 = seq.schedules[0]
     rs = jnp.asarray(w0.neighbor_weight_sums(), jnp.float32)
     s0 = tuple(rs.reshape((n, 1, 1)) * p for p in xp)
-    return base._replace(xhat=xp, s=s0)
+    nb = tuple(jnp.zeros_like(p) for p in xp) \
+        if getattr(cfg, "overlap", False) else None
+    return base._replace(xhat=xp, s=s0, nb=nb)
 
 
 def _push_distributed(seq, cfg, axis_name) -> DistributedExecutor:
@@ -595,8 +611,9 @@ def _push_distributed(seq, cfg, axis_name) -> DistributedExecutor:
             return gradient_push.init_push_state(params)
         rs = jnp.asarray(seq.schedules[0].neighbor_weight_sums(),
                          jnp.float32)[me]
-        return gradient_push.init_compressed_push_state(params, rs,
-                                                        n_replicas=n_rep)
+        return gradient_push.init_compressed_push_state(
+            params, rs, n_replicas=n_rep,
+            overlap=getattr(cfg, "overlap", False))
 
     def step(state, grads_at, *, base_key, node_index=None):
         z = gradient_push._debias(state.x, state.w)

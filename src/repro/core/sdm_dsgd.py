@@ -121,6 +121,18 @@ class SDMConfig:
     # it — long-horizon drift. Structural evidence for the paper's
     # unbiasedness requirement; keep off for real training.
     error_feedback: bool = False
+    # Overlapped transport (one-step-stale gossip): the exchange issued
+    # at step t is NOT waited on inside step t — its weighted neighbour
+    # increments land in a pending double buffer (``SDMState.nb``) and
+    # are folded into s at step t+1, so the collective-permute can fly
+    # under the whole gradient computation instead of serializing with
+    # the mixing update. Because d_0 = 0 (S(0) = 0, the same invariant
+    # PR 7's withhold/defer staleness machinery relies on), neighbours
+    # always mix a one-step-stale but EXACT public copy — a principled,
+    # deterministic trajectory change, not a race. overlap=False is
+    # byte-identical to the historical step. Static (non-replica)
+    # schedules only.
+    overlap: bool = False
 
     def __post_init__(self) -> None:
         if self.compressor is not None:
@@ -128,7 +140,15 @@ class SDMConfig:
             # and read (mode, pack_block, qsgd_bits) off the object, so
             # per-family defaults cannot drift from compressor.make.
             comp = compressor_mod.make(self.compressor, p=self.p)
-            if isinstance(comp, compressor_mod.QSGDCompressor):
+            if isinstance(comp, compressor_mod.FusedQSGDCompressor):
+                # MUST precede the QSGDCompressor check (it is a
+                # subclass): the fused single-buffer format rides the
+                # generic payload transport, and mapping it to
+                # mode="qsgd" would make compressor_of rebuild a plain
+                # QSGDCompressor — silently dropping the fused wire.
+                object.__setattr__(self, "mode", "payload")
+                object.__setattr__(self, "qsgd_bits", comp.bits)
+            elif isinstance(comp, compressor_mod.QSGDCompressor):
                 object.__setattr__(self, "mode", "qsgd")
                 object.__setattr__(self, "qsgd_bits", comp.bits)
             elif isinstance(comp, compressor_mod.RowsCompressor):
@@ -218,6 +238,12 @@ class SDMState(NamedTuple):
     # public copy x_j exactly, so s is recomputed FRESH with the current
     # round's weights (true W(t)-mixing). Memory cost: deg_union x model.
     xhat: PyTree = None
+    # Overlapped transport double buffer (cfg.overlap only): the weighted
+    # neighbour increments received by the exchange issued THIS step,
+    # pending until the NEXT step folds them into s (one-step-stale
+    # gossip). Planes in the distributed executor; stacked tree in the
+    # reference.
+    nb: PyTree = None
 
 
 def _tree_zeros_like(t: PyTree) -> PyTree:
@@ -459,6 +485,11 @@ class ReferenceSimulator:
         # path (exact there, and byte-identical to the historical code).
         self.replica_exact = gossip.needs_replicas(self.seq)
         self.time_varying = self.seq.length > 1 and not self.replica_exact
+        if cfg.overlap and self.replica_exact:
+            raise ValueError(
+                "overlap=True is a static-schedule (non-replica) transport: "
+                "genuinely time-varying weights recompute s from replicas "
+                "every round and cannot consume increments one step late")
         wstack = self.seq.weights_stack()
         self._wstack = jnp.asarray(wstack, jnp.float32)   # (L, n, n)
         self.weights = self._wstack[0]
@@ -479,18 +510,21 @@ class ReferenceSimulator:
             # commit mixes the full dense W(t) fresh each round: the
             # reference replica path carries NO neighbour-sum buffer.
             s = None
-        elif self.time_varying:
+        elif self.time_varying or self.cfg.overlap:
             # incremental-s bookkeeping starts from the round-0 weights
             # (the distributed init does the same with (1 - W_ii(0)) x_0).
+            # The overlapped transport maintains s incrementally even on
+            # static graphs — the pending double buffer is an increment.
             s = jax.tree.map(
                 lambda x: gossip.apply_weights_dense(
                     self._wstack[0], x, include_self=False).astype(x.dtype),
                 params_stack)
         else:
             s = _tree_zeros_like(params_stack)
+        nb = _tree_zeros_like(params_stack) if self.cfg.overlap else None
         return SDMState(x=params_stack, s=s,
                         d=_tree_zeros_like(params_stack),
-                        step=jnp.zeros((), jnp.int32), e=e)
+                        step=jnp.zeros((), jnp.int32), e=e, nb=nb)
 
     # -- phase 1: everyone transmits S(d) and advances public copies ------
     def advance(self, state: SDMState, key: jax.Array) -> Tuple[SDMState, PyTree]:
@@ -522,6 +556,18 @@ class ReferenceSimulator:
         x = jax.tree.map(jnp.add, state.x, sd)
         new_e = jax.tree.map(jnp.subtract, d_in, sd) \
             if cfg.error_feedback else state.e
+        if cfg.overlap:
+            # one-step-stale: fold the increments received LAST step into
+            # s; this step's weighted increments (weights of the round
+            # the payload crossed) wait in the pending buffer until the
+            # next advance — exactly the distributed double buffer.
+            w_t = self._weights_at(state.step)
+            s = jax.tree.map(jnp.add, state.s, state.nb)
+            nb = jax.tree.map(
+                lambda v, s_: gossip.apply_weights_dense(
+                    w_t, v, include_self=False).astype(s_.dtype),
+                sd, s)
+            return state._replace(x=x, s=s, e=new_e, nb=nb), sd
         if self.time_varying:
             # fold this round's weighted increments into s — the weights
             # of the round the increment was EXCHANGED in, exactly what
@@ -546,8 +592,10 @@ class ReferenceSimulator:
             mixed = jax.tree.map(
                 lambda x: gossip.mix_dense(self._weights_at(state.step), x),
                 state.x)
-        elif self.time_varying:
-            # W~(t) x for node i = W_ii(t) x_i + s_i (s incremental).
+        elif self.time_varying or cfg.overlap:
+            # W~(t) x for node i = W_ii(t) x_i + s_i (s incremental; under
+            # overlap s carries the neighbours' one-step-STALE public
+            # copies — the delayed-W-mixing semantics).
             diag_w = jnp.diagonal(self._weights_at(state.step))
             mixed = jax.tree.map(
                 lambda x, s: diag_w.reshape(
@@ -607,7 +655,8 @@ def _replica_planes(planes: Tuple[jax.Array, ...], n_replicas: int
 
 
 def init_distributed_state(params: PyTree, self_weight,
-                           n_replicas: int | None = None) -> SDMState:
+                           n_replicas: int | None = None,
+                           overlap: bool = False) -> SDMState:
     """Per-node state. ``params`` has NO node axis here (each shard owns one).
 
     All nodes must start from IDENTICAL params (standard same-seed init);
@@ -629,8 +678,12 @@ def init_distributed_state(params: PyTree, self_weight,
     s0 = tuple((1.0 - self_weight) * p for p in xp)
     d0 = tuple(jnp.zeros_like(p) for p in xp)
     xhat = _replica_planes(xp, n_replicas) if n_replicas else None
+    if overlap and n_replicas:
+        raise ValueError("overlap=True needs a static (non-replica) "
+                         "schedule")
+    nb0 = tuple(jnp.zeros_like(p) for p in xp) if overlap else None
     return SDMState(x=params, s=s0, d=d0,
-                    step=jnp.zeros((), jnp.int32), xhat=xhat)
+                    step=jnp.zeros((), jnp.int32), xhat=xhat, nb=nb0)
 
 
 def _plane_payload_exchange(planes: Tuple[jax.Array, ...],
@@ -797,6 +850,9 @@ def distributed_advance(state: SDMState, *, base_key: jax.Array, axis_name,
     if gossip.needs_replicas(seq):
         # genuinely time-varying weights: replica-correct advance (exact
         # W(t)-mixing; state.xhat must have been allocated at init).
+        if cfg.overlap:
+            raise ValueError("overlap=True needs a static (non-replica) "
+                             "schedule")
         own, xhat, s = _replica_advance_exchange(
             state.d, state.xhat, seq=seq, axis_name=axis_name,
             base_key=base_key, step=state.step, cfg=cfg, me=me,
@@ -808,6 +864,17 @@ def distributed_advance(state: SDMState, *, base_key: jax.Array, axis_name,
         state.d, schedule=seq, axis_name=axis_name, base_key=base_key,
         step=state.step, cfg=cfg, me=me, node_index=node_index)
     x = jax.tree.map(jnp.add, state.x, spec.unpack(own))
+    if cfg.overlap:
+        # Overlapped transport: this step's mixing consumes the PENDING
+        # buffer (last step's exchange result) and the fresh exchange
+        # lands in the double buffer for the next step. Nothing after
+        # this point in the step reads ``nb``, so the permute's data
+        # dependency ends at the loop carry — XLA's async scheduler is
+        # free to issue collective-permute-start here and sink the
+        # matching -done past the entire gradient computation of the
+        # next iteration.
+        s = tuple(s_ + p_ for s_, p_ in zip(state.s, state.nb))
+        return state._replace(x=x, s=s, nb=nb)
     s = tuple(s_ + nb_ for s_, nb_ in zip(state.s, nb))
     return state._replace(x=x, s=s)
 
@@ -822,15 +889,21 @@ class SDMFusedState(NamedTuple):
     s: PyTree
     step: jax.Array
     xhat: PyTree = None
+    nb: PyTree = None   # overlap double buffer (see SDMState.nb)
 
 
 def init_fused_state(params: PyTree, self_weight,
-                     n_replicas: int | None = None) -> SDMFusedState:
+                     n_replicas: int | None = None,
+                     overlap: bool = False) -> SDMFusedState:
     xp = plane_mod.ParamPlane.for_tree(params).pack(params)
     s0 = tuple((1.0 - self_weight) * p for p in xp)
     xhat = _replica_planes(xp, n_replicas) if n_replicas else None
+    if overlap and n_replicas:
+        raise ValueError("overlap=True needs a static (non-replica) "
+                         "schedule")
+    nb0 = tuple(jnp.zeros_like(p) for p in xp) if overlap else None
     return SDMFusedState(x=params, s=s0, step=jnp.zeros((), jnp.int32),
-                         xhat=xhat)
+                         xhat=xhat, nb=nb0)
 
 
 def distributed_step_fused(state: SDMFusedState, grads: PyTree, *,
@@ -870,6 +943,9 @@ def distributed_step_fused(state: SDMFusedState, grads: PyTree, *,
     # NEXT round's graph).
     sp_step = state.step + 1
     if gossip.needs_replicas(seq):
+        if cfg.overlap:
+            raise ValueError("overlap=True needs a static (non-replica) "
+                             "schedule")
         own, xhat, s = _replica_advance_exchange(
             d, state.xhat, seq=seq, axis_name=axis_name, base_key=base_key,
             step=sp_step, cfg=cfg, me=me, node_index=node_index)
@@ -879,6 +955,10 @@ def distributed_step_fused(state: SDMFusedState, grads: PyTree, *,
         d, schedule=seq, axis_name=axis_name, base_key=base_key,
         step=sp_step, cfg=cfg, me=me, node_index=node_index)
     x = jax.tree.map(jnp.add, state.x, spec.unpack(own))
+    if cfg.overlap:
+        # one-step-stale double buffer (see distributed_advance).
+        s = tuple(s_ + p_ for s_, p_ in zip(state.s, state.nb))
+        return SDMFusedState(x=x, s=s, step=state.step + 1, nb=nb)
     s = tuple(s_ + nb_ for s_, nb_ in zip(state.s, nb))
     return SDMFusedState(x=x, s=s, step=state.step + 1)
 

@@ -1,0 +1,17 @@
+"""Fused wire-compressor pipeline (pallas): quantize+pack, gather+pack."""
+from .ops import fixedk_gather_pack, qsgd_pack
+from .ref import fixedk_gather_pack_ref, qsgd_decode_ref, qsgd_quantize_pack_ref
+from .wire_compress import (LANE, fixedk_gather_pack_pallas, pack_factor,
+                            qsgd_pack_pallas)
+
+__all__ = [
+    "LANE",
+    "pack_factor",
+    "qsgd_pack",
+    "qsgd_pack_pallas",
+    "qsgd_decode_ref",
+    "qsgd_quantize_pack_ref",
+    "fixedk_gather_pack",
+    "fixedk_gather_pack_pallas",
+    "fixedk_gather_pack_ref",
+]

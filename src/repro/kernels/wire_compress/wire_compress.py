@@ -1,0 +1,129 @@
+"""Fused wire-compressor kernels (quantize+pack, gather+pack) per plane.
+
+The unfused QSGD wire path is a multi-launch XLA chain per plane —
+abs/scale/floor/stochastic-round/clamp/sign ~6 elementwise kernels, then
+an offset-encode + k strided shift/or packing steps, then a SEPARATE f32
+scale leaf on the wire. ``qsgd_pack_pallas`` fuses the whole
+quantize → offset-encode → sub-byte-pack chain into ONE kernel over the
+(rows, 128) wire plane, emitting the u8 byte image directly; the caller
+appends the 4 norm bytes so scale and values share a single wire buffer
+(one collective-permute per round instead of two).
+
+Two stages deliberately stay OUTSIDE the kernel:
+
+* the uniform draw — ``jax.random.uniform(key, plane.shape)`` at the
+  CANONICAL plane-spec shape, so the PRNG-hygiene lint (analyzer
+  contract rule 3) sees the draw and the bits are bit-identical to the
+  unfused ``QSGDCompressor``;
+* the l2 norm — one whole-plane reduction whose in-kernel grid
+  accumulation would change the reduction ORDER vs XLA and break
+  bit-equality. The kernel receives 1/norm pre-scaled (``inv``).
+
+``fixedk_gather_pack_pallas`` fuses the fixed-k sender-side payload
+packing (gather kept blocks + contraction scale) into one launch — the
+``jnp.take * scale`` pair in ``gossip._packed_selection``. Bit-exact to
+the unfused ops, so trajectories are unchanged wherever it is enabled.
+
+Both kernels default to ``interpret=True`` (CPU CI); the byte image the
+pack kernel writes is lane-packed ``out[r, cb] = OR_j enc[r, cb*k+j] <<
+(j*bits)`` — exactly the unfused row-major flat byte order, asserted
+bit-for-bit in tests/test_plane.py. On real TPUs the sub-128-lane u8
+output tile and the strided lane slice are the known mosaic rough edges;
+a production port would pack ``k`` planes per grid step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.plane import LANE
+
+__all__ = ["qsgd_pack_pallas", "fixedk_gather_pack_pallas", "LANE",
+           "pack_factor"]
+
+
+def pack_factor(bits: int) -> int:
+    """u8 lanes per byte: 8/bits for sub-byte widths, else unpacked."""
+    return 8 // bits if bits in (2, 4) else 1
+
+
+def _qsgd_kernel(x_ref, u_ref, inv_ref, out_ref, *, bits: int):
+    s = float(2 ** (bits - 1) - 1)
+    xf = x_ref[...]
+    # the EXACT unfused arithmetic (compressor.QSGDCompressor.compress):
+    # floor + stochastic carry + clamp + sign, fused into one pass.
+    ratio = jnp.abs(xf) * inv_ref[0, 0]
+    level = jnp.floor(ratio)
+    level = level + (u_ref[...] < (ratio - level))
+    q = (jnp.sign(xf) * jnp.minimum(level, s)).astype(jnp.int32)
+    off = q + int(s)              # offset-encode to [0, 2s] < 2^bits
+    k = pack_factor(bits)
+    if k == 1:
+        out_ref[...] = off.astype(jnp.uint8)
+        return
+    # byte (r, cb) holds elements (r, cb*k + j), j in [0, k) — the
+    # unfused row-major flat pack order. The reshape is layout-free and
+    # the minor-axis picks fuse (a j::k strided slice would lower to a
+    # gather on CPU and break the single-loop fusion).
+    rows_blk = off.shape[0]
+    off3 = off.reshape(rows_blk, off.shape[1] // k, k)
+    byte = jnp.zeros(out_ref.shape, jnp.int32)
+    for j in range(k):
+        byte = byte | (off3[:, :, j] << (j * bits))
+    out_ref[...] = byte.astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def qsgd_pack_pallas(xf: jax.Array, u: jax.Array, inv: jax.Array, *,
+                     bits: int, interpret: bool = True) -> jax.Array:
+    """(rows, LANE) f32 plane + uniforms + (1, 1) 1/norm -> packed u8.
+
+    Output is (rows, LANE // pack_factor) u8 — the exact byte image the
+    unfused packer produces in row-major flat order (offset-encoded
+    q + s for bits=8).
+    """
+    rows, lane = xf.shape
+    assert lane == LANE, (xf.shape,)
+    k = pack_factor(bits)
+    block_rows = 8 if rows % 8 == 0 else 1
+    grid = (rows // block_rows,)
+    blk_in = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    kernel = functools.partial(_qsgd_kernel, bits=bits)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[blk_in, blk_in,
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((block_rows, LANE // k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE // k), jnp.uint8),
+        interpret=interpret,
+    )(xf, u, inv)
+
+
+def _gather_kernel(db_ref, idx_ref, out_ref, *, scale: float):
+    idx = idx_ref[...][:, 0]
+    out_ref[...] = jnp.take(db_ref[...], idx, axis=0) * scale
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def fixedk_gather_pack_pallas(db: jax.Array, idx: jax.Array, *,
+                              scale: float,
+                              interpret: bool = True) -> jax.Array:
+    """(nb, block) plane view + (kb,) i32 indices -> (kb, block) payload.
+
+    One launch for the sender-side fixed-k pack: gather the kept blocks
+    and apply the (static, scalar-p) unbiasedness scale — bit-exact to
+    ``jnp.take(db, idx, axis=0) * scale``. Whole-plane VMEM block (our
+    planes are small); the PrefetchScalarGridSpec one-row-per-grid-step
+    variant is the production TPU layout.
+    """
+    kb = idx.shape[0]
+    kernel = functools.partial(_gather_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((kb, db.shape[1]), db.dtype),
+        interpret=interpret,
+    )(db, idx.reshape(kb, 1))

@@ -19,7 +19,9 @@ from collections import defaultdict
 from typing import Dict, List
 
 __all__ = ["collective_bytes", "count_ops", "permute_payloads",
-           "collective_permute_count", "DTYPE_BYTES"]
+           "collective_permute_count", "instruction_counts",
+           "launch_count", "async_collective_pairs", "DTYPE_BYTES",
+           "LAUNCH_OPS"]
 
 DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -78,6 +80,60 @@ def collective_permute_count(hlo_text: str) -> int:
     plane bucket per exchange — NOT per pytree leaf.
     """
     return count_ops(hlo_text).get("collective-permute", 0)
+
+
+# Any HLO instruction line: `%name = <shape> opcode(operands), attrs`
+# where <shape> is `dtype[dims]{layout}` or a paren tuple of such (no
+# nested parens inside tuple shapes, so [^)]* is safe).
+_OPCODE_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"([a-z][a-z0-9-]*)\(")
+
+# What counts as a dispatched kernel launch for the perf-smoke metric:
+# fused elementwise kernels, opaque library calls, sorts (top-k), and
+# collectives. Async `-done` forms are completion markers of an already
+# counted `-start`, so they are excluded from the launch sum (but
+# reported distinctly by ``async_collective_pairs``).
+LAUNCH_OPS = ("fusion", "custom-call", "sort") + COLLECTIVES + tuple(
+    c + "-start" for c in COLLECTIVES)
+
+
+def instruction_counts(hlo_text: str) -> Dict[str, int]:
+    """Opcode -> instruction count over the whole module, PARSED from
+    instruction lines (not substring matches — operand references and
+    metadata cannot inflate the counts)."""
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OPCODE_RE.search(line)
+        if m:
+            counts[m.group(1)] += 1
+    return dict(counts)
+
+
+def launch_count(hlo_text: str) -> int:
+    """Dispatched-kernel proxy: fusions + custom-calls + sorts +
+    collectives (async pairs counted once, at the ``-start``)."""
+    counts = instruction_counts(hlo_text)
+    return sum(counts.get(op, 0) for op in LAUNCH_OPS)
+
+
+def async_collective_pairs(hlo_text: str) -> Dict[str, Dict[str, int]]:
+    """Per collective kind: sync instruction count and async start/done
+    counts, reported DISTINCTLY.
+
+    A well-formed module has start == done for every kind; the overlap
+    transport's acceptance check is that the pair count matches
+    ``expected_permutes`` exactly, same as the sync form.
+    """
+    counts = instruction_counts(hlo_text)
+    out: Dict[str, Dict[str, int]] = {}
+    for kind in COLLECTIVES:
+        sync = counts.get(kind, 0)
+        start = counts.get(kind + "-start", 0)
+        done = counts.get(kind + "-done", 0)
+        if sync or start or done:
+            out[kind] = {"sync": sync, "start": start, "done": done}
+    return out
 
 
 _PERMUTE_OPS = (" collective-permute(", " collective-permute-start(")

@@ -42,9 +42,15 @@ def main() -> None:
     ap.add_argument("--compressor", default=None,
                     help="wire compressor spec (repro.core.compressor): "
                          "bernoulli | fixedk[:block] | block:<B> | rows | "
-                         "qsgd[:bits]; overrides --gossip-mode; for "
-                         "gradient-push switches on error-compensated "
-                         "compressed push-sum")
+                         "qsgd[:bits] | qsgdf[:bits] (fused single-buffer "
+                         "quantizer, bits in {2,4,8}); overrides "
+                         "--gossip-mode; for gradient-push switches on "
+                         "error-compensated compressed push-sum")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlapped transport: exchange the next round's "
+                         "wire planes under this round's compute "
+                         "(one-step-stale neighbour mixing; static "
+                         "topologies only — not matchings:<L>)")
     ap.add_argument("--topology", default="ring",
                     help="gossip graph over the node axis: ring | torus | "
                          "torusRxC | er | er:<p_c> | star | complete | "
@@ -91,9 +97,13 @@ def main() -> None:
     batch = args.global_batch or max(n_nodes, 2 * n_nodes)
     seq = args.seq_len or 64 if args.smoke else 4096
 
+    if args.overlap and args.topology.startswith("matchings"):
+        ap.error("--overlap needs a static topology: the double-buffered "
+                 "transport has no replica (time-varying) delivery path")
     sdm_cfg = SDMConfig(p=args.p, theta=args.theta, gamma=args.gamma,
                         sigma=args.sigma, clip_c=args.clip_c,
-                        mode=args.gossip_mode, compressor=args.compressor)
+                        mode=args.gossip_mode, compressor=args.compressor,
+                        overlap=args.overlap)
     tc = steps_mod.DistributedTrainConfig(
         model=cfg,
         sdm=sdm_cfg,
@@ -107,7 +117,8 @@ def main() -> None:
           f"nodes={n_nodes} method={meth_name} p={args.p} theta={args.theta} "
           f"compressor={args.compressor or sdm_cfg.mode} "
           f"topology={sched.name} gossip_rounds={sched.n_rounds}"
-          + (f" time_varying_L={sched.length}" if sched.length > 1 else ""))
+          + (f" time_varying_L={sched.length}" if sched.length > 1 else "")
+          + (" overlap=on" if args.overlap else ""))
 
     if args.sim:
         _run_simulated(args, cfg, sdm_cfg, meth_name, n_nodes, batch, seq)

@@ -110,6 +110,10 @@ def simulate(
     meth = method_mod.get(algorithm)
     cfg = meth.coerce_config(sdm_cfg)
     stale_ok = method_mod.stale_capable(meth)
+    # overlapped transport (cfg.overlap): the wire carries the previous
+    # round's payload while this round's gradient computes, so a node's
+    # round-ready time is max(compute, transmit) instead of their sum.
+    overlap = bool(getattr(cfg, "overlap", False))
     per_node = jax.tree.map(lambda x: x[0], params_stack)
     # exact per-EDGE payload (seq=None: one payload); timing and comm
     # charges then scale by each node's own out-degree per round graph.
@@ -147,65 +151,92 @@ def simulate(
     t_global = 0
 
     while t_global < rounds:
-        # ---- plan one membership segment (fixed fleet.up) ----------------
-        seg_plans = []          # (contributors, withhold, round_close, ...)
-        seg_active_sets = []
+        # ---- sample one membership segment's draws (fixed fleet.up) ------
+        # draws are collected FIRST, then plans derive from them as a pure
+        # function of the overlap flag — so a segment can be re-planned
+        # with the serialized wire without re-consuming any PRNG stream.
+        seg_draws = []
         seg_start = t_global
-        while len(seg_plans) < min(max_segment, rounds - seg_start):
-            t = seg_start + len(seg_plans)
+        while len(seg_draws) < min(max_segment, rounds - seg_start):
+            t = seg_start + len(seg_draws)
             participants = fleet.sample_participants()
             dead = fleet.sample_dropouts(participants)
-            contributors = participants & ~dead
-            times = {}
             # out-degrees on the participant graph: what each node *plans*
             # to push this round (dead nodes still occupy airtime).
             plan_topo = topology_mod.masked_subgraph(
                 topo, np.nonzero(participants)[0], name=f"{topo.name}_plan")
             outdeg = _out_degree(plan_topo)
-            for i in np.nonzero(participants)[0]:
-                c = fleet.compute_time(int(i))
-                tx = fleet.transmit_time(int(i),
-                                         edge_bits * int(outdeg[i]))
-                times[int(i)] = (c, c + tx)
-            finishes = {i: f for i, (_, f) in times.items()
-                        if contributors[i]}
-            close = max(finishes.values()) if finishes else 0.0
-            if spec.deadline is not None:
-                close = min(close, spec.deadline)
-            stragglers = np.zeros(n, dtype=bool)
-            if spec.deadline is not None:
-                for i, f in finishes.items():
-                    if f > spec.deadline + 1e-12:
-                        stragglers[i] = True
-            if stale_ok:
-                # stragglers stay IN the round graph (their edges keep
-                # weights) but their payload is withheld: one-step-stale.
-                round_active = contributors
-                withhold = stragglers
-            else:
-                # absolute-state methods: a straggler's stale payload has
-                # no deferral buffer — degrade to non-participation.
-                round_active = contributors & ~stragglers
-                withhold = np.zeros(n, dtype=bool)
-                if int(round_active.sum()) < 2:
-                    round_active = contributors
-                    stragglers = np.zeros(n, dtype=bool)
-            seg_plans.append(dict(
-                t=t, participants=participants, dead=dead,
-                contributors=contributors, stragglers=stragglers,
-                withhold=withhold, round_active=round_active,
-                times=times, close=close, outdeg=outdeg))
-            seg_active_sets.append(np.nonzero(round_active)[0])
+            comp_tx = {
+                int(i): (fleet.compute_time(int(i)),
+                         fleet.transmit_time(int(i),
+                                             edge_bits * int(outdeg[i])))
+                for i in np.nonzero(participants)[0]}
             churn = fleet.churn_step(t)
-            seg_plans[-1]["churn"] = churn
+            seg_draws.append(dict(t=t, participants=participants, dead=dead,
+                                  outdeg=outdeg, comp_tx=comp_tx,
+                                  churn=churn))
             if churn:
                 break           # membership changed: recompile next segment
 
-        # ---- compile the segment schedule + executor ---------------------
+        def build_plans(use_overlap):
+            plans, active_sets = [], []
+            for dr in seg_draws:
+                participants, dead = dr["participants"], dr["dead"]
+                contributors = participants & ~dead
+                # overlapped transport: the wire rides under compute, so a
+                # node is round-ready at max(compute, tx), not their sum.
+                times = {i: (c, max(c, tx) if use_overlap else c + tx)
+                         for i, (c, tx) in dr["comp_tx"].items()}
+                finishes = {i: f for i, (_, f) in times.items()
+                            if contributors[i]}
+                close = max(finishes.values()) if finishes else 0.0
+                if spec.deadline is not None:
+                    close = min(close, spec.deadline)
+                stragglers = np.zeros(n, dtype=bool)
+                if spec.deadline is not None:
+                    for i, f in finishes.items():
+                        if f > spec.deadline + 1e-12:
+                            stragglers[i] = True
+                if stale_ok:
+                    # stragglers stay IN the round graph (their edges keep
+                    # weights), their payload is withheld: one-step-stale.
+                    round_active = contributors
+                    withhold = stragglers
+                else:
+                    # absolute-state methods: a straggler's stale payload
+                    # has no deferral buffer — degrade to non-participation.
+                    round_active = contributors & ~stragglers
+                    withhold = np.zeros(n, dtype=bool)
+                    if int(round_active.sum()) < 2:
+                        round_active = contributors
+                        stragglers = np.zeros(n, dtype=bool)
+                plans.append(dict(
+                    t=dr["t"], participants=participants, dead=dead,
+                    contributors=contributors, stragglers=stragglers,
+                    withhold=withhold, round_active=round_active,
+                    times=times, close=close, outdeg=dr["outdeg"],
+                    churn=dr["churn"]))
+                active_sets.append(np.nonzero(round_active)[0])
+            return plans, active_sets
+
+        seg_plans, seg_active_sets = build_plans(overlap)
         seq = gossip.sequence_from_active_sets(
             topo, seg_active_sets,
             name=f"{topo.name}_seg{seg_start}x{len(seg_active_sets)}")
-        sim = meth.make_reference(seq, cfg)
+        seg_cfg = cfg
+        if overlap and gossip.needs_replicas(seq):
+            # varying membership inside the segment compiles to a replica
+            # (time-varying) schedule, which the double-buffered transport
+            # cannot ride — degrade THIS segment to the serialized wire
+            # (both the executor and the round clock).
+            seg_plans, seg_active_sets = build_plans(False)
+            seq = gossip.sequence_from_active_sets(
+                topo, seg_active_sets,
+                name=f"{topo.name}_seg{seg_start}x{len(seg_active_sets)}")
+            seg_cfg = dataclasses.replace(cfg, overlap=False)
+
+        # ---- compile the segment schedule + executor ---------------------
+        sim = meth.make_reference(seq, seg_cfg)
         state = sim.init(carried_x)
         if carried_d is not None and hasattr(state, "d"):
             state = state._replace(d=carried_d)

@@ -241,7 +241,15 @@ def make_distributed_train(tc: DistributedTrainConfig, mesh: Mesh,
     axis = node_axes if len(node_axes) > 1 else node_axes[0]
     inner = None if full_manual else MeshRules(mesh, INNER_RULES)
     meth, mcfg = tc.resolved()
-    executor = meth.make_distributed(gossip_schedule(tc, mesh), mcfg, axis)
+    seq = gossip_schedule(tc, mesh)
+    if getattr(mcfg, "overlap", False) and gossip.needs_replicas(seq):
+        # fail at build time with the run's own topology spec, not deep
+        # inside the executor: the double-buffered overlap transport has
+        # no replica (time-varying) delivery path.
+        raise ValueError(
+            f"overlap=True needs a static topology; {tc.topology!r} "
+            f"compiles to a replica (time-varying) schedule")
+    executor = meth.make_distributed(seq, mcfg, axis)
     if base_key is None:
         base_key = jax.random.PRNGKey(0)
 

@@ -52,3 +52,51 @@ def sdm_dense_wt_oracle(seq, cfg, x0, grad_stack, steps: int,
         y = (1.0 - cfg.theta) * x + cfg.theta * (m - cfg.gamma * g)
         d = y - x
     return np.asarray(x)
+
+
+def sdm_dense_overlap_oracle(seq, cfg, x0, grad_stack, steps: int,
+                             base_key) -> np.ndarray:
+    """The OVERLAPPED-transport oracle: delayed (one-step-stale) mixing.
+
+    Same from-scratch simulator as ``sdm_dense_wt_oracle`` but the
+    commit mixes each node's CURRENT self copy with its neighbours'
+    PREVIOUS-round public copies — the semantics the ``cfg.overlap``
+    double-buffered transport implements by exchanging the next round's
+    wire while this round's gradient computes:
+
+        m_i(t) = W_ii x_i(t) + sum_{j != i} W_ij x_j(t - 1)
+
+    (x_j(-1) = x_j(0): the first round has no stale buffer, matching
+    the executor's S(0) = 0 initialization). Tracks only (x, d, xprev).
+    """
+    n = seq.n_nodes
+    comp = sdm_dsgd.compressor_of(cfg)
+    ws = jnp.asarray(seq.weights_stack(), jnp.float32)
+    x = x0
+    d = jnp.zeros_like(x)
+    xprev = x0
+    spec = plane_mod.ParamPlane.for_tree(
+        jax.ShapeDtypeStruct(tuple(x0.shape[1:]), jnp.float32), buckets=None)
+    bucket_key = jax.random.fold_in(base_key, 0)
+    for t in range(steps):
+        keys = jax.vmap(
+            lambda i: gossip.node_round_key(bucket_key, i, t))(jnp.arange(n))
+
+        def one(i, k, v):
+            pl = spec.pack(v)[0]
+            out = comp.decompress(comp.compress(k, pl, node=i))
+            return spec.unpack((out,))
+
+        sd = jax.vmap(one)(jnp.arange(n), keys, d)
+        x = x + sd
+        g = grad_stack(x)
+        g = sdm_dsgd.masked_grad({"w": g}, base_key, sigma=cfg.sigma,
+                                 clip_c=cfg.clip_c)["w"]
+        w_t = ws[t % seq.length]
+        diag = jnp.diagonal(w_t)
+        offd = w_t - jnp.diag(diag)
+        m = diag[:, None] * x + jnp.einsum("ij,j...->i...", offd, xprev)
+        y = (1.0 - cfg.theta) * x + cfg.theta * (m - cfg.gamma * g)
+        d = y - x
+        xprev = x       # what neighbours mix at the NEXT commit
+    return np.asarray(x)

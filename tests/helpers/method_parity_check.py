@@ -87,6 +87,7 @@ CASES = {
         ("gradient-push", "dring8", "fixedk"),
         ("gradient-push", "der8", "fixedk"),
         ("gradient-push", "der8", "qsgd"),
+        ("gradient-push", "dring8", "qsgdf:4"),
         ("sdm-dsgd", "ring8", "qsgd"),
         ("sdm-dsgd", "ring8", "qsgd:4"),
         ("sdm-dsgd:het", "ring8", "fixedk_packed"),
@@ -116,8 +117,23 @@ CASES = {
         ("sdm-dsgd", "star4", "bernoulli"),
         ("sdm-dsgd-fused", "ring8", "fixedk_rows"),
         ("sdm-dsgd", "ring8", "qsgd:4"),
+        ("sdm-dsgd", "ring8", "qsgdf:4"),
         ("dsgd", "ring8", "-"),
         ("gradient-push", "dring8", "fixedk"),
+    ],
+    # OVERLAPPED transport (":ov" = cfg.overlap=True): one-step-stale
+    # neighbour mixing with the wire exchanged under compute. Parity must
+    # hold reference<->distributed, the SDM reference must equal the
+    # EXPLICIT delayed-mixing dense oracle, and the trajectory must
+    # genuinely DIVERGE from overlap=off (the staleness is real, not a
+    # no-op flag).
+    "overlap": [
+        ("sdm-dsgd:ov", "ring8", "bernoulli"),
+        ("sdm-dsgd:ov", "ring8", "fixedk_packed"),
+        ("sdm-dsgd:ov", "ring8", "qsgd:4"),
+        ("sdm-dsgd:ov", "ring8", "qsgdf:4"),
+        ("sdm-dsgd-fused:ov", "ring8", "fixedk_packed"),
+        ("gradient-push:ov", "dring8", "fixedk"),
     ],
 }
 
@@ -145,20 +161,23 @@ def parse_seq(spec: str) -> gossip.ScheduleSequence:
 
 
 def make_cfg(meth_key: str, meth, mode: str, n: int):
+    overlap = meth_key.endswith(":ov")
     if meth.config_cls is sdm_dsgd.SDMConfig:
         p = tuple(0.15 + 0.05 * (i % 4) for i in range(n)) \
             if meth_key.endswith(":het") else 0.25
-        if mode.startswith("qsgd:"):
+        if mode.startswith("qsgd:") or mode.split(":")[0] == "qsgdf":
             return meth.coerce_config(sdm_dsgd.SDMConfig(
                 p=p, theta=0.15, gamma=0.2, sigma=0.0, clip_c=1.0,
-                compressor=mode))
+                compressor=mode, overlap=overlap))
         return meth.coerce_config(sdm_dsgd.SDMConfig(
-            p=p, theta=0.15, gamma=0.2, sigma=0.0, clip_c=1.0, mode=mode))
+            p=p, theta=0.15, gamma=0.2, sigma=0.0, clip_c=1.0, mode=mode,
+            overlap=overlap))
     if meth.config_cls is gradient_push.GradientPushConfig:
         # a non-"-" mode is a compressor spec: the error-compensated
         # compressed push-sum variant
         return gradient_push.GradientPushConfig(
-            gamma=0.2, compressor=None if mode == "-" else mode, p=0.25)
+            gamma=0.2, compressor=None if mode == "-" else mode, p=0.25,
+            overlap=overlap)
     return baselines.DSGDConfig(gamma=0.2)
 
 
@@ -348,7 +367,7 @@ def run_case(meth_key: str, topo_spec: str, mode: str,
         sorts = hlo.count(" sort(") + hlo.count(" sort.")
         line += (f" WIRE_ELEMS {payload} EXPECTED_WIRE_ELEMS {kb}"
                  f" SORT_COUNT {sorts} MAX_SORTS {max_sorts}")
-    elif mode.split(":")[0] in ("fixedk", "block", "qsgd"):
+    elif mode.split(":")[0] in ("fixedk", "block", "qsgd", "qsgdf"):
         # compressed gradient-push / sdm qsgd: the exchange_payload
         # transport. Assert the largest single wire payload stays at the
         # compressed size: k*32 value bits for fixed-k (indices ship as a
@@ -362,6 +381,12 @@ def run_case(meth_key: str, topo_spec: str, mode: str,
             factor = 8 // qbits if qbits in (2, 4) else 1
             exp_bits = (-(-plane_elems // factor)) * factor * qbits \
                 if factor > 1 else plane_elems * qbits
+        elif base == "qsgdf":
+            # fused single-buffer format: packed bytes + the 4 norm
+            # tail bytes ride ONE u8 permute
+            qbits = int(mode.split(":")[1]) if ":" in mode else 4
+            factor = 8 // qbits if qbits in (2, 4) else 1
+            exp_bits = (-(-plane_elems // factor) + 4) * 8
         else:
             nb = plane_elems
             exp_bits = sparsifier.num_kept(nb, 0.25) * 32
@@ -385,6 +410,42 @@ def run_case(meth_key: str, topo_spec: str, mode: str,
             acc_bits = method_mod.transmitted_bits(meth, per_node, cfg,
                                                    seq=seq)
             line += f" HLO_BITS {hlo_bits} ACC_BITS {acc_bits}"
+
+    if group == "overlap":
+        # the double buffer reuses the same exchange one step early, so
+        # the permute count must NOT grow vs the non-overlapped step
+        cperm = hlo_analysis.collective_permute_count(hlo)
+        line += (f" CPERM {cperm} EXPECTED_CPERM "
+                 f"{expected_permutes(meth_name, mode, seq)}")
+        # the staleness is real: same seed, overlap off, must diverge
+        cfg_off = make_cfg(meth_key[:-3], meth, mode, n)
+        sim_off = meth.make_reference(seq, cfg_off)
+        st = sim_off.init(params_stack)
+        for _ in range(STEPS):
+            if hasattr(sim_off, "advance"):
+                st, _ = sim_off.advance(st, BASE_KEY)
+                g_off, _ = grad_fn_stacked(st.x, None)
+                st = sim_off.commit(st, g_off, BASE_KEY)
+            else:
+                st, _ = sim_off.step(st, grad_fn_stacked, None, BASE_KEY)
+        if meth_name == "sdm-dsgd-fused":
+            st, _ = sim_off.advance(st, BASE_KEY)
+        off_x = jax.tree.map(np.asarray, debias(meth_name, st.x, st))
+        div = max(float(np.max(np.abs(a - b)))
+                  for a, b in zip(jax.tree.leaves(off_x),
+                                  jax.tree.leaves(ref_x)))
+        line += f" STALE_DIVERGENCE {div}"
+        if meth_name == "sdm-dsgd":
+            # the reference must equal the EXPLICIT delayed-mixing oracle
+            from dense_oracle import sdm_dense_overlap_oracle   # sibling
+
+            grad_stack = lambda x: jax.vmap(
+                lambda w, a, b: node_grad(w, a, b)["w"])(x, a_stack,
+                                                         b_stack)
+            ox = sdm_dense_overlap_oracle(seq, cfg, params_stack["w"],
+                                          grad_stack, STEPS, BASE_KEY)
+            line += (f" ORACLE_MAXERR "
+                     f"{float(np.max(np.abs(ox - ref_x['w'])))}")
 
     if seq.length > 1 and mode != "-":
         # ---- replica-correct time-varying checks ----------------------

@@ -116,3 +116,54 @@ ENTRY main {
     assert pls[1]["elems"] == {"u8": 512}       # sub-byte qsgd u8 lanes
     assert pls[2]["elems"] == {"f32": 1024}     # start counted once
     assert hlo_analysis.collective_permute_count(hlo) == 3  # done skipped
+
+
+def test_instruction_counts_and_launch_count():
+    """The perf-smoke counting surface: per-opcode instruction counts
+    parsed from HLO text, and the launch sum over LAUNCH_OPS (fusions,
+    custom-calls, sorts, collectives incl. async -start forms)."""
+    hlo = """
+ENTRY main {
+  %f0 = f32[8,128]{1,0} fusion(%a), kind=kLoop, calls=%fused_computation
+  %f1 = f32[8,128]{1,0} fusion(%b), kind=kInput, calls=%fused_computation.1
+  %s = f32[64]{0} sort(%c), dimensions={0}
+  %cc = f32[8]{0} custom-call(%d), custom_call_target="foo"
+  %cp = f32[8,128]{1,0} collective-permute(%e), source_target_pairs={{0,1}}
+  %cps = (f32[64]{0}, f32[64]{0}, u32[], u32[]) collective-permute-start(%e)
+  %cpd = f32[64]{0} collective-permute-done(%cps)
+  %add = f32[8,128]{1,0} add(%f0, %f1)
+}
+"""
+    counts = hlo_analysis.instruction_counts(hlo)
+    assert counts["fusion"] == 2
+    assert counts["sort"] == 1
+    assert counts["custom-call"] == 1
+    assert counts["collective-permute"] == 1
+    assert counts["collective-permute-start"] == 1
+    assert counts["collective-permute-done"] == 1
+    assert counts["add"] == 1
+    # launches: 2 fusion + sort + custom-call + permute + permute-start;
+    # the -done retires an in-flight op, it is NOT a new launch
+    assert hlo_analysis.launch_count(hlo) == 6
+
+
+def test_async_collective_pairs():
+    """Overlap audit surface: -start/-done pairing per collective kind
+    (an imbalance means a dangling async op in the compiled step)."""
+    hlo = """
+ENTRY main {
+  %cp = f32[8]{0} collective-permute(%x), source_target_pairs={{0,1}}
+  %cps = (f32[8]{0}, f32[8]{0}, u32[], u32[]) collective-permute-start(%x)
+  %cpd = f32[8]{0} collective-permute-done(%cps)
+  %ars = f32[8]{0} all-reduce-start(%y), to_apply=%sum
+  %ard = f32[8]{0} all-reduce-done(%ars)
+}
+"""
+    pairs = hlo_analysis.async_collective_pairs(hlo)
+    assert pairs["collective-permute"] == {"sync": 1, "start": 1, "done": 1}
+    assert pairs["all-reduce"] == {"sync": 0, "start": 1, "done": 1}
+
+
+def test_launch_count_empty_and_garbage():
+    assert hlo_analysis.launch_count("") == 0
+    assert hlo_analysis.instruction_counts("not hlo at all") == {}

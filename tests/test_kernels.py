@@ -183,3 +183,125 @@ def test_flash_property_sweep(seed, sq, skv, causal):
     ref = flash_attention(q, k, v, causal=causal, use_kernel=False)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5,
                                rtol=3e-5)
+
+
+# --------------------------------------------------------------------------
+# wire_compress: fused quantize+pack / gather+pack vs oracles
+# --------------------------------------------------------------------------
+
+from repro.core.compressor import FusedQSGDCompressor, QSGDCompressor  # noqa: E402
+from repro.kernels import wire_compress  # noqa: E402
+
+
+def _plane(rows, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(rows, LANE)), jnp.float32)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("rows", [8, 16, 64])
+def test_qsgd_pack_kernel_bitequal_ref(bits, rows):
+    """Pallas kernel byte image == pure-jnp oracle, bit for bit."""
+    xf = _plane(rows, seed=bits)
+    u = jax.random.uniform(jax.random.PRNGKey(rows + bits), xf.shape)
+    norm = jnp.sqrt(jnp.sum(jnp.square(xf)))
+    out_k = wire_compress.qsgd_pack(xf, u, norm, bits=bits, use_kernel=True)
+    out_r = wire_compress.qsgd_pack(xf, u, norm, bits=bits, use_kernel=False)
+    assert out_k.dtype == jnp.uint8 and out_k.shape == out_r.shape
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_qsgd_pack_kernel_bitequal_unfused_compressor(bits):
+    """Fused byte image == the unfused QSGDCompressor pack, same key."""
+    xf = _plane(8, seed=17)
+    key = jax.random.PRNGKey(5)
+    comp = QSGDCompressor(p=1.0, bits=bits)
+    pay = comp.compress(key, xf)
+    u = jax.random.uniform(key, xf.shape)
+    norm = jnp.sqrt(jnp.sum(jnp.square(xf)))
+    fused = wire_compress.qsgd_pack(xf, u, norm, bits=bits)
+    if bits == 8:
+        # unfused b=8 ships signed int8 q; fused ships offset (q + s) u8
+        unfused = (np.asarray(pay.values).astype(np.int32)
+                   .reshape(-1) + comp.levels).astype(np.uint8)
+    else:
+        unfused = np.asarray(pay.values).reshape(-1)
+    np.testing.assert_array_equal(np.asarray(fused), unfused)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("shape", [(71,), (3, 5, 11), (9, 33)])
+def test_qsgd_pack_ref_path_odd_shapes(bits, shape):
+    """Non-plane shapes route to the oracle and still decode exactly."""
+    rng = np.random.default_rng(1)
+    xf = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    u = jax.random.uniform(jax.random.PRNGKey(2), shape)
+    norm = jnp.sqrt(jnp.sum(jnp.square(xf)))
+    data = wire_compress.qsgd_pack(xf, u, norm, bits=bits)
+    tail = jax.lax.bitcast_convert_type(norm, jnp.uint8)
+    buf = jnp.concatenate([data, tail])
+    dec = wire_compress.qsgd_decode_ref(buf, shape, bits=bits)
+    comp = QSGDCompressor(p=1.0, bits=bits)
+    pay = comp.compress(jax.random.PRNGKey(2), xf)
+    np.testing.assert_array_equal(np.asarray(dec),
+                                  np.asarray(comp.decompress(pay)))
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_fused_compressor_roundtrip_bitequal_qsgd(bits):
+    """FusedQSGDCompressor decompress(compress(x)) == qsgd's, bitwise,
+    and matches the qsgd_decode_ref oracle on the same buffer."""
+    xf = _plane(16, seed=23)
+    key = jax.random.PRNGKey(9)
+    fused = FusedQSGDCompressor(p=1.0, bits=bits)
+    plain = QSGDCompressor(p=1.0, bits=bits)
+    fp = fused.compress(key, xf)
+    assert fp.scale is None and fp.values.dtype == jnp.uint8
+    out_f = fused.decompress(fp)
+    out_p = plain.decompress(plain.compress(key, xf))
+    np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out_p))
+    out_o = wire_compress.qsgd_decode_ref(fp.values, fp.shape, bits=bits)
+    np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out_o))
+
+
+def test_fused_compressor_wire_bits_inherited():
+    for bits in (2, 4, 8):
+        f = FusedQSGDCompressor(p=1.0, bits=bits)
+        q = QSGDCompressor(p=1.0, bits=bits)
+        for shape in ((8, 128), (71,), (3, 5, 11)):
+            assert f.wire_bits(shape) == q.wire_bits(shape)
+            # single-buffer format: the payload byte count IS the charge
+            d = int(np.prod(shape))
+            k = wire_compress.pack_factor(bits)
+            assert f.wire_bits(shape) == (-(-d // k)) * 8 + 32
+
+
+def test_fused_compressor_rejects_odd_bits():
+    with pytest.raises(ValueError):
+        FusedQSGDCompressor(p=1.0, bits=3)
+
+
+@pytest.mark.parametrize("kb,scale", [(4, 2.5), (16, 1.0)])
+def test_fixedk_gather_pack_kernel_matches_ref(kb, scale):
+    rng = np.random.default_rng(kb)
+    db = jnp.asarray(rng.normal(size=(64, LANE)), jnp.float32)
+    idx = jnp.asarray(rng.choice(64, size=kb, replace=False), jnp.int32)
+    out_k = wire_compress.fixedk_gather_pack(db, idx, scale=scale,
+                                             use_kernel=True)
+    out_r = wire_compress.fixedk_gather_pack(db, idx, scale=scale,
+                                             use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+@given(seed=st.integers(0, 10_000), bits=st.sampled_from([2, 4, 8]),
+       rows=st.sampled_from([8, 24, 40]))
+@settings(max_examples=15, deadline=None)
+def test_qsgd_pack_property_sweep(seed, bits, rows):
+    rng = np.random.default_rng(seed)
+    xf = jnp.asarray(rng.normal(size=(rows, LANE)), jnp.float32)
+    u = jax.random.uniform(jax.random.PRNGKey(seed), xf.shape)
+    norm = jnp.sqrt(jnp.sum(jnp.square(xf)))
+    out_k = wire_compress.qsgd_pack(xf, u, norm, bits=bits, use_kernel=True)
+    out_r = wire_compress.qsgd_pack(xf, u, norm, bits=bits, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))

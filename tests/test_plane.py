@@ -195,3 +195,45 @@ def test_wire_shape_tree_accounting_surface():
     cfg = sdm_dsgd.SDMConfig(p=0.21, mode="fixedk_packed")
     assert sdm_dsgd.transmitted_elements_per_step(params, cfg) == \
         sparsifier.num_kept(2 * LANE, 0.21)
+
+
+# ---------------------------------------------------------------------------
+# Fused single-buffer QSGD ("qsgdf") on planes: bit-equal to unfused qsgd.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_fused_qsgd_plane_bitequal_unfused(bits):
+    """On a lane-multiple plane the fused qsgdf pipeline (one pallas
+    quantize+pack launch, norm embedded as 4 tail bytes, ONE u8 wire
+    leaf) must decompress BIT-EQUAL to the unfused qsgd (values, scale)
+    pair under the same key — the launch/permute savings are format-
+    only, never a trajectory change."""
+    d = 6 * plane.LANE
+    x = jnp.asarray(np.random.default_rng(7).normal(size=(d,)), jnp.float32)
+    spec = plane.ParamPlane.for_tree({"w": x})
+    (pl,) = spec.pack({"w": x})
+    key = jax.random.PRNGKey(31)
+    fused = compressor.make(f"qsgdf:{bits}", p=1.0)
+    plain = compressor.make(f"qsgd:{bits}", p=1.0)
+    fp = fused.compress(key, pl)
+    # single wire leaf: packed bytes + 4 norm-bitcast tail bytes
+    assert fp.scale is None
+    assert fp.values.shape == (d // (8 // bits if bits in (2, 4) else 1) + 4,)
+    np.testing.assert_array_equal(
+        np.asarray(fused.decompress(fp)),
+        np.asarray(plain.decompress(plain.compress(key, pl))))
+
+
+def test_fused_qsgd_vmap_over_nodes_bitequal():
+    """vmapped per-node compress (the stacked reference path) stays
+    bit-equal to the per-node loop."""
+    n, rows = 4, 8
+    x = jnp.asarray(np.random.default_rng(13).normal(
+        size=(n, rows, plane.LANE)), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(3), n)
+    comp = compressor.make("qsgdf:4", p=1.0)
+    vals = jax.vmap(lambda k, xi: comp.compress(k, xi).values)(keys, x)
+    for i in range(n):
+        np.testing.assert_array_equal(
+            np.asarray(vals[i]),
+            np.asarray(comp.compress(keys[i], x[i]).values))
