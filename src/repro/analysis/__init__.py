@@ -1,6 +1,7 @@
 """Static analysis over compiled train steps (no execution).
 
-Three passes, one CLI (``python -m repro.analysis``):
+Seven passes, one CLI (``python -m repro.analysis``; select with
+``--pass``):
 
 * ``jaxpr_taint``  — interprocedural data-taint: no un-sanitized
   data-derived tensor may reach a collective (``ppermute``/``psum``),
@@ -12,18 +13,35 @@ Three passes, one CLI (``python -m repro.analysis``):
 * ``wire_audit``   — registry-wide HLO invariants: collective-permute
   count == schedule rounds (leaf-count-independent), payload bits ==
   the static wire accounting, every permute operand wire-tagged.
+* ``sensitivity``  — QUANTITATIVE certifier: norm-bound abstract
+  interpretation from the ``clip_bound`` tag proves the sanitize
+  operand's coordinate bound <= C and wire buffers post-noise, plus
+  the ``qsgd_range_certificate`` interval proofs for integer wire
+  encodings.
+* ``calibration``  — extracts the concrete Gaussian std from the jaxpr
+  at every sanitize site and cross-checks the accountant's sigma;
+  ``analyze_overlap`` token-checks the ``pending_buffer`` double
+  buffer for exactly-one-round staleness.
 
 The passes run over the method x compressor x topology matrix on a
-4-node host mesh; see ``wire_audit.MATRIX``.
+4-node host mesh (see ``wire_audit.MATRIX``); each config's report row
+carries a machine-readable privacy certificate.
 """
-__all__ = ["analyze_taint", "analyze_prng", "audit_config", "MATRIX",
+__all__ = ["analyze_taint", "analyze_prng", "analyze_sensitivity",
+           "analyze_calibration", "analyze_overlap",
+           "qsgd_range_certificate", "audit_config", "MATRIX", "PASSES",
            "expected_permutes"]
 
 _EXPORTS = {
     "analyze_taint": "repro.analysis.jaxpr_taint",
     "analyze_prng": "repro.analysis.prng_lint",
+    "analyze_sensitivity": "repro.analysis.sensitivity",
+    "qsgd_range_certificate": "repro.analysis.sensitivity",
+    "analyze_calibration": "repro.analysis.calibration",
+    "analyze_overlap": "repro.analysis.calibration",
     "audit_config": "repro.analysis.wire_audit",
     "MATRIX": "repro.analysis.wire_audit",
+    "PASSES": "repro.analysis.wire_audit",
     "expected_permutes": "repro.analysis.wire_audit",
 }
 

@@ -17,23 +17,46 @@ import pathlib
 import sys
 
 
+#: report keys holding per-pass finding lists, in PASSES order
+FINDING_KEYS = ("taint", "prng", "wire", "sensitivity", "calibration",
+                "range", "overlap")
+
+
 def _fingerprint(config_id: str, finding: dict) -> str:
     kind = finding.get("kind", "?")
     detail = finding.get("key") or finding.get("primitive") \
-        or finding.get("label") or ""
+        or finding.get("label") or finding.get("site") or ""
     return f"{config_id}|{kind}|{detail}"
+
+
+def _row_findings(row: dict):
+    for key in FINDING_KEYS:
+        yield from row.get(key, [])
+
+
+def _parse_shard(spec: str):
+    i, _, n = spec.partition("/")
+    i, n = int(i), int(n)
+    if not (n >= 1 and 1 <= i <= n):
+        raise SystemExit(f"--shard wants i/N with 1 <= i <= N, got {spec!r}")
+    return i, n
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="jaxpr taint / PRNG hygiene / wire-invariant auditor")
+        description="jaxpr taint / PRNG / wire auditor + privacy certifier")
     ap.add_argument("--out", default="LINT_report.json",
                     help="report path ('' to skip writing)")
     ap.add_argument("--baseline", default=None,
                     help="suppression baseline json (default: bundled)")
-    ap.add_argument("--filter", default="",
+    ap.add_argument("--filter", "--only", dest="filter", default="",
                     help="only configs whose id contains this substring")
+    ap.add_argument("--pass", dest="passes", action="append", default=None,
+                    metavar="NAME",
+                    help="run only this audit pass (repeatable); default all")
+    ap.add_argument("--shard", default=None, metavar="i/N",
+                    help="run the i-th of N strided matrix shards (1-based)")
     ap.add_argument("--quick", action="store_true",
                     help="smoke subset of the matrix")
     ap.add_argument("--devices", type=int, default=8,
@@ -56,26 +79,35 @@ def main(argv=None) -> int:
         suppressions = set(json.loads(base_path.read_text())
                            .get("suppressions", []))
 
+    passes = tuple(args.passes) if args.passes else wire_audit.PASSES
+    unknown = set(passes) - set(wire_audit.PASSES)
+    if unknown:
+        raise SystemExit(f"unknown --pass {sorted(unknown)}; "
+                         f"choose from {list(wire_audit.PASSES)}")
+
     configs = [ac for ac in wire_audit.MATRIX if args.filter in ac.id]
     if args.quick:
         configs = [ac for ac in configs if ac.id in wire_audit.QUICK_IDS]
+    if args.shard:
+        i, n = _parse_shard(args.shard)
+        configs = configs[i - 1::n]
 
     rows, new_violations = [], []
     for ac in configs:
         try:
-            row = wire_audit.audit_config(ac)
+            row = wire_audit.audit_config(ac, passes=passes)
         except Exception as e:                          # audit must not crash
             row = {"id": ac.id, "status": "error", "error": repr(e),
-                   "taint": [], "prng": [], "wire": []}
+                   **{k: [] for k in FINDING_KEYS}}
             new_violations.append(f"{ac.id}|audit-error|{e!r}")
-        for finding in row["taint"] + row["prng"] + row["wire"]:
+        for finding in _row_findings(row):
             fp = _fingerprint(row["id"], finding)
             if fp in suppressions:
                 finding["suppressed"] = True
             else:
                 new_violations.append(fp)
         rows.append(row)
-        n_bad = sum(1 for f in row["taint"] + row["prng"] + row["wire"]
+        n_bad = sum(1 for f in _row_findings(row)
                     if not f.get("suppressed"))
         print(f"AUDIT {row['id']:55s} {row['status']:5s}"
               f" findings={n_bad}", flush=True)
@@ -83,6 +115,8 @@ def main(argv=None) -> int:
     report = {
         "jax": jax.__version__,
         "n_configs": len(rows),
+        "passes": list(passes),
+        "shard": args.shard,
         "suppression_baseline": sorted(suppressions),
         "new_violations": new_violations,
         "configs": rows,

@@ -145,6 +145,8 @@ class JaxprInterpreter:
             return self._eval_while(eqn, in_vals, ctx)
         if name in ("cond", "switch"):
             return self._eval_cond(eqn, in_vals, ctx)
+        if name == "pallas_call":
+            return self._eval_pallas(eqn, in_vals, ctx)
         if name in _ALIGNED_CALLS:
             for key in _SUB_KEYS:
                 if key in params:
@@ -176,6 +178,26 @@ class JaxprInterpreter:
         for v in list(outs) + list(in_vals):
             joined = self.join(joined, v)
         return [joined for _ in range(n)]
+
+    def _eval_pallas(self, eqn, in_vals: List, ctx: Ctx) -> List:
+        """Recurse into a pallas kernel body with HEAD-aligned refs.
+
+        The kernel jaxpr's invars are ``[in_refs..., out_refs...]`` Ref
+        avals — the eqn's operands map onto the FIRST invars and the
+        remaining out-refs seed at bottom (generic tail-alignment would
+        mis-map operands onto out-refs). The kernel reads/writes refs via
+        ``get``/``swap``, which the default join-of-inputs transfer
+        already propagates through, so key identity and taint survive
+        into the kernel body. Kernel outputs are whatever the out-refs
+        can't tell us here, so the eqn outputs conservatively join the
+        kernel's formal outputs (usually none) with the eqn operands.
+        """
+        sub, consts = _unpack(eqn.params["jaxpr"])
+        sub_ctx = dataclasses.replace(ctx, path=ctx.path + (id(eqn),))
+        vals = list(in_vals[:len(sub.invars)])
+        vals += [self.bottom()] * (len(sub.invars) - len(vals))
+        outs = self._eval(sub, consts, vals, sub_ctx)
+        return self._fit(outs, len(eqn.outvars), in_vals)
 
     def _eval_scan(self, eqn, in_vals: List, ctx: Ctx) -> List:
         params = eqn.params

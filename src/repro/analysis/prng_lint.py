@@ -162,6 +162,12 @@ class _PrngInterp(jaxpr_walk.JaxprInterpreter):
             self._record("draw", key, eqn, ctx, shape=shape)
             self._check_shape(shape, eqn)
             return None
+        if name in ("get", "swap"):
+            # pallas kernel ref read/write: a key stored in a Ref keeps
+            # its identity through the load, so stochastic-rounding draws
+            # INSIDE a kernel body join the same reuse/shape accounting
+            # as host-side draws (the walker head-aligns kernel refs).
+            return [in_vals[0]]
         if name in ("slice", "squeeze", "dynamic_slice"):
             # key extraction from a split-array: ('split', p) -> child
             src = in_vals[0]

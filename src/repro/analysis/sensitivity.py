@@ -1,0 +1,447 @@
+"""Quantitative sensitivity certifier: norm-bound propagation + integer
+ranges over a compiled train-step jaxpr.
+
+The taint pass (PR 6) proves the QUALITATIVE shape of the privacy
+argument — data reaches a collective only through ``sanitize``. This
+module proves the QUANTITATIVE half Theorem 1 actually needs: that the
+value the Gaussian mask is added to really is coordinate-bounded by the
+clip constant C, i.e. l2-sensitivity <= C * sqrt(d) = G, and that the
+integer wire encodings can never leave their representable range.
+
+Norm-bound domain
+-----------------
+Abstract value: a float ``beta`` per jaxpr value, meaning the value
+decomposes as ``u + w`` with ``u`` data-INdependent and every
+coordinate of the data-dependent part bounded, ``|w_i| <= beta``.
+``beta = 0`` is "provably data-independent" (constants, PRNG draws,
+sanitized values), ``inf`` is "no bound known". Join is max.
+
+Transfer rules are chosen for this decomposition semantics:
+
+* ``clip_bound`` tag (from ``clipping.clip_tree``): out = min(in, C) —
+  whatever entered, the clamped value itself is a valid ``w`` with
+  ``u = 0``;
+* add/sub: beta_a + beta_b (decompositions add);
+* mul/div by a scalar LITERAL c: beta * |c| (resp. / |c|) — a
+  non-literal factor has unknown magnitude, so a data-dependent operand
+  goes to inf;
+* 1-Lipschitz ops (min/max/clamp/abs/tanh/erf/...): max of inputs;
+* structural ops (reshape/concat/pad/slice/transpose/gather with
+  data-independent indices): max of inputs — every output coordinate IS
+  some input coordinate (pads are literals);
+* reduce_sum over k elements: k * beta; reduce_max/min: beta;
+* everything else: 0 if ALL inputs are 0 (a function of data-independent
+  values is data-independent), else inf.
+
+``sanitize`` clears the bound to 0 — the accountant charges that
+release — but first RECORDS the pre-noise bound: the certifier's main
+check is ``bound(sanitize operand) <= C``. ``wire_payload`` operands
+are checked to carry bound 0 in privacy-claiming configs (everything on
+the wire is post-sanitize). Unknown-op conservatism means a finding
+here is "cannot prove", not "proved leaking" — but on this codebase the
+clean configs all prove, so CI gates at zero findings.
+
+Integer-range certificate
+-------------------------
+``qsgd_range_certificate`` re-derives the qsgd/qsgdf wire encoding
+symbolically with ``Interval`` arithmetic: levels q in [-s, s], offset
+encode q+s in [0, 2s] subset [0, 2^b - 1], OR-packed byte <= 255, and
+the 4 bitcast norm tail bytes — proving no representable-range overflow
+for any input (the groundwork for the mod-Q secure-aggregation plane).
+``tests/test_sensitivity_domain.py`` property-checks both the transfer
+functions and the interval chain against concrete values.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+from repro.analysis import jaxpr_walk
+from repro.core import tagging
+
+__all__ = [
+    "Interval",
+    "analyze_sensitivity",
+    "qsgd_range_certificate",
+    "clip_transfer",
+    "add_transfer",
+    "scale_transfer",
+    "concat_transfer",
+    "pad_transfer",
+    "reduce_sum_transfer",
+]
+
+INF = math.inf
+
+# relative slack on bound <= C comparisons (f32 literal round-off).
+_TOL = 1e-5
+
+
+# ==========================================================================
+# Transfer functions (module-level so the property tests drive the exact
+# code the interpreter runs).
+# ==========================================================================
+
+def clip_transfer(beta: float, c: float) -> float:
+    """Bound after clamping to [-c, c]: the clamp output itself is a
+    valid data-dependent part, so min(beta, c)."""
+    return min(beta, c)
+
+
+def add_transfer(beta_a: float, beta_b: float) -> float:
+    return beta_a + beta_b
+
+
+def scale_transfer(beta: float, c: float) -> float:
+    """Bound after multiplying by a known scalar constant c."""
+    return beta * abs(c)
+
+
+def concat_transfer(*betas: float) -> float:
+    """Concat/stack/select with static predicate: every output
+    coordinate is some input coordinate."""
+    return max(betas) if betas else 0.0
+
+
+def pad_transfer(beta: float, pad_bound: float = 0.0) -> float:
+    return max(beta, pad_bound)
+
+
+def reduce_sum_transfer(beta: float, reduced: int) -> float:
+    return beta * float(reduced)
+
+
+# ops whose output coordinates are each a single input coordinate
+# (possibly permuted/duplicated/dropped) — bound is max of inputs.
+_STRUCTURAL = frozenset({
+    "reshape", "transpose", "broadcast_in_dim", "squeeze", "expand_dims",
+    "slice", "rev", "concatenate", "copy", "convert_element_type",
+    "reduce_precision", "stop_gradient", "real", "imag", "ppermute",
+    "all_to_all", "get", "swap", "optimization_barrier",
+})
+
+# 1-Lipschitz elementwise ops: |f(u+w) - f(u)| <= |w|.
+_LIPSCHITZ1 = frozenset({
+    "max", "min", "abs", "neg", "tanh", "erf", "sin", "cos", "logistic",
+    "clamp", "real", "imag",
+})
+
+# elementwise ops with a bounded output range: even a data-dependent
+# input yields a bounded data-dependent part (u = 0 decomposition).
+_RANGE_BOUNDED = {
+    "sign": 1.0, "eq": 1.0, "ne": 1.0, "lt": 1.0, "le": 1.0, "gt": 1.0,
+    "ge": 1.0, "and": 1.0, "or": 1.0, "xor": 1.0, "not": 1.0,
+    "is_finite": 1.0,
+}
+
+_CONTROL = frozenset({"scan", "while", "cond", "switch", "pallas_call"})
+
+
+def _literal_scalar(var) -> Optional[float]:
+    if not jaxpr_walk._is_literal(var):
+        return None
+    val = var.val
+    try:
+        if hasattr(val, "shape") and val.shape not in ((), (1,)):
+            return None
+        return float(val.item() if hasattr(val, "item") else val)
+    except Exception:
+        return None
+
+
+def _numel(var) -> int:
+    try:
+        return int(math.prod(var.aval.shape))
+    except Exception:
+        return 1
+
+
+class _SensInterp(jaxpr_walk.JaxprInterpreter):
+    """The norm-bound abstract interpreter (see module docstring)."""
+
+    def __init__(self):
+        # site key -> max bound observed across fixpoint re-evaluations
+        self.sanitize_sites: Dict[tuple, dict] = {}
+        self.wire_sites: Dict[tuple, dict] = {}
+        self.clip_sites: Dict[tuple, dict] = {}
+
+    # lattice -------------------------------------------------------------
+    def bottom(self) -> float:
+        return 0.0
+
+    def join(self, a: float, b: float) -> float:
+        return max(a, b)
+
+    # transfer ------------------------------------------------------------
+    def _site_key(self, eqn, ctx) -> tuple:
+        return (id(eqn), ctx.path, ctx.branch)
+
+    def on_eqn(self, eqn, in_vals, ctx, def_prim):
+        name = eqn.primitive.name
+        if name == tagging.CLIP:
+            c = float(eqn.params.get("bound", INF))
+            rec = self.clip_sites.setdefault(
+                self._site_key(eqn, ctx),
+                {"site": jaxpr_walk.format_site(eqn), "bound": c})
+            rec["bound"] = c
+            return [clip_transfer(in_vals[0], c)]
+        if name == tagging.SANITIZE:
+            rec = self.sanitize_sites.setdefault(
+                self._site_key(eqn, ctx),
+                {"site": jaxpr_walk.format_site(eqn), "bound": 0.0,
+                 "numel": _numel(eqn.invars[0])})
+            rec["bound"] = max(rec["bound"], in_vals[0])
+            return [0.0]   # the accountant charges this release
+        if name == tagging.RELEASE:
+            return [0.0]   # declared release: listed by the taint pass
+        if name == tagging.WIRE:
+            rec = self.wire_sites.setdefault(
+                self._site_key(eqn, ctx),
+                {"site": jaxpr_walk.format_site(eqn), "bound": 0.0,
+                 "label": eqn.params.get("label", "")})
+            rec["bound"] = max(rec["bound"], in_vals[0])
+            return [in_vals[0]]
+        if name == tagging.PENDING:
+            return [in_vals[0]]
+        if name in _CONTROL or name in jaxpr_walk._ALIGNED_CALLS:
+            return None    # boundary recursion in the base class
+        subs = [v for v in eqn.params.values()
+                if hasattr(v, "eqns") or hasattr(v, "jaxpr")]
+        if subs:
+            return None    # conservative subjaxpr recursion
+        return self._transfer(name, eqn, in_vals)
+
+    def _transfer(self, name, eqn, in_vals) -> List[float]:
+        n_out = len(eqn.outvars)
+        if not in_vals or all(v == 0.0 for v in in_vals):
+            # a function of data-independent values is data-independent
+            # (jaxprs are pure; PRNG draws consume only key bits).
+            return [0.0] * n_out
+        if name in ("add", "sub"):
+            return [add_transfer(in_vals[0], in_vals[1])] * n_out
+        if name in ("mul", "div"):
+            lit0 = _literal_scalar(eqn.invars[0])
+            lit1 = _literal_scalar(eqn.invars[1])
+            if name == "mul":
+                if lit0 is not None:
+                    return [scale_transfer(in_vals[1], lit0)] * n_out
+                if lit1 is not None:
+                    return [scale_transfer(in_vals[0], lit1)] * n_out
+            elif lit1 is not None and lit1 != 0.0:
+                return [scale_transfer(in_vals[0], 1.0 / lit1)] * n_out
+            return [INF] * n_out
+        if name == "clamp":
+            lo = _literal_scalar(eqn.invars[0])
+            hi = _literal_scalar(eqn.invars[2])
+            out = concat_transfer(*in_vals)
+            if lo is not None and hi is not None:
+                out = min(out, hi - lo)
+            return [out] * n_out
+        if name in _LIPSCHITZ1:
+            return [concat_transfer(*in_vals)] * n_out
+        if name in _STRUCTURAL:
+            return [concat_transfer(*in_vals)] * n_out
+        if name == "pad":
+            return [pad_transfer(in_vals[0],
+                                 in_vals[1] if len(in_vals) > 1 else 0.0)
+                    ] * n_out
+        if name == "select_n":
+            if in_vals[0] == 0.0:   # data-independent predicate
+                return [concat_transfer(*in_vals[1:])] * n_out
+            return [INF] * n_out
+        if name in ("gather", "take", "dynamic_slice"):
+            idx_dep = any(v != 0.0 for v in in_vals[1:])
+            return [in_vals[0] if not idx_dep else INF] * n_out
+        if name == "dynamic_update_slice":
+            if any(v != 0.0 for v in in_vals[2:]):
+                return [INF] * n_out
+            return [concat_transfer(in_vals[0], in_vals[1])] * n_out
+        if name == "reduce_sum":
+            out_n = _numel(eqn.outvars[0])
+            in_n = _numel(eqn.invars[0])
+            reduced = max(1, in_n // max(1, out_n))
+            return [reduce_sum_transfer(in_vals[0], reduced)] * n_out
+        if name in ("reduce_max", "reduce_min"):
+            return [in_vals[0]] * n_out
+        if name in ("floor", "round", "ceil"):
+            # |floor(u+w) - floor(u)| <= |w| + 1
+            return [in_vals[0] + 1.0] * n_out
+        if name in _RANGE_BOUNDED:
+            return [_RANGE_BOUNDED[name]] * n_out
+        # unknown op over a data-dependent input: no bound.
+        return [INF] * n_out
+
+
+def _fmt_bound(b: float):
+    return None if math.isinf(b) else b
+
+
+def analyze_sensitivity(closed_jaxpr, source_labels: Dict[int, str], *,
+                        clip_c: float | None, check: bool = True) -> dict:
+    """Run the norm-bound pass over a train-step jaxpr.
+
+    ``source_labels`` marks top-level invar positions holding raw data
+    (seeded at bound inf); every other input — params, keys, step
+    counters — seeds at 0 (data-independent). ``clip_c`` is the clip
+    constant the config (and hence the accountant) declares; ``check``
+    emits findings (off for negative-control configs, which still get a
+    certificate).
+
+    Findings:
+      * ``unclipped-sanitize``      — noise added to an UNBOUNDED value;
+      * ``sensitivity-exceeds-clip``— bounded, but above the declared C;
+      * ``clip-bound-mismatch``     — clip_tree tagged a different C
+        than the config claims;
+      * ``wire-sensitivity``        — a wire buffer with nonzero bound
+        (pre-noise data on the wire).
+    """
+    interp = _SensInterp()
+    jaxpr, _ = jaxpr_walk._unpack(closed_jaxpr)
+    in_vals = [INF if i in source_labels else 0.0
+               for i in range(len(jaxpr.invars))]
+    interp.run(closed_jaxpr, in_vals)
+
+    findings: List[dict] = []
+    sanitize_rows = []
+    for rec in interp.sanitize_sites.values():
+        b = rec["bound"]
+        l2 = None if math.isinf(b) else b * math.sqrt(rec["numel"])
+        sanitize_rows.append({"site": rec["site"], "coord_bound":
+                              _fmt_bound(b), "l2_bound": l2,
+                              "numel": rec["numel"]})
+        if not check or clip_c is None:
+            continue
+        if math.isinf(b):
+            findings.append({
+                "kind": "unclipped-sanitize", "site": rec["site"],
+                "detail": "noise added to a value with no provable "
+                          "coordinate bound (unclipped data path)"})
+        elif b > clip_c * (1.0 + _TOL):
+            findings.append({
+                "kind": "sensitivity-exceeds-clip", "site": rec["site"],
+                "bound": b, "clip_c": clip_c})
+    clip_rows = []
+    for rec in interp.clip_sites.values():
+        clip_rows.append({"site": rec["site"], "bound": rec["bound"]})
+        if check and clip_c is not None and not math.isclose(
+                rec["bound"], clip_c, rel_tol=1e-6):
+            findings.append({
+                "kind": "clip-bound-mismatch", "site": rec["site"],
+                "declared": rec["bound"], "config": clip_c})
+    wire_bound = 0.0
+    for rec in interp.wire_sites.values():
+        wire_bound = max(wire_bound, rec["bound"])
+        if check and rec["bound"] > 0.0:
+            findings.append({
+                "kind": "wire-sensitivity", "site": rec["site"],
+                "bound": _fmt_bound(rec["bound"]),
+                "detail": "wire payload carries un-sanitized "
+                          "data-dependent content"})
+    return {
+        "findings": findings,
+        "sanitize_sites": sorted(sanitize_rows, key=lambda r: r["site"]),
+        "clip_sites": sorted(clip_rows, key=lambda r: r["site"]),
+        "wire_coord_bound": _fmt_bound(wire_bound),
+    }
+
+
+# ==========================================================================
+# Interval arithmetic + the qsgd/qsgdf integer-range certificate.
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class Interval:
+    """Closed interval [lo, hi] over the reals (ints are exact floats
+    well below 2^53 here)."""
+
+    lo: float
+    hi: float
+
+    def __post_init__(self):
+        if self.lo > self.hi:
+            raise ValueError(f"empty interval [{self.lo}, {self.hi}]")
+
+    def add(self, other: "Interval") -> "Interval":
+        return Interval(self.lo + other.lo, self.hi + other.hi)
+
+    def scale(self, c: float) -> "Interval":
+        a, b = self.lo * c, self.hi * c
+        return Interval(min(a, b), max(a, b))
+
+    def clamp(self, lo: float, hi: float) -> "Interval":
+        return Interval(min(max(self.lo, lo), hi),
+                        min(max(self.hi, lo), hi))
+
+    def join(self, other: "Interval") -> "Interval":
+        return Interval(min(self.lo, other.lo), max(self.hi, other.hi))
+
+    def shift_left(self, bits: int) -> "Interval":
+        return self.scale(float(1 << bits))
+
+    def or_disjoint(self, other: "Interval") -> "Interval":
+        """OR of non-negative fields with disjoint set-bit ranges — the
+        sub-byte pack. For disjoint fields OR == ADD, which is how the
+        pack stays exactly invertible."""
+        if self.lo < 0 or other.lo < 0:
+            raise ValueError("or_disjoint needs non-negative fields")
+        return self.add(other)
+
+    def within(self, lo: float, hi: float) -> bool:
+        return self.lo >= lo and self.hi <= hi
+
+    def as_list(self) -> List[float]:
+        return [self.lo, self.hi]
+
+
+def qsgd_range_certificate(bits: int, *, fused: bool, plane_elems: int,
+                           levels: int | None = None) -> dict:
+    """Symbolically re-derive the qsgd/qsgdf wire encoding and prove
+    every intermediate stays in its representable range.
+
+    Mirrors ``QSGDCompressor.compress`` / ``wire_compress.qsgd_pack``
+    step for step: stochastic level in [0, s] after the min, signed
+    q in [-s, s], offset encode q + s in [0, 2s], k = 8/bits fields
+    OR-packed per u8 byte, plus the 4 bitcast norm tail bytes (fused).
+    ``levels`` overrides s = 2^(bits-1) - 1 for tests that need to see
+    the certificate FAIL.
+    """
+    s = levels if levels is not None else 2 ** (bits - 1) - 1
+    findings: List[dict] = []
+    # ratio = |x| * s / max(norm, eps) >= 0; floor + stochastic carry
+    # keeps it >= 0; min(level, s) clamps the top.
+    level = Interval(0.0, INF).clamp(0.0, float(s))
+    # q = sign(x) * level in [-s, s]
+    q = level.join(level.scale(-1.0))
+    off = q.add(Interval(float(s), float(s)))       # offset encode
+    if not off.within(0.0, float(2 ** bits - 1)):
+        findings.append({
+            "kind": "int-range-overflow", "stage": "offset",
+            "range": off.as_list(), "repr": [0, 2 ** bits - 1]})
+    pack = 8 // bits if bits in (2, 4) else 1
+    if pack > 1:
+        byte = Interval(0.0, 0.0)
+        for j in range(pack):
+            byte = byte.or_disjoint(off.shift_left(j * bits))
+        wire_dtype = "u8"
+    elif fused:
+        byte = off                                   # qsgdf:8 ships q+s u8
+        wire_dtype = "u8"
+    else:
+        byte = q                                     # qsgd:8 ships int8
+        wire_dtype = "s8"
+    repr_lo, repr_hi = (-128.0, 127.0) if wire_dtype == "s8" \
+        else (0.0, 255.0)
+    if not byte.within(repr_lo, repr_hi):
+        findings.append({
+            "kind": "int-range-overflow", "stage": "wire-byte",
+            "range": byte.as_list(), "repr": [repr_lo, repr_hi]})
+    payload_bytes = -(-plane_elems // pack) + (4 if fused else 0)
+    return {
+        "bits": bits, "levels": s, "fused": fused,
+        "q_range": q.as_list(), "offset_range": off.as_list(),
+        "byte_range": byte.as_list(), "wire_dtype": wire_dtype,
+        "norm_tail_bytes": 4 if fused else 0,
+        "payload_bytes": payload_bytes,
+        "findings": findings,
+    }

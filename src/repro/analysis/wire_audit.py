@@ -39,15 +39,20 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.analysis import jaxpr_taint, prng_lint
-from repro.core import (baselines, gossip, gradient_push,
-                        method as method_mod, plane as plane_mod, sdm_dsgd,
-                        tagging, topology)
+from repro.analysis import calibration, jaxpr_taint, prng_lint, sensitivity
+from repro.core import (baselines, clipping, compressor as compressor_mod,
+                        gossip, gradient_push, method as method_mod,
+                        plane as plane_mod, privacy, sdm_dsgd, tagging,
+                        topology)
 from repro.kernels.sdm_update.sdm_update import LANE as KERNEL_LANE
 from repro.launch import hlo_analysis
 
-__all__ = ["AuditConfig", "MATRIX", "audit_config", "expected_permutes",
-           "allowed_draw_shapes"]
+__all__ = ["AuditConfig", "MATRIX", "PASSES", "audit_config",
+           "expected_permutes", "allowed_draw_shapes"]
+
+#: every audit pass, in report order; ``--pass`` selects a subset.
+PASSES = ("taint", "prng", "wire", "sensitivity", "calibration", "range",
+          "overlap")
 
 N_NODES = 4
 DIM = 2 * plane_mod.LANE          # one (2, 128) wire plane
@@ -343,32 +348,146 @@ def _wire_findings(ac: AuditConfig, meth, seq, cfg, hlo, per_node) -> List:
     return findings
 
 
-def audit_config(ac: AuditConfig) -> dict:
-    """Run all three passes on one configuration; returns the report row."""
+def _compressor_for(meth, cfg) -> Optional[compressor_mod.Compressor]:
+    if meth.config_cls is sdm_dsgd.SDMConfig:
+        return sdm_dsgd.compressor_of(cfg)
+    if meth.config_cls is gradient_push.GradientPushConfig:
+        return cfg.make_compressor()
+    return None
+
+
+def accountant_view(ac: AuditConfig, meth, cfg, per_node) -> dict:
+    """The privacy constants the RDP accountant charges for this config
+    — the certificate column the jaxpr-extracted constants are checked
+    against (the other direction lives in ``analyze_calibration``)."""
+    d_total = sum(int(np.prod(v.shape))
+                  for v in jax.tree.leaves(per_node))
+    clip_c = float(getattr(cfg, "clip_c", 0.0) or 0.0) or None
+    G = clipping.sensitivity_G(clip_c, d_total) if clip_c else None
+    comp = _compressor_for(meth, cfg)
+    p_rel = comp.release_probability if comp is not None else 1.0
+    view = {
+        "sigma": ac.sigma,
+        "clip_c": clip_c,
+        "d": d_total,
+        "G": G,
+        "release_p": list(p_rel) if isinstance(p_rel, tuple) else p_rel,
+        "sigma_times_c": (ac.sigma * clip_c) if clip_c else None,
+        "compressor": comp.name if comp is not None else None,
+        "coord_inflation_at_c":
+            comp.coord_sensitivity_transfer(clip_c, (DIM,))
+            if (comp is not None and clip_c) else None,
+    }
+    if ac.sigma > 0.0 and clip_c:
+        try:
+            params = privacy.PrivacyParams(
+                G=G, m=BATCH, tau=1.0 / BATCH, p=p_rel, sigma=ac.sigma)
+            view["epsilon_at_T"] = privacy.epsilon_sdm(
+                params, STEPS, eps_target=0.5)
+        except ValueError:
+            view["epsilon_at_T"] = None
+    return view
+
+
+def _range_certificate(ac: AuditConfig, meth, cfg, hlo, per_node
+                       ) -> Tuple[List[dict], Optional[dict]]:
+    """Integer-range pass: only quantized wire formats have integer
+    planes to certify; everything else is trivially in-range f32."""
+    comp = _compressor_for(meth, cfg)
+    if not isinstance(comp, compressor_mod.QSGDCompressor):
+        return [], None
+    spec = plane_mod.ParamPlane.for_tree(per_node)
+    (p_rows, p_lane), = spec.plane_shapes()
+    fused = isinstance(comp, compressor_mod.FusedQSGDCompressor)
+    cert = sensitivity.qsgd_range_certificate(
+        comp.bits, fused=fused, plane_elems=p_rows * p_lane)
+    findings = list(cert.pop("findings"))
+    # the proved wire dtype must actually appear in the HLO permute
+    # payloads — a silent widening to f32 would void the range proof.
+    payloads = hlo_analysis.permute_payloads(hlo)
+    if not any(pl["elems"].get(cert["wire_dtype"]) for pl in payloads):
+        findings.append({
+            "kind": "wire-dtype-missing", "dtype": cert["wire_dtype"],
+            "detail": "no collective-permute payload ships the certified "
+                      "integer dtype"})
+    return findings, cert
+
+
+def audit_config(ac: AuditConfig, passes=PASSES) -> dict:
+    """Run the selected audit passes on one configuration.
+
+    ``passes`` (an iterable of ``PASSES`` names) lets CI shards and
+    local debugging run one pass without the rest; the report row always
+    carries every key, with unselected passes empty and their
+    certificate fields ``None``.
+    """
+    passes = frozenset(passes)
     meth, seq, cfg, jaxpr, hlo, per_node = _build(ac)
+    source_labels = {1: "data", 2: "data"}
 
-    taint = jaxpr_taint.analyze_taint(jaxpr, {1: "data", 2: "data"})
+    taint = jaxpr_taint.analyze_taint(jaxpr, source_labels) \
+        if "taint" in passes else None
     prng = prng_lint.analyze_prng(
-        jaxpr, allowed_shapes=allowed_draw_shapes(per_node))
-    wire = _wire_findings(ac, meth, seq, cfg, hlo, per_node)
+        jaxpr, allowed_shapes=allowed_draw_shapes(per_node)) \
+        if "prng" in passes else None
+    wire = _wire_findings(ac, meth, seq, cfg, hlo, per_node) \
+        if "wire" in passes else []
 
-    taint_findings = list(taint["findings"])
-    if ac.expect_taint:
+    # negative-control configs get certificates but no certifier gates:
+    # their whole point is that the QUALITATIVE pass flags them.
+    claims = (not ac.expect_taint) and ac.sigma > 0.0
+    clip_c = float(getattr(cfg, "clip_c", 0.0) or 0.0) or None
+    sens = sensitivity.analyze_sensitivity(
+        jaxpr, source_labels, clip_c=clip_c, check=claims) \
+        if "sensitivity" in passes else None
+    calib = calibration.analyze_calibration(
+        jaxpr, expected_sigma=ac.sigma, expected_clip=clip_c,
+        check=claims) if "calibration" in passes else None
+    rng_findings, rng_cert = _range_certificate(
+        ac, meth, cfg, hlo, per_node) if "range" in passes else ([], None)
+    ovl = calibration.analyze_overlap(
+        jaxpr, overlap=ac.overlap,
+        needs_replicas=gossip.needs_replicas(seq)) \
+        if "overlap" in passes else None
+
+    taint_findings = list(taint["findings"]) if taint else []
+    if taint and ac.expect_taint:
         if taint_findings:
             taint_findings = []     # expected dirt, analyzer has teeth
         else:
             taint_findings = [{"kind": "expected-taint-missing",
                                "detail": "known-non-private config produced "
                                          "no taint finding"}]
-    violations = taint_findings + prng["findings"] + wire
+    sens_findings = sens["findings"] if sens else []
+    calib_findings = calib["findings"] if calib else []
+    ovl_findings = ovl["findings"] if ovl else []
+    prng_findings = prng["findings"] if prng else []
+    violations = (taint_findings + prng_findings + wire + sens_findings
+                  + calib_findings + rng_findings + ovl_findings)
+    certificate = {
+        "accountant": accountant_view(ac, meth, cfg, per_node),
+        "sanitize_bounds": sens["sanitize_sites"] if sens else None,
+        "wire_coord_bound": sens["wire_coord_bound"] if sens else None,
+        "clip_sites": sens["clip_sites"] if sens else None,
+        "extracted_noise": calib["sanitize_sites"] if calib else None,
+        "integer_ranges": rng_cert,
+        "overlap": ({"verdict": ovl["verdict"],
+                     "n_pending": ovl["n_pending"]} if ovl else None),
+    }
     return {
         "id": ac.id,
         "expect_taint": ac.expect_taint,
+        "passes": sorted(passes & set(PASSES)),
         "taint": taint_findings,
-        "prng": prng["findings"],
+        "prng": prng_findings,
         "wire": wire,
-        "releases": taint["releases"],
-        "n_draws": prng["n_draws"],
-        "n_sanitize_sites": taint["n_sanitize_sites"],
+        "sensitivity": sens_findings,
+        "calibration": calib_findings,
+        "range": rng_findings,
+        "overlap": ovl_findings,
+        "certificate": certificate,
+        "releases": taint["releases"] if taint else [],
+        "n_draws": prng["n_draws"] if prng else 0,
+        "n_sanitize_sites": taint["n_sanitize_sites"] if taint else 0,
         "status": "fail" if violations else "pass",
     }

@@ -16,6 +16,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import tagging
+
 __all__ = ["clip_coordinates", "clip_tree", "sensitivity_G"]
 
 
@@ -25,7 +27,15 @@ def clip_coordinates(g: jax.Array, c: float) -> jax.Array:
 
 
 def clip_tree(grads: Any, c: float) -> Any:
-    return jax.tree.map(lambda g: clip_coordinates(g, c), grads)
+    """Clamp every leaf to [-c, c] and declare the bound in the jaxpr.
+
+    The ``clip_bound`` tag (identity at runtime) is what lets the
+    sensitivity certifier seed its norm-bound domain at c instead of
+    having to recognize XLA's clamp lowering, and what it cross-checks
+    against the clip the accountant was told about.
+    """
+    clipped = jax.tree.map(lambda g: clip_coordinates(g, c), grads)
+    return tagging.clip_bound(clipped, bound=c)
 
 
 def sensitivity_G(c: float, d: int) -> float:

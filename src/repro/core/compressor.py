@@ -210,6 +210,25 @@ class Compressor:
         return float(self.wire_bits(shape, value_bits=value_bits,
                                     index_sync=index_sync, node=node))
 
+    # -- sensitivity-transfer declaration ---------------------------------
+    def coord_sensitivity_transfer(self, beta: float,
+                                   shape: Tuple[int, ...]) -> float:
+        """Worst-case coordinate bound after a compress -> decompress
+        roundtrip of a tensor whose coordinates are bounded by ``beta``.
+
+        The privacy certifier (``repro.analysis.sensitivity``) consumes
+        this declaration: unbiased compressors inflate magnitudes (the
+        1/p rescale, QSGD's norm-coupled levels), and the certificate
+        records by how much so the released-value range is a proved
+        constant, not folklore. Families that do not declare a transfer
+        are conservatively unbounded — a new compressor MUST override
+        this to enter the audited matrix (analyzer contract).
+        ``tests/test_sensitivity_domain.py`` property-checks each
+        declaration against the concrete roundtrip.
+        """
+        del shape
+        return math.inf if beta > 0.0 else 0.0
+
 
 # ==========================================================================
 # Bernoulli (the paper's Definition-2 sparsifier; dense payload).
@@ -252,6 +271,12 @@ class BernoulliCompressor(Compressor):
                   node=None) -> int:
         return int(round(self.wire_bits_exact(
             shape, value_bits=value_bits, index_sync=index_sync, node=node)))
+
+    def coord_sensitivity_transfer(self, beta, shape):
+        # kept coordinates are rescaled by 1/p; the sparsest node's
+        # budget is the worst case under per-node p.
+        del shape
+        return beta / self.p_min
 
 
 # ==========================================================================
@@ -336,6 +361,15 @@ class FixedKCompressor(Compressor):
             bits += kb * index_bits(nb)
         return bits
 
+    def coord_sensitivity_transfer(self, beta, shape):
+        # kept blocks are rescaled by nb/kb; min-p (fewest kept blocks)
+        # maximizes the rescale. Distinct top-k indices mean scatter-add
+        # never stacks two kept blocks on one coordinate.
+        d = int(math.prod(shape))
+        nb = -(-d // self.block)
+        kb = sparsifier.num_kept(nb, self.p_min)
+        return beta * nb / kb
+
 
 @dataclasses.dataclass(frozen=True)
 class RowsCompressor(Compressor):
@@ -383,6 +417,11 @@ class RowsCompressor(Compressor):
         if not index_sync:
             bits += kb * index_bits(rows)
         return bits
+
+    def coord_sensitivity_transfer(self, beta, shape):
+        rows, _ = self._rows_cols(tuple(shape))
+        kb = sparsifier.num_kept(rows, self.p_min)
+        return beta * rows / kb
 
 
 # ==========================================================================
@@ -482,6 +521,12 @@ class QSGDCompressor(Compressor):
         if self.pack_factor > 1:     # u8-packed lanes: exact wire bytes
             return -(-d // self.pack_factor) * 8 + 32   # + the norm scalar
         return d * self.bits + 32
+
+    def coord_sensitivity_transfer(self, beta, shape):
+        # a decompressed coordinate is (||x||/s) * q with |q| <= s, so it
+        # is bounded by the leaf l2 norm <= beta * sqrt(d): the quantizer
+        # can concentrate the whole norm budget on one coordinate.
+        return beta * math.sqrt(int(math.prod(shape)))
 
 
 @dataclasses.dataclass(frozen=True)

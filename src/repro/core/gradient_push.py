@@ -81,6 +81,7 @@ import jax.numpy as jnp
 
 from repro.core import compressor as compressor_mod, gossip
 from repro.core import plane as plane_mod
+from repro.core import tagging
 from repro.core.sdm_dsgd import (_plane_payload_exchange, _replica_planes,
                                  masked_grad, sparsify_planes_stacked)
 
@@ -271,10 +272,10 @@ class GradientPushReference:
             # increments; this step's deliveries wait in the double
             # buffer (weights of the round the payload crossed).
             s = jax.tree.map(jnp.add, state.s, state.nb)
-            nb = jax.tree.map(
+            nb = tagging.pending_buffer(jax.tree.map(
                 lambda dh, s_: gossip.apply_weights_dense(
                     p_t, dh, include_self=False).astype(s_.dtype),
-                delta_hat, s)
+                delta_hat, s))
         else:
             # incremental neighbour sum: the weights of the round the
             # differential was exchanged in (matches the distributed
@@ -421,7 +422,7 @@ def gradient_push_distributed_step(state: GradientPushState, grads: PyTree, *,
             # deliveries; this step's exchange result feeds ONLY the loop
             # carry, so its permutes can fly under the next gradient.
             s = tuple(s_ + p_ for s_, p_ in zip(state.s, state.nb))
-            nb_store = nb_sum
+            nb_store = tagging.pending_buffer(nb_sum)
         else:
             s = tuple(s_ + nb for s_, nb in zip(state.s, nb_sum))
             nb_store = None

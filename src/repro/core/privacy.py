@@ -34,6 +34,7 @@ __all__ = [
     "per_step_rdp",
     "epsilon_sdm",
     "epsilon_alternative",
+    "sigma_sq_for_epsilon",
     "sigma_for_budget",
     "max_iterations",
     "PrivacyAccountant",
@@ -153,6 +154,20 @@ def rdp_alpha(eps: float, delta: float) -> float:
     return 2.0 * math.log(1.0 / delta) / eps + 1.0
 
 
+def _theorem1_K(alpha: float, *, G: float, m: int, tau: float, p: float,
+                participation_q: float = 1.0) -> float:
+    """Theorem 1's per-step RDP with sigma^2 factored out.
+
+    K(alpha) = 4 * alpha * p * (q * tau * G / m)^2, so a step is
+    K/sigma^2-RDP at order alpha. This single coefficient is the ONLY
+    place the sigma <-> epsilon trade-off lives: ``per_step_rdp`` (and
+    hence ``epsilon_sdm``) divides it by sigma^2, and
+    ``sigma_sq_for_epsilon`` inverts it — so the forward accountant and
+    Corollary 2's calibration can never drift apart.
+    """
+    return 4.0 * alpha * p * (participation_q * tau * G / m) ** 2
+
+
 def per_step_rdp(params: PrivacyParams, alpha: float) -> float:
     """Expected per-step RDP of the released S(d_t) (Theorem 1 proof).
 
@@ -165,9 +180,9 @@ def per_step_rdp(params: PrivacyParams, alpha: float) -> float:
     recovers Theorem 1 verbatim.
     Requires sigma^2 >= 1/1.25 for the subsampling amplification.
     """
-    return 4.0 * alpha * params.p_worst * (
-        params.participation_q * params.tau * params.G
-        / (params.m * params.sigma)) ** 2
+    return _theorem1_K(
+        alpha, G=params.G, m=params.m, tau=params.tau, p=params.p_worst,
+        participation_q=params.participation_q) / params.sigma ** 2
 
 
 def epsilon_sdm(params: PrivacyParams, T: int, eps_target: float) -> float:
@@ -200,14 +215,35 @@ def epsilon_alternative(params: PrivacyParams, T: int, eps_target: float) -> flo
     return T * rho + eps_target / 2.0
 
 
+def sigma_sq_for_epsilon(*, G: float, m: int, tau: float, p: float, T: int,
+                         eps: float, delta: float,
+                         participation_q: float = 1.0) -> float:
+    """Exact inversion of Theorem 1 for sigma^2 at a total budget eps.
+
+    Theorem 1 reads eps_total = T*K(alpha)/sigma^2 + eps/2 with
+    alpha = rdp_alpha(eps, delta); solving eps_total = eps gives
+    sigma^2 = 2*T*K(alpha)/eps. Because this uses the SAME
+    ``_theorem1_K`` the forward accountant divides by sigma^2, feeding
+    the returned sigma back through ``epsilon_sdm`` reproduces eps
+    identically (up to float round-off) — the round-trip
+    ``tests/test_core_privacy.py`` asserts.
+    """
+    _check_eps_target(eps)
+    alpha = rdp_alpha(eps, delta)
+    return 2.0 * T * _theorem1_K(
+        alpha, G=G, m=m, tau=tau, p=p, participation_q=participation_q) / eps
+
+
 def sigma_for_budget(G: float, m: int, p: float, T: int, eps: float,
                      delta: float = 1e-5, clamp: bool = False) -> float:
     """Corollary 2: sigma so that T iterations are (eps, delta)-DP.
 
     sigma^2 = 8*p*T*G^2*(2 log(1/delta) + eps) / (m^4 * eps^2), using the
-    paper's headline subsampling rate tau = 1/m. Raises if the resulting
-    sigma^2 violates the 1/1.25 amplification precondition, which the
-    paper guarantees whenever eps <= 10*p*T*G^2/m^4.
+    paper's headline subsampling rate tau = 1/m — the closed form is
+    exactly ``sigma_sq_for_epsilon`` at tau = 1/m, which is how it is
+    computed here. Raises if the resulting sigma^2 violates the 1/1.25
+    amplification precondition, which the paper guarantees whenever
+    eps <= 10*p*T*G^2/m^4.
 
     With ``clamp=True`` (for budgets with T below Theorem 4's T_max) the
     returned sigma is floored at sqrt(1/1.25): strictly MORE noise than
@@ -221,8 +257,8 @@ def sigma_for_budget(G: float, m: int, p: float, T: int, eps: float,
         raise ValueError(f"G must be > 0, got {G!r}")
     if T < 1:
         raise ValueError(f"T must be >= 1, got {T!r}")
-    sigma_sq = 8.0 * p * T * G ** 2 * (2.0 * math.log(1.0 / delta) + eps) / (
-        m ** 4 * eps ** 2)
+    sigma_sq = sigma_sq_for_epsilon(G=G, m=m, tau=1.0 / m, p=p, T=T,
+                                    eps=eps, delta=delta)
     if sigma_sq < SIGMA_SQ_MIN:
         if clamp:
             return math.sqrt(SIGMA_SQ_MIN)

@@ -563,10 +563,10 @@ class ReferenceSimulator:
             # next advance — exactly the distributed double buffer.
             w_t = self._weights_at(state.step)
             s = jax.tree.map(jnp.add, state.s, state.nb)
-            nb = jax.tree.map(
+            nb = tagging.pending_buffer(jax.tree.map(
                 lambda v, s_: gossip.apply_weights_dense(
                     w_t, v, include_self=False).astype(s_.dtype),
-                sd, s)
+                sd, s))
             return state._replace(x=x, s=s, e=new_e, nb=nb), sd
         if self.time_varying:
             # fold this round's weighted increments into s — the weights
@@ -874,7 +874,7 @@ def distributed_advance(state: SDMState, *, base_key: jax.Array, axis_name,
         # matching -done past the entire gradient computation of the
         # next iteration.
         s = tuple(s_ + p_ for s_, p_ in zip(state.s, state.nb))
-        return state._replace(x=x, s=s, nb=nb)
+        return state._replace(x=x, s=s, nb=tagging.pending_buffer(nb))
     s = tuple(s_ + nb_ for s_, nb_ in zip(state.s, nb))
     return state._replace(x=x, s=s)
 
@@ -958,7 +958,8 @@ def distributed_step_fused(state: SDMFusedState, grads: PyTree, *,
     if cfg.overlap:
         # one-step-stale double buffer (see distributed_advance).
         s = tuple(s_ + p_ for s_, p_ in zip(state.s, state.nb))
-        return SDMFusedState(x=x, s=s, step=state.step + 1, nb=nb)
+        return SDMFusedState(x=x, s=s, step=state.step + 1,
+                             nb=tagging.pending_buffer(nb))
     s = tuple(s_ + nb_ for s_, nb_ in zip(state.s, nb))
     return SDMFusedState(x=x, s=s, step=state.step + 1)
 

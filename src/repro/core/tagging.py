@@ -17,6 +17,16 @@ tracing into the jaxpr where the analyzer can see it:
 * ``declared_release(x)`` — an explicitly acknowledged release of a
   data-derived aggregate (the training-loss pmean). Clears taint but is
   counted separately so the audit report lists every declared release.
+* ``clip_bound(tree, bound=C)`` — applied by ``clipping.clip_tree``: the
+  value is coordinate-clamped to [-C, C], carrying the DECLARED clip
+  constant into the jaxpr so the sensitivity certifier can seed its
+  norm-bound domain at C and cross-check the declared C against the
+  config the accountant charges.
+* ``pending_buffer(x)``  — applied to the overlapped transport's fresh
+  double-buffer planes (``cfg.overlap``): this exchange result must ride
+  the loop carry untouched until the NEXT round (one-step staleness).
+  The overlap-hazard pass keys on it to prove write-before-read ordering
+  statically.
 
 XLA sees nothing: the lowering returns the operand unchanged, so tagged
 and untagged programs compile to identical HLO.
@@ -39,9 +49,11 @@ PyTree = Any
 SANITIZE = "privacy_sanitize"
 WIRE = "wire_payload"
 RELEASE = "declared_release"
+CLIP = "clip_bound"
+PENDING = "pending_buffer"
 
 #: jaxpr-level names of every tag primitive (the analyzer's contract).
-TAG_PRIMITIVES = frozenset({SANITIZE, WIRE, RELEASE})
+TAG_PRIMITIVES = frozenset({SANITIZE, WIRE, RELEASE, CLIP, PENDING})
 
 
 def _identity_primitive(name: str) -> Primitive:
@@ -57,6 +69,8 @@ def _identity_primitive(name: str) -> Primitive:
 sanitize_p = _identity_primitive(SANITIZE)
 wire_payload_p = _identity_primitive(WIRE)
 declared_release_p = _identity_primitive(RELEASE)
+clip_bound_p = _identity_primitive(CLIP)
+pending_buffer_p = _identity_primitive(PENDING)
 
 
 def sanitize(tree: PyTree, *, label: str = "gaussian_mask") -> PyTree:
@@ -73,3 +87,25 @@ def declared_release(tree: PyTree, *, label: str = "metric") -> PyTree:
     """Mark ``tree`` as a deliberate data-derived release (identity)."""
     return jax.tree.map(lambda v: declared_release_p.bind(v, label=label),
                         tree)
+
+
+def clip_bound(tree: PyTree, *, bound: float) -> PyTree:
+    """Declare every leaf coordinate-clamped to ``[-bound, bound]``.
+
+    The ``bound`` param rides the jaxpr, so the sensitivity certifier
+    both SEEDS its norm-bound domain at the declared C and cross-checks
+    that C against the config's ``clip_c``.
+    """
+    return jax.tree.map(
+        lambda v: clip_bound_p.bind(v, bound=float(bound)), tree)
+
+
+def pending_buffer(tree: PyTree, *, label: str = "overlap") -> PyTree:
+    """Mark ``tree`` as an overlap double-buffer write (identity).
+
+    The tagged value is the FRESH exchange result under ``cfg.overlap``;
+    the overlap-hazard pass proves it rides the loop carry untouched and
+    is consumed exactly one round later.
+    """
+    return jax.tree.map(
+        lambda v: pending_buffer_p.bind(v, label=label), tree)

@@ -1,0 +1,44 @@
+"""Deliberately-MIScalibrated distributed step: the certifier's negative
+fixture.
+
+Every QUALITATIVE invariant holds — the wire payload is sanitize-tagged
+before the vetted ``gossip.exchange``, keys split cleanly, the clip tag
+carries the config's C — so the taint/prng/wire passes all come back
+empty. What's wrong is QUANTITATIVE, twice over:
+
+* **unclipped residual** — a ``0.05 * g`` raw-gradient correction is
+  added AFTER ``clip_tree``, so the value the noise lands on has no
+  provable coordinate bound; ``analyze_sensitivity`` must report exactly
+  one ``unclipped-sanitize``.
+* **noise-scale drift** — the Gaussian mask ships ``1.3 * sigma`` while
+  the accountant charges ``sigma``; ``analyze_calibration`` must report
+  exactly one ``noise-scale-mismatch`` (jaxpr 1.3 vs accountant 1.0).
+
+This is the bug class no execution-based test can see: the trajectory
+is plausible, the wire is tagged, epsilon is simply wrong. Never
+executed — only traced.
+"""
+import jax
+
+from repro.core import clipping, gossip, tagging
+
+
+def miscalibrated_step(x, a, b, *, axis_name, schedule, base_key, step,
+                       gamma=0.2, sigma=1.0, clip_c=1.0):
+    """One gossip step whose privacy constants disagree with the code."""
+    r = a @ x - b
+    g = a.T @ r / a.shape[0]                       # raw gradient (tainted)
+
+    me = jax.lax.axis_index(axis_name)
+    key = gossip.node_round_key(base_key, me, step)
+
+    clipped = clipping.clip_tree(g, clip_c)
+    # BUG 1: un-clipped residual rides along after the clip — the
+    # sanitize operand's sensitivity is unbounded.
+    pre_noise = clipped + 0.05 * g
+    # BUG 2: the mask std is 1.3*sigma but the accountant charges sigma.
+    noise = (1.3 * sigma) * jax.random.normal(key, g.shape)
+    d = tagging.sanitize(pre_noise + noise, label="miscalibrated")
+
+    nbr = gossip.exchange(schedule, d, axis_name, step=step)
+    return x - gamma * (g + 0.0 * nbr)

@@ -2,18 +2,24 @@
 
 Three layers:
 
-* **in-process unit tests** of the two jaxpr analyzers on tiny traced
+* **in-process unit tests** of the jaxpr analyzers on tiny traced
   functions (no collectives, so the 1-device pytest process suffices):
   key-reuse / clean-split discrimination, fold_in non-consumption,
-  scan-invariant-key detection, and the padded-draw-shape rule.
-* **the broken fixture** (tests/fixtures/broken_method.py), traced on a
-  4-node fake mesh in a subprocess: the analyzer must report EXACTLY
-  the two seeded findings — one ``tainted-collective`` (un-noised wire)
-  and one ``key-reuse`` (noise key consumed twice) — and nothing else.
-  This regression-proofs the PR-1 bug class end to end.
+  scan-invariant-key detection, the padded-draw-shape rule, the
+  sensitivity certifier's bound propagation, the noise-scale extractor,
+  the overlap token pass, and the integer-range certificate.
+* **the fixtures**, each traced on a 4-node fake mesh in a subprocess:
+  - tests/fixtures/broken_method.py: the QUALITATIVE analyzer must
+    report EXACTLY the two seeded findings — one ``tainted-collective``
+    (un-noised wire) and one ``key-reuse`` (noise key consumed twice) —
+    and nothing else (the PR-1 bug class end to end);
+  - tests/fixtures/miscalibrated_method.py: qualitatively clean, but
+    the QUANTITATIVE certifier must report exactly one
+    ``unclipped-sanitize`` and one ``noise-scale-mismatch``.
 * **the CLI quick matrix** (``python -m repro.analysis --quick``): zero
   findings, zero new violations, exit 0 on clean main — the same gate
-  CI runs over the full matrix.
+  CI runs over the full matrix — plus the per-config privacy
+  certificate block and the ``--only``/``--pass`` selectors.
 """
 import json
 import pathlib
@@ -23,6 +29,7 @@ import sys
 import pytest
 
 HELPER = pathlib.Path(__file__).parent / "helpers" / "analysis_check.py"
+CERT_HELPER = pathlib.Path(__file__).parent / "helpers" / "certifier_check.py"
 REPO = pathlib.Path(__file__).parent.parent
 SRC = str(REPO / "src")
 ENV = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root",
@@ -184,6 +191,238 @@ def test_expected_permutes_contract():
         == 3 * r
 
 
+# ------------------------------------------------- certifier unit layer
+
+def test_sensitivity_clean_clip_noise_sanitize():
+    import jax
+
+    from repro.analysis import sensitivity
+    from repro.core import clipping, tagging
+
+    def step(x, data, key):
+        g = data * x
+        g = clipping.clip_tree(g, 0.5)
+        g = g + 0.5 * jax.random.normal(key, g.shape)
+        g = tagging.sanitize(g)
+        return tagging.wire_payload(g)
+
+    import jax.numpy as jnp
+
+    jaxpr = jax.make_jaxpr(step)(jnp.ones(4), jnp.ones(4),
+                                 jax.random.PRNGKey(0))
+    rep = sensitivity.analyze_sensitivity(jaxpr, {1: "data"}, clip_c=0.5)
+    assert rep["findings"] == []
+    (site,) = rep["sanitize_sites"]
+    assert site["coord_bound"] == pytest.approx(0.5)
+    assert site["l2_bound"] == pytest.approx(0.5 * 2.0)   # sqrt(4) coords
+    assert rep["wire_coord_bound"] == 0.0
+
+
+def test_sensitivity_flags_unclipped_and_exceeding():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import sensitivity
+    from repro.core import clipping, tagging
+
+    def unclipped(x, data, key):
+        g = data * x
+        return tagging.sanitize(g + jax.random.normal(key, g.shape))
+
+    jaxpr = jax.make_jaxpr(unclipped)(jnp.ones(4), jnp.ones(4),
+                                      jax.random.PRNGKey(0))
+    rep = sensitivity.analyze_sensitivity(jaxpr, {1: "data"}, clip_c=0.5)
+    assert [f["kind"] for f in rep["findings"]] == ["unclipped-sanitize"]
+
+    def exceeding(x, data, key):
+        a = clipping.clip_tree(data * x, 0.5)
+        b = clipping.clip_tree(data + x, 0.5)
+        return tagging.sanitize(a + b + jax.random.normal(key, a.shape))
+
+    jaxpr = jax.make_jaxpr(exceeding)(jnp.ones(4), jnp.ones(4),
+                                      jax.random.PRNGKey(0))
+    rep = sensitivity.analyze_sensitivity(jaxpr, {1: "data"}, clip_c=0.5)
+    kinds = [f["kind"] for f in rep["findings"]]
+    assert kinds == ["sensitivity-exceeds-clip"], rep["findings"]
+    assert rep["findings"][0]["bound"] == pytest.approx(1.0)
+
+
+def test_sensitivity_flags_clip_mismatch_and_wire():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import sensitivity
+    from repro.core import clipping, tagging
+
+    def step(x, data):
+        g = clipping.clip_tree(data * x, 0.3)     # config says 0.5
+        return tagging.wire_payload(g)            # pre-noise on the wire
+
+    jaxpr = jax.make_jaxpr(step)(jnp.ones(4), jnp.ones(4))
+    rep = sensitivity.analyze_sensitivity(jaxpr, {1: "data"}, clip_c=0.5)
+    kinds = sorted(f["kind"] for f in rep["findings"])
+    assert kinds == ["clip-bound-mismatch", "wire-sensitivity"]
+    assert rep["wire_coord_bound"] == pytest.approx(0.3)
+
+
+def test_calibration_extracts_and_cross_checks_sigma():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import calibration
+    from repro.core import tagging
+
+    def noisy(x, key):
+        return tagging.sanitize(x + 2.0 * jax.random.normal(key, x.shape))
+
+    jaxpr = jax.make_jaxpr(noisy)(jnp.ones(4), jax.random.PRNGKey(0))
+    rep = calibration.analyze_calibration(jaxpr, expected_sigma=2.0,
+                                          expected_clip=None)
+    assert rep["findings"] == []
+    (site,) = rep["sanitize_sites"]
+    assert site["extracted_sigma"] == pytest.approx(2.0, rel=1e-4)
+
+    rep = calibration.analyze_calibration(jaxpr, expected_sigma=1.0,
+                                          expected_clip=None)
+    assert [f["kind"] for f in rep["findings"]] == ["noise-scale-mismatch"]
+    assert rep["findings"][0]["accountant_sigma"] == 1.0
+
+
+def test_calibration_flags_missing_noise():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import calibration
+    from repro.core import tagging
+
+    def no_noise(x):
+        return tagging.sanitize(x * 3.0)   # sanitize with no Gaussian
+
+    jaxpr = jax.make_jaxpr(no_noise)(jnp.ones(4))
+    rep = calibration.analyze_calibration(jaxpr, expected_sigma=1.0,
+                                          expected_clip=None)
+    assert [f["kind"] for f in rep["findings"]] == ["noise-scale-unextracted"]
+
+    def no_sanitize(x):
+        return x * 3.0
+
+    jaxpr = jax.make_jaxpr(no_sanitize)(jnp.ones(4))
+    rep = calibration.analyze_calibration(jaxpr, expected_sigma=1.0,
+                                          expected_clip=None)
+    assert [f["kind"] for f in rep["findings"]] == ["missing-noise"]
+
+
+def _overlap_report(body, overlap=True):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import calibration
+
+    def train(x0, nb0):
+        return jax.lax.scan(body, (x0, nb0), None, length=3)
+
+    jaxpr = jax.make_jaxpr(train)(jnp.ones(4), jnp.zeros(4))
+    return calibration.analyze_overlap(jaxpr, overlap=overlap)
+
+
+def test_overlap_one_step_stale_buffer_is_ok():
+    from repro.core import tagging
+
+    def body(c, _):
+        x, nb = c
+        fresh = tagging.pending_buffer(x * 0.5)   # this round's exchange
+        x = x + nb                                # consume LAST round's
+        return (x, fresh), None
+
+    rep = _overlap_report(body)
+    assert rep["findings"] == []
+    assert rep["verdict"] == "ok"
+    assert rep["n_pending"] == 1
+
+
+def test_overlap_same_round_read_is_flagged():
+    from repro.core import tagging
+
+    def body(c, _):
+        x, nb = c
+        fresh = tagging.pending_buffer(x * 0.5)
+        x = x + fresh                             # staleness 0, not 1
+        return (x, fresh), None
+
+    rep = _overlap_report(body)
+    assert rep["verdict"] == "hazard"
+    assert "pending-same-round-read" in {f["kind"] for f in rep["findings"]}
+
+
+def test_overlap_dropped_buffer_is_flagged():
+    from repro.core import tagging
+
+    def body(c, _):
+        x, nb = c
+        tagging.pending_buffer(x * 0.5)           # minted, never carried
+        return (x + nb, nb), None
+
+    rep = _overlap_report(body)
+    assert rep["verdict"] == "hazard"
+    assert "pending-not-carried" in {f["kind"] for f in rep["findings"]}
+
+
+def test_overlap_self_dependence_is_flagged():
+    from repro.core import tagging
+
+    def body(c, _):
+        x, nb = c
+        fresh = tagging.pending_buffer(nb * 0.5)  # depends on the OLD one
+        return (x + nb, fresh), None
+
+    rep = _overlap_report(body)
+    assert rep["verdict"] == "hazard"
+    assert "pending-self-dependence" in {f["kind"] for f in rep["findings"]}
+
+
+def test_overlap_tag_discipline():
+    from repro.core import tagging
+
+    def untagged(c, _):
+        x, nb = c
+        return (x + nb, x * 0.5), None
+
+    rep = _overlap_report(untagged, overlap=True)
+    assert [f["kind"] for f in rep["findings"]] == ["overlap-untagged"]
+
+    def tagged(c, _):
+        x, nb = c
+        fresh = tagging.pending_buffer(x * 0.5)
+        return (x + nb, fresh), None
+
+    rep = _overlap_report(tagged, overlap=False)
+    assert [f["kind"] for f in rep["findings"]] == ["pending-without-overlap"]
+
+
+def test_qsgd_range_certificate():
+    from repro.analysis import sensitivity
+
+    for bits, fused in ((2, True), (4, True), (4, False), (8, True)):
+        cert = sensitivity.qsgd_range_certificate(
+            bits, fused=fused, plane_elems=256)
+        assert cert["findings"] == [], (bits, fused)
+        assert cert["wire_dtype"] == "u8"
+    cert = sensitivity.qsgd_range_certificate(8, fused=False,
+                                              plane_elems=256)
+    assert cert["findings"] == []
+    assert cert["wire_dtype"] == "s8"
+    assert cert["q_range"] == [-127.0, 127.0]
+    # 4-bit fused: two fields per byte + the 4 norm tail bytes
+    cert = sensitivity.qsgd_range_certificate(4, fused=True,
+                                              plane_elems=256)
+    assert cert["payload_bytes"] == 256 // 2 + 4
+    # a broken quantizer (levels beyond the representable field) FAILS
+    cert = sensitivity.qsgd_range_certificate(8, fused=False,
+                                              plane_elems=256, levels=200)
+    assert [f["kind"] for f in cert["findings"]] == [
+        "int-range-overflow", "int-range-overflow"]
+
+
 # ------------------------------------------------------------- fixture layer
 
 @pytest.mark.slow
@@ -206,6 +445,37 @@ def test_broken_fixture_flags_exactly_the_seeded_bugs():
     assert rep["n_draws"] == 2
 
 
+@pytest.mark.slow
+def test_miscalibrated_fixture_flags_exactly_the_seeded_bugs():
+    out = subprocess.run([sys.executable, str(CERT_HELPER)],
+                         capture_output=True, text=True, env=ENV,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    rep = json.loads(out.stdout.splitlines()[-1])
+
+    # qualitatively CLEAN: the wire is tagged, keys split, no reuse —
+    # the taint/prng/overlap passes must stay silent...
+    assert rep["taint"] == [], rep["taint"]
+    assert rep["prng"] == [], rep["prng"]
+    assert rep["overlap"] == [], rep["overlap"]
+    # ...while the QUANTITATIVE certifier reports exactly the two
+    # seeded miscalibrations, both anchored in the fixture's trace.
+    sens_kinds = [f["kind"] for f in rep["sensitivity"]]
+    calib_kinds = [f["kind"] for f in rep["calibration"]]
+    assert sens_kinds == ["unclipped-sanitize"], rep["sensitivity"]
+    assert calib_kinds == ["noise-scale-mismatch"], rep["calibration"]
+    (mismatch,) = rep["calibration"]
+    assert mismatch["accountant_sigma"] == 1.0
+    assert mismatch["jaxpr_sigma"] == [pytest.approx(1.3, rel=1e-4)]
+    # the certificate still extracts the constants it DID find
+    (noise,) = rep["extracted_noise"]
+    assert noise["extracted_sigma"] == pytest.approx(1.3, rel=1e-4)
+    (clip,) = rep["clip_sites"]
+    assert clip["bound"] == 1.0
+    (bound,) = rep["sanitize_bounds"]
+    assert bound["coord_bound"] is None     # unbounded: the seeded bug
+
+
 # ----------------------------------------------------------------- CLI layer
 
 @pytest.mark.slow
@@ -226,3 +496,57 @@ def test_cli_quick_matrix_is_clean(tmp_path):
         if not row["expect_taint"]:
             assert row["n_sanitize_sites"] == 1, row["id"]
             assert len(row["releases"]) == 1, row["id"]
+    # the privacy certificate: per-config quantitative constants
+    for row in rep["configs"]:
+        cert = row["certificate"]
+        acc = cert["accountant"]
+        if row["expect_taint"]:
+            continue
+        # proved sensitivity at the sanitize site == the declared C
+        (site,) = cert["sanitize_bounds"]
+        assert site["coord_bound"] == pytest.approx(acc["clip_c"]), row["id"]
+        assert site["l2_bound"] == pytest.approx(acc["G"]), row["id"]
+        # extracted noise std == the accountant's sigma
+        (noise,) = cert["extracted_noise"]
+        assert noise["extracted_sigma"] == pytest.approx(
+            acc["sigma"], rel=1e-4), row["id"]
+        # nothing data-dependent on the wire after sanitization
+        assert cert["wire_coord_bound"] == 0.0, row["id"]
+        # overlap configs prove the one-step-stale double buffer
+        expect_verdict = "ok" if "+ov" in row["id"] else "n/a"
+        assert cert["overlap"]["verdict"] == expect_verdict, row["id"]
+        if "qsgd" in row["id"]:
+            assert cert["integer_ranges"] is not None, row["id"]
+
+
+@pytest.mark.slow
+def test_cli_selectors(tmp_path):
+    report = tmp_path / "LINT_report.json"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--devices", "4",
+         "--only", "sdm-dsgd/ring4/fixedk_packed/sigma1",
+         "--pass", "sensitivity", "--pass", "calibration",
+         "--out", str(report)],
+        capture_output=True, text=True, env=ENV, timeout=1200)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-3000:]
+    rep = json.loads(report.read_text())
+    assert rep["passes"] == ["sensitivity", "calibration"]
+    (row,) = rep["configs"]
+    assert row["id"] == "sdm-dsgd/ring4/fixedk_packed/sigma1"
+    assert row["passes"] == ["calibration", "sensitivity"]
+    # selected passes ran and proved their constants...
+    assert row["certificate"]["sanitize_bounds"], row
+    assert row["certificate"]["extracted_noise"], row
+    # ...unselected passes stayed off
+    assert row["taint"] == [] and row["n_sanitize_sites"] == 0
+    assert row["certificate"]["overlap"] is None
+    # sharding partitions the matrix without overlap
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--devices", "4",
+         "--quick", "--shard", "1/2", "--pass", "wire",
+         "--out", str(report)],
+        capture_output=True, text=True, env=ENV, timeout=1200)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-3000:]
+    rep = json.loads(report.read_text())
+    assert rep["shard"] == "1/2"
+    assert 0 < rep["n_configs"] < 8    # a strict subset of the quick set

@@ -53,6 +53,48 @@ def test_corollary2_sigma_inverts_theorem1():
     assert total == pytest.approx(eps, rel=0.01)
 
 
+@given(G=st.floats(0.5, 20.0), m=st.integers(100, 3000),
+       p=st.floats(0.05, 1.0), T=st.integers(1000, 500_000),
+       eps=st.floats(0.01, 2.0))
+@settings(max_examples=100, deadline=None)
+def test_sigma_epsilon_inversion_round_trips_exactly(G, m, p, T, eps):
+    """sigma_sq_for_epsilon is the EXACT inverse of Theorem 1: feeding
+    Corollary 2's sigma back through epsilon_sdm reproduces the budget
+    to float round-off (both sides now share the one _theorem1_K
+    coefficient, so there is no second formula to drift)."""
+    sigma_sq = privacy.sigma_sq_for_epsilon(
+        G=G, m=m, tau=1.0 / m, p=p, T=T, eps=eps, delta=1e-5)
+    sigma = math.sqrt(sigma_sq)
+    if sigma_sq < privacy.SIGMA_SQ_MIN:
+        # below the Gaussian-mechanism precondition sigma_for_budget
+        # raises (or clamps); epsilon_sdm would return inf.
+        with pytest.raises(ValueError, match="sigma"):
+            privacy.sigma_for_budget(G, m, p, T, eps, 1e-5)
+        return
+    assert privacy.sigma_for_budget(G, m, p, T, eps, 1e-5) == \
+        pytest.approx(sigma, rel=1e-12)
+    params = privacy.PrivacyParams(G=G, m=m, tau=1.0 / m, p=p,
+                                   sigma=sigma, delta=1e-5)
+    assert privacy.epsilon_sdm(params, T, eps) == pytest.approx(
+        eps, rel=1e-9)
+
+
+def test_sigma_for_budget_clamp_path_spends_at_most_eps():
+    """When the exact sigma falls below SIGMA_SQ_MIN, clamp=True raises
+    it to the floor — which can only DECREASE the spent epsilon."""
+    kw = dict(G=5.0, m=10_000, p=0.2, T=10, eps=1.0)
+    sigma = privacy.sigma_for_budget(**kw, clamp=True)
+    assert sigma ** 2 == pytest.approx(privacy.SIGMA_SQ_MIN)
+    sigma_sq_exact = privacy.sigma_sq_for_epsilon(
+        G=kw["G"], m=kw["m"], tau=1.0 / kw["m"], p=kw["p"], T=kw["T"],
+        eps=kw["eps"], delta=1e-5)
+    assert sigma ** 2 >= sigma_sq_exact     # clamp only ever RAISES sigma
+    # Theorem 1 spends eps/2 * (1 + sigma_sq_exact / sigma^2) at the
+    # clamped sigma (T*K/sigma_exact^2 == eps/2 by exact inversion)
+    spent = kw["eps"] / 2.0 * (1.0 + sigma_sq_exact / sigma ** 2)
+    assert spent <= kw["eps"]
+
+
 def test_corollary2_raises_when_infeasible():
     with pytest.raises(ValueError):
         privacy.sigma_for_budget(G=5.0, m=10_000, p=0.2, T=10, eps=1.0)

@@ -1,0 +1,200 @@
+"""Soundness of the certifier's abstract domains (property-based).
+
+The sensitivity pass is only as good as its transfer functions: every
+rule in ``repro.analysis.sensitivity`` claims "if each input coordinate
+is bounded by beta_in, each output coordinate is bounded by f(beta_in)".
+These tests drive the EXACT module-level transfer functions the
+interpreter calls against concrete random inputs and assert domination:
+abstract bound >= concrete magnitude, always.
+
+Same story for the two other layers of the certificate:
+
+* ``Interval`` arithmetic: each operation's result interval contains
+  the pointwise result of any member points (the integer-range chain is
+  a composition of these);
+* ``Compressor.coord_sensitivity_transfer``: the declared worst-case
+  coordinate inflation dominates a concrete compress->decompress
+  roundtrip for every registered family (the analyzer contract the
+  certificate's ``coord_inflation_at_c`` column relies on).
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis import sensitivity
+from repro.core import clipping, compressor
+
+_TOL = 1e-5
+
+
+def _bounded(seed: int, n: int, beta: float) -> np.ndarray:
+    """A random vector with every |coordinate| <= beta (hits the bound)."""
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-beta, beta, size=n)
+    if n:
+        x[rng.integers(n)] = beta * rng.choice((-1.0, 1.0))
+    return x.astype(np.float32)
+
+
+# ------------------------------------------------------- norm-bound transfer
+
+@settings(max_examples=50)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 64),
+       beta=st.floats(0.0, 8.0), c=st.floats(1e-3, 4.0))
+def test_clip_transfer_dominates(seed, n, beta, c):
+    x = _bounded(seed, n, beta)
+    out = np.asarray(clipping.clip_coordinates(jnp.asarray(x), c))
+    bound = sensitivity.clip_transfer(beta, c)
+    assert np.abs(out).max() <= bound * (1.0 + _TOL) + 1e-7
+
+
+@settings(max_examples=50)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 64),
+       ba=st.floats(0.0, 8.0), bb=st.floats(0.0, 8.0))
+def test_add_transfer_dominates(seed, n, ba, bb):
+    a, b = _bounded(seed, n, ba), _bounded(seed + 1, n, bb)
+    assert np.abs(a + b).max() <= \
+        sensitivity.add_transfer(ba, bb) * (1.0 + _TOL) + 1e-7
+
+
+@settings(max_examples=50)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 64),
+       beta=st.floats(0.0, 8.0), c=st.floats(-4.0, 4.0))
+def test_scale_transfer_dominates(seed, n, beta, c):
+    x = _bounded(seed, n, beta)
+    assert np.abs(x * c).max() <= \
+        sensitivity.scale_transfer(beta, c) * (1.0 + _TOL) + 1e-7
+
+
+@settings(max_examples=50)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 32),
+       ba=st.floats(0.0, 8.0), bb=st.floats(0.0, 8.0),
+       pad_lo=st.integers(0, 3), pad_hi=st.integers(0, 3))
+def test_concat_and_pad_transfer_dominate(seed, n, ba, bb, pad_lo, pad_hi):
+    a, b = _bounded(seed, n, ba), _bounded(seed + 1, n, bb)
+    cat = np.concatenate([a, b])
+    assert np.abs(cat).max() <= \
+        sensitivity.concat_transfer(ba, bb) * (1.0 + _TOL) + 1e-7
+    padded = np.asarray(jnp.pad(jnp.asarray(a), (pad_lo, pad_hi)))
+    assert np.abs(padded).max() <= \
+        sensitivity.pad_transfer(ba, 0.0) * (1.0 + _TOL) + 1e-7
+
+
+@settings(max_examples=50)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 64),
+       beta=st.floats(0.0, 8.0))
+def test_reduce_sum_transfer_dominates(seed, n, beta):
+    x = _bounded(seed, n, beta)
+    assert abs(float(x.sum())) <= \
+        sensitivity.reduce_sum_transfer(beta, n) * (1.0 + _TOL) + 1e-6
+
+
+# --------------------------------------------------------- Interval algebra
+
+@settings(max_examples=50)
+@given(a_lo=st.floats(-50.0, 50.0), a_w=st.floats(0.0, 20.0),
+       b_lo=st.floats(-50.0, 50.0), b_w=st.floats(0.0, 20.0),
+       ta=st.floats(0.0, 1.0), tb=st.floats(0.0, 1.0),
+       c=st.floats(-8.0, 8.0), lo=st.floats(-10.0, 0.0),
+       hi=st.floats(0.0, 10.0))
+def test_interval_ops_contain_pointwise_results(a_lo, a_w, b_lo, b_w,
+                                                ta, tb, c, lo, hi):
+    A = sensitivity.Interval(a_lo, a_lo + a_w)
+    B = sensitivity.Interval(b_lo, b_lo + b_w)
+    x = a_lo + ta * a_w                        # arbitrary members
+    y = b_lo + tb * b_w
+
+    def inside(iv, v):
+        return iv.lo - 1e-9 <= v <= iv.hi + 1e-9
+
+    assert inside(A.add(B), x + y)
+    assert inside(A.scale(c), x * c)
+    assert inside(A.clamp(lo, hi), min(max(x, lo), hi))
+    assert inside(A.join(B), x) and inside(A.join(B), y)
+
+
+@settings(max_examples=30)
+@given(bits=st.sampled_from([2, 4]), seed=st.integers(0, 2**31 - 1))
+def test_interval_or_disjoint_is_exact_for_packed_fields(bits, seed):
+    """OR of disjoint bit fields == ADD, the sub-byte pack's invariant."""
+    rng = np.random.default_rng(seed)
+    k = 8 // bits
+    fields = rng.integers(0, 2 ** bits, size=k)
+    byte_or, byte_add = 0, 0
+    iv = sensitivity.Interval(0.0, 0.0)
+    for j, f in enumerate(fields):
+        byte_or |= int(f) << (j * bits)
+        byte_add += int(f) << (j * bits)
+        iv = iv.or_disjoint(
+            sensitivity.Interval(0.0, float(2 ** bits - 1))
+            .shift_left(j * bits))
+    assert byte_or == byte_add
+    assert iv.lo <= byte_or <= iv.hi <= 255.0
+
+
+def test_interval_or_disjoint_rejects_signed_fields():
+    with pytest.raises(ValueError):
+        sensitivity.Interval(-1.0, 3.0).or_disjoint(
+            sensitivity.Interval(0.0, 3.0))
+
+
+# ------------------------------------------- quantizer interval containment
+
+@settings(max_examples=20)
+@given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31 - 1),
+       fused=st.booleans())
+def test_qsgd_wire_values_stay_in_certified_range(bits, seed, fused):
+    if fused:
+        comp = compressor.FusedQSGDCompressor(p=1.0, bits=bits)
+        shape = (2, 8)                       # lane-divisible plane
+    else:
+        comp = compressor.QSGDCompressor(p=1.0, bits=bits)
+        shape = (16,)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=shape) * 3.0, jnp.float32)
+    cert = sensitivity.qsgd_range_certificate(
+        bits, fused=fused, plane_elems=int(np.prod(shape)))
+    assert cert["findings"] == []
+    payload = comp.compress(jax.random.PRNGKey(seed % 997), x)
+    vals = np.asarray(payload.values).astype(np.int64)
+    body = vals[:-4] if fused else vals      # fused: drop norm tail bytes
+    lo, hi = cert["byte_range"]
+    assert body.min() >= lo and body.max() <= hi, (bits, fused)
+    # and the roundtrip coordinate never exceeds the declared transfer
+    out = np.asarray(comp.decompress(payload))
+    beta = float(np.abs(np.asarray(x)).max())
+    bound = comp.coord_sensitivity_transfer(beta, shape)
+    assert np.abs(out).max() <= bound * (1.0 + 1e-5)
+
+
+# ------------------------------------- compressor transfer declarations
+
+@settings(max_examples=20)
+@given(spec=st.sampled_from(["bernoulli", "fixedk", "rows", "qsgd:4",
+                             "qsgdf:4"]),
+       seed=st.integers(0, 2**31 - 1), p=st.floats(0.1, 0.9))
+def test_coord_sensitivity_transfer_dominates_roundtrip(spec, seed, p):
+    comp = compressor.make(spec, p=p)
+    shape = (4, 8)
+    rng = np.random.default_rng(seed)
+    beta = float(rng.uniform(0.1, 2.0))
+    x = jnp.asarray(_bounded(seed, int(np.prod(shape)), beta)
+                    .reshape(shape))
+    payload = comp.compress(jax.random.PRNGKey(seed % 997), x)
+    out = np.asarray(comp.decompress(payload))
+    bound = comp.coord_sensitivity_transfer(beta, shape)
+    assert math.isfinite(bound)
+    assert np.abs(out).max() <= bound * (1.0 + 1e-4), (spec, p)
+
+
+def test_base_transfer_is_conservative():
+    class Opaque(compressor.Compressor):
+        pass
+
+    comp = Opaque(p=0.5)
+    assert comp.coord_sensitivity_transfer(1.0, (8,)) == math.inf
+    assert comp.coord_sensitivity_transfer(0.0, (8,)) == 0.0
