@@ -1,0 +1,85 @@
+"""Serving comparator: BENCH_serve.json vs the checked-in baseline.
+
+CI runs ``python -m benchmarks.check_serve`` right after the serving
+snapshot. It fails the build when the continuous-batching engine loses
+its reason to exist:
+
+* ``continuous.tok_s`` must be >= ``static.tok_s`` on the ragged-arrival
+  workload — mid-flight admission is the whole point; if draining static
+  batches is faster, the scheduler regressed.
+* ``continuous.decode_steps`` must stay STRICTLY below static's — the
+  structural form of the same win (static decodes every batch until its
+  slowest request finishes; continuous retires and refills). Unlike
+  wall-clock this is deterministic, so it cannot flake.
+* ``decode_launches_flash`` / ``decode_launches_ref`` (kernel launches
+  of one compiled paged decode step, ``hlo_analysis.launch_count``) may
+  grow at most ``LAUNCH_TOL`` + slack over the baseline — a per-layer
+  gather loop or un-fused paged-attention chain shows up here long
+  before anyone profiles a TPU.
+* ``pages_peak`` must stay below the dense ``max_batch x max_seq``
+  reservation (``page_frac`` < 1) — otherwise the paged cache is
+  bookkeeping without the memory win.
+
+Baseline refresh (intentional structure changes): run
+``BENCH_SERVE_OUT=benchmarks/baselines/serve.json python -m
+benchmarks.serve_bench`` and commit the diff with the PR.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                        "serve.json")
+LAUNCH_TOL = 0.10          # +10%
+LAUNCH_SLACK = 2           # plus two launches of absolute wobble
+
+
+def check(bench_path: str = "BENCH_serve.json",
+          baseline_path: str = BASELINE) -> list:
+    with open(baseline_path) as f:
+        base = json.load(f)
+    with open(bench_path) as f:
+        bench = json.load(f)
+    cur = {r["case"]: r for r in bench["records"]}
+
+    failures = []
+    st, co = cur.get("static"), cur.get("continuous")
+    if st is None or co is None:
+        return [f"{bench_path}: missing static/continuous records"]
+
+    if co["tok_s"] < st["tok_s"]:
+        failures.append(
+            f"continuous tok_s {co['tok_s']} < static {st['tok_s']} on "
+            f"ragged arrivals — continuous batching must not lose")
+    if co["decode_steps"] >= st["decode_steps"]:
+        failures.append(
+            f"continuous decode_steps {co['decode_steps']} not below "
+            f"static {st['decode_steps']} — slot recycling regressed")
+    if co.get("pages_peak", 0) >= co.get("pages_dense", 1):
+        failures.append(
+            f"pages_peak {co.get('pages_peak')} not below dense "
+            f"reservation {co.get('pages_dense')}")
+
+    for key in ("decode_launches_flash", "decode_launches_ref"):
+        cap = int(base[key] * (1 + LAUNCH_TOL)) + LAUNCH_SLACK
+        if bench.get(key, 1 << 30) > cap:
+            failures.append(f"{key} {bench.get(key)} > cap {cap} "
+                            f"(baseline {base[key]})")
+    return failures
+
+
+def main(argv: list) -> int:
+    bench_path = argv[1] if len(argv) > 1 else "BENCH_serve.json"
+    failures = check(bench_path)
+    if failures:
+        for msg in failures:
+            print(f"SERVE-REGRESSION {msg}")
+        return 1
+    print(f"serve-smoke OK: {bench_path} within {BASELINE} thresholds")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -30,6 +30,10 @@ BENCHES = {
     "sim": ("benchmarks.sim_edge",
             "edge-fleet simulation -> BENCH_sim.json (simulated seconds-"
             "to-target, wire bits, epsilon per method x fault scenario)"),
+    "serve": ("benchmarks.serve_bench",
+              "serving snapshot -> BENCH_serve.json (continuous vs static "
+              "tok/s, per-token latency, TTFT, paged-KV footprint, decode "
+              "launches)"),
 }
 
 

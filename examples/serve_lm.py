@@ -1,8 +1,10 @@
-"""Serving example: batched requests against a small decoder LM.
+"""Serving example: continuous batching against a small decoder LM.
 
-Builds a reduced chatglm3-family model, enqueues a mixed batch of
-requests (different lengths and token budgets), and serves them through
-the static-batch prefill+decode engine.
+Builds a reduced chatglm3-family model and serves a ragged mix of
+requests (different prompt lengths and token budgets) through the
+continuous-batching engine: requests stream through 4 slots backed by a
+paged KV cache — a finished request frees its pages and the next queued
+request is prefilled into the vacated slot mid-flight.
 
   PYTHONPATH=src python examples/serve_lm.py
 """
@@ -19,23 +21,29 @@ from repro.serving import Request, ServingEngine
 def main() -> None:
     cfg = configs.get_smoke_config("chatglm3-6b")
     params = transformer.init_params(jax.random.PRNGKey(0), cfg)
-    engine = ServingEngine(cfg, params, max_batch=4, max_seq=96)
+    engine = ServingEngine(cfg, params, max_batch=4, max_seq=96,
+                           page_size=8)
 
     rng = np.random.default_rng(0)
     requests = [
         Request(prompt=rng.integers(0, cfg.vocab_size, size=n).tolist(),
                 max_new_tokens=m)
-        for n, m in [(8, 12), (8, 6), (8, 16), (8, 4), (16, 8), (16, 8)]
+        for n, m in [(8, 12), (5, 6), (11, 16), (8, 4), (16, 8), (3, 8),
+                     (9, 2), (16, 8)]
     ]
     t0 = time.time()
     engine.serve(requests)
     dt = time.time() - t0
     tokens = sum(len(r.output) for r in requests)
+    stats = engine.last_stats
     print(f"served {len(requests)} requests / {tokens} new tokens "
           f"in {dt:.2f}s")
+    print(f"kv pages: peak {stats.pages_peak} vs dense-equivalent "
+          f"{stats.pages_dense_equiv}")
     for i, r in enumerate(requests):
         print(f"  req{i}: len(prompt)={len(r.prompt):2d} "
-              f"budget={r.max_new_tokens:2d} -> {r.output}")
+              f"budget={r.max_new_tokens:2d} ttft={r.ttft_s:.3f}s "
+              f"-> {r.output}")
     assert all(len(r.output) <= r.max_new_tokens for r in requests)
     assert all(len(r.output) > 0 for r in requests)
     print("all requests satisfied within their budgets")

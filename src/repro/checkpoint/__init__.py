@@ -1,3 +1,5 @@
-from repro.checkpoint.npz import save_checkpoint, restore_checkpoint, latest_step
+from repro.checkpoint.npz import (latest_step, load_flat, restore_checkpoint,
+                                  save_checkpoint, tree_keys)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "load_flat", "tree_keys"]

@@ -84,6 +84,21 @@ def restore_checkpoint(directory: str, exemplar: PyTree,
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def load_flat(path: str) -> dict:
+    """Load a checkpoint as its raw flat {'/'-joined key -> np.ndarray}
+    dict, no exemplar needed. Opaque (void) dtypes are returned as-is —
+    callers that know the logical dtype reinterpret with ``.view``."""
+    with np.load(path) as data:
+        return {k: data[k] for k in data.files}
+
+
+def tree_keys(tree: PyTree) -> list:
+    """The '/'-joined flat keys of ``tree``, in flatten order (the same
+    keys ``save_checkpoint`` writes)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return ["/".join(_path_str(p) for p in path) for path, _ in flat]
+
+
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None

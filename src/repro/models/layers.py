@@ -17,7 +17,8 @@ from repro.sharding import logical
 
 __all__ = ["ParamSpec", "init_tree", "axes_of", "shapes_of",
            "rms_norm", "rope", "attention_specs", "attention_apply",
-           "mlp_specs", "mlp_apply", "KVCache", "softcap"]
+           "attention_decode_paged", "mlp_specs", "mlp_apply", "KVCache",
+           "softcap"]
 
 PyTree = Any
 
@@ -200,23 +201,13 @@ def _attend(q, k, v, *, chunk_q: Optional[int] = None, **kw) -> jax.Array:
     return _sdpa(q, k, v, **kw)
 
 
-def attention_apply(params: Dict[str, jax.Array], cfg: ModelConfig,
-                    x: jax.Array, *,
-                    positions: jax.Array,
-                    layer_kind: str = "attn",
-                    cache: Optional[KVCache] = None,
-                    cache_offset: Optional[jax.Array] = None,
-                    kv_source: Optional[jax.Array] = None,
-                    causal: bool = True,
-                    use_rope: bool = True,
-                    ) -> Tuple[jax.Array, Optional[KVCache]]:
-    """Self- or cross-attention with optional KV cache.
-
-    Train/prefill: ``cache is None`` (prefill builds and returns a fresh
-    cache when ``cache_offset`` is not None... see transformer.py).
-    Decode: pass ``cache`` + ``cache_offset`` (current length); x has sq=1.
-    Cross-attention: pass ``kv_source`` (encoder / image states).
-    """
+def _project_qkv(params: Dict[str, jax.Array], cfg: ModelConfig,
+                 x: jax.Array, *, positions: jax.Array,
+                 kv_source: Optional[jax.Array] = None,
+                 use_rope: bool = True):
+    """Shared pre-attention stage: norm, fused projections, head split,
+    RoPE. Returns (residual, q, k, v) with q: (b, s, h, hd) and
+    k/v: (b, skv, kv, hd)."""
     residual = x
     h = rms_norm(x, params["norm"], cfg.norm_eps,
                  plus_one=cfg.post_block_norm)
@@ -243,12 +234,51 @@ def attention_apply(params: Dict[str, jax.Array], cfg: ModelConfig,
     if use_rope and kv_source is None and cfg.pos_embedding == "rope":
         q = rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
         k = rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    return residual, q, k, v
+
+
+def _project_out(params: Dict[str, jax.Array], cfg: ModelConfig,
+                 out: jax.Array, residual: jax.Array) -> jax.Array:
+    """Shared post-attention stage: head merge, output projection,
+    optional post-block norm, residual add."""
+    out = out.reshape(*out.shape[:2], -1)
+    out = logical(out, "batch", "seq", "heads_flat")
+    out = jnp.einsum("bse,ed->bsd", out, params["wo"])
+    out = logical(out, "batch", "seq", "embed")
+    if cfg.post_block_norm:
+        out = rms_norm(out, params["post_norm"], cfg.norm_eps, plus_one=True)
+    return residual + out
+
+
+def attention_apply(params: Dict[str, jax.Array], cfg: ModelConfig,
+                    x: jax.Array, *,
+                    positions: jax.Array,
+                    layer_kind: str = "attn",
+                    cache: Optional[KVCache] = None,
+                    cache_offset: Optional[jax.Array] = None,
+                    cache_offsets: Optional[jax.Array] = None,
+                    kv_source: Optional[jax.Array] = None,
+                    causal: bool = True,
+                    use_rope: bool = True,
+                    ) -> Tuple[jax.Array, Optional[KVCache]]:
+    """Self- or cross-attention with optional KV cache.
+
+    Train/prefill: ``cache is None`` (prefill builds and returns a fresh
+    cache when ``cache_offset`` is not None... see transformer.py).
+    Decode: pass ``cache`` + ``cache_offset`` (current length); x has sq=1.
+    Ragged decode: pass ``cache_offsets`` (b,) instead — each row writes
+    its token at its OWN next position and attends only its own valid
+    prefix, so right-padded unequal-length prompts stay exact.
+    Cross-attention: pass ``kv_source`` (encoder / image states).
+    """
+    residual, q, k, v = _project_qkv(params, cfg, x, positions=positions,
+                                     kv_source=kv_source, use_rope=use_rope)
 
     window = cfg.sliding_window if layer_kind == "attn_local" else None
     new_cache = None
     if kv_source is not None:
         # cross-attention: keys/values span the full encoder sequence.
-        skv = kv_in.shape[1]
+        skv = k.shape[1]
         kv_pos = jnp.broadcast_to(jnp.arange(skv), (x.shape[0], skv))
         out = _attend(q, k, v, chunk_q=cfg.attn_chunk_q,
                       q_positions=positions, kv_positions=kv_pos,
@@ -261,27 +291,75 @@ def attention_apply(params: Dict[str, jax.Array], cfg: ModelConfig,
                       causal=causal, window=window,
                       softcap_val=cfg.attn_softcap, kv_valid_len=None)
     else:
-        # decode: insert this step's k/v at cache_offset, attend over cache.
+        # decode: insert this step's k/v, attend over the cache.
         b, max_seq = cache.k.shape[0], cache.k.shape[1]
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache.k, k.astype(cache.k.dtype), cache_offset, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache.v, v.astype(cache.v.dtype), cache_offset, axis=1)
+        if cache_offsets is not None:
+            # ragged path: row i writes at its own offset and sees only
+            # its own offsets[i]+1 valid positions (sq == 1 here).
+            rows = jnp.arange(b)
+            k_cache = cache.k.at[rows, cache_offsets].set(
+                k[:, 0].astype(cache.k.dtype))
+            v_cache = cache.v.at[rows, cache_offsets].set(
+                v[:, 0].astype(cache.v.dtype))
+            valid = cache_offsets + 1
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k.astype(cache.k.dtype), cache_offset, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v.astype(cache.v.dtype), cache_offset, axis=1)
+            valid = jnp.full((b,), cache_offset + x.shape[1])
         new_cache = KVCache(k_cache, v_cache)
         kv_pos = jnp.broadcast_to(jnp.arange(max_seq), (b, max_seq))
-        valid = jnp.full((b,), cache_offset + x.shape[1])
         out = _attend(q, k_cache, v_cache, chunk_q=cfg.attn_chunk_q,
                       q_positions=positions, kv_positions=kv_pos,
                       causal=True, window=window,
                       softcap_val=cfg.attn_softcap, kv_valid_len=valid)
 
-    out = out.reshape(*out.shape[:2], -1)
-    out = logical(out, "batch", "seq", "heads_flat")
-    out = jnp.einsum("bse,ed->bsd", out, params["wo"])
-    out = logical(out, "batch", "seq", "embed")
-    if cfg.post_block_norm:
-        out = rms_norm(out, params["post_norm"], cfg.norm_eps, plus_one=True)
-    return residual + out, new_cache
+    return _project_out(params, cfg, out, residual), new_cache
+
+
+def attention_decode_paged(params: Dict[str, jax.Array], cfg: ModelConfig,
+                           x: jax.Array, *,
+                           pages: Tuple[jax.Array, jax.Array],
+                           block_table: jax.Array,
+                           offsets: jax.Array,
+                           write_enabled: jax.Array,
+                           layer_kind: str = "attn",
+                           use_flash: bool = False,
+                           interpret: bool = True,
+                           ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Single-token self-attention over a PAGED KV cache.
+
+    x: (b, 1, d). ``pages`` is this layer's (k_pages, v_pages), each
+    (n_pages, page_size, kv_heads, head_dim); ``block_table`` (b,
+    n_blocks) maps row b's logical block j to a physical page;
+    ``offsets`` (b,) is each row's next write position (tokens already
+    cached); ``write_enabled`` (b,) routes finished / empty slots' writes
+    to the reserved trash page 0 (see repro.serving.kv_cache) so a
+    recycled page is never corrupted by a dead row.
+    """
+    from repro.kernels.flash_attn.decode import paged_attention
+
+    b = x.shape[0]
+    residual, q, k, v = _project_qkv(params, cfg, x,
+                                     positions=offsets[:, None])
+    k_pages, v_pages = pages
+    page = k_pages.shape[1]
+    rows = jnp.arange(b)
+    blk = jnp.clip(offsets // page, 0, block_table.shape[1] - 1)
+    page_id = jnp.where(write_enabled, block_table[rows, blk], 0)
+    in_page = jnp.where(write_enabled, offsets % page, 0)
+    k_pages = k_pages.at[page_id, in_page].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[page_id, in_page].set(v[:, 0].astype(v_pages.dtype))
+
+    # a row that did not write must not read its (absent) current token
+    seq_lens = offsets + write_enabled.astype(offsets.dtype)
+    window = cfg.sliding_window if layer_kind == "attn_local" else None
+    out = paged_attention(q[:, 0], k_pages, v_pages, block_table, seq_lens,
+                          window=window, softcap=cfg.attn_softcap,
+                          use_kernel=use_flash, interpret=interpret)
+    return (_project_out(params, cfg, out[:, None], residual),
+            (k_pages, v_pages))
 
 
 # --------------------------------------------------------------------------

@@ -22,14 +22,14 @@ from repro.models import moe as moe_mod
 from repro.models import rwkv as rwkv_mod
 from repro.models.config import LayerSpec, ModelConfig
 from repro.models.layers import (KVCache, ParamSpec, attention_apply,
-                                 attention_specs, axes_of, init_tree,
-                                 mlp_apply, mlp_specs, rms_norm, shapes_of,
-                                 softcap)
+                                 attention_decode_paged, attention_specs,
+                                 axes_of, init_tree, mlp_apply, mlp_specs,
+                                 rms_norm, shapes_of, softcap)
 from repro.sharding import logical
 
 __all__ = ["model_specs", "init_params", "param_axes", "param_shapes",
            "forward", "lm_loss", "init_cache", "prefill", "decode_step",
-           "Cache"]
+           "decode_step_paged", "Cache"]
 
 PyTree = Any
 
@@ -316,11 +316,17 @@ def lm_loss(logits: jax.Array, labels: jax.Array, vocab_size: int,
 # --------------------------------------------------------------------------
 
 def prefill(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
-            cache: Cache, *, context: Optional[jax.Array] = None
+            cache: Cache, *, context: Optional[jax.Array] = None,
+            last_index: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, Cache]:
     """Process a prompt, filling ``cache``. Returns (last-token logits, cache).
 
     ``cache`` must be created by init_cache with max_len >= prompt + new.
+    ``last_index`` (b,) selects each row's OWN last real token for the
+    returned logits — required for right-padded unequal-length prompts,
+    where the final column is padding for the shorter rows (causal
+    masking already keeps their hidden states exact; only the readout
+    position differs).
     """
     b, s = tokens.shape
     x = _embed_tokens(params, cfg, tokens)
@@ -341,25 +347,40 @@ def prefill(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
 
     x, new_slots = _scan_periods(cfg, period_body, x,
                                  (params["blocks"], cache.slots))
-    logits = _logits(params, cfg, x[:, -1:, :])
+    if last_index is None:
+        x_last = x[:, -1:, :]
+    else:
+        x_last = jnp.take_along_axis(x, last_index[:, None, None], axis=1)
+    logits = _logits(params, cfg, x_last)
     return logits[:, 0, :], Cache(slots=new_slots,
                                   offset=jnp.asarray(s, jnp.int32))
 
 
 def decode_step(params: PyTree, cfg: ModelConfig, token: jax.Array,
-                cache: Cache, *, context: Optional[jax.Array] = None
+                cache: Cache, *, context: Optional[jax.Array] = None,
+                offsets: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Cache]:
     """One greedy-decode step. token: (b,) int32 -> (logits (b, V), cache).
 
     ``context`` must be PRE-ENCODED (encode_context) — the encoder runs
     once per request, never per decoded token.
+    ``offsets`` (b,) makes the step RAGGED-aware: each row writes its
+    token at its own cache position, takes its own RoPE phase, and
+    attends only its own valid prefix. Without it every row shares the
+    scalar ``cache.offset`` (the legacy equal-length path, unchanged).
     """
     b = token.shape[0]
     x = _embed_tokens(params, cfg, token[:, None])
-    positions = jnp.broadcast_to(cache.offset[None, None], (b, 1))
+    if offsets is not None:
+        positions = offsets[:, None]
+    else:
+        positions = jnp.broadcast_to(cache.offset[None, None], (b, 1))
     if cfg.pos_embedding == "learned":
-        x = x + jax.lax.dynamic_slice_in_dim(
-            params["pos_embed"], cache.offset, 1, axis=0)[None]
+        if offsets is not None:
+            x = x + jnp.take(params["pos_embed"], offsets, axis=0)[:, None]
+        else:
+            x = x + jax.lax.dynamic_slice_in_dim(
+                params["pos_embed"], cache.offset, 1, axis=0)[None]
     ctx = context
 
     def period_body(x, scanned):
@@ -372,7 +393,8 @@ def decode_step(params: PyTree, cfg: ModelConfig, token: jax.Array,
                 x, kvc = attention_apply(sp["attn"], cfg, x,
                                          positions=positions,
                                          layer_kind=spec.mixer, cache=pc,
-                                         cache_offset=cache.offset)
+                                         cache_offset=cache.offset,
+                                         cache_offsets=offsets)
                 new_cache[str(i)] = kvc
             elif spec.mixer == "mamba":
                 x, mst = mamba_mod.mamba_decode_step(sp["mamba"], cfg, x, pc)
@@ -397,3 +419,69 @@ def decode_step(params: PyTree, cfg: ModelConfig, token: jax.Array,
                                  (params["blocks"], cache.slots))
     logits = _logits(params, cfg, x)
     return logits[:, 0, :], Cache(slots=new_slots, offset=cache.offset + 1)
+
+
+def decode_step_paged(params: PyTree, cfg: ModelConfig, token: jax.Array,
+                      pages: Dict[str, Any], rec: Dict[str, Any],
+                      block_tables: jax.Array, offsets: jax.Array,
+                      write_enabled: jax.Array, *,
+                      context: Optional[jax.Array] = None,
+                      use_flash: bool = False, interpret: bool = True
+                      ) -> Tuple[jax.Array, Dict[str, Any], Dict[str, Any]]:
+    """One decode step over a PAGED KV cache (continuous-batching engine).
+
+    ``pages``: {period-slot index -> (k_pages, v_pages)} for attention
+    slots, each array (n_periods, n_pages, page_size, kv_heads, head_dim)
+    — one shared physical page pool per layer slot, scanned over the
+    period axis alongside the parameters. ``rec``: {period-slot index ->
+    recurrent state} for mamba/rwkv slots (dense per-row state; paging
+    only applies to KV). ``block_tables`` (b, n_blocks) and ``offsets``
+    (b,) are per-REQUEST-slot; ``write_enabled`` (b,) masks finished /
+    empty rows so their writes land on the trash page.
+
+    Returns (logits (b, V), new_pages, new_rec). The whole step is one
+    jitted function with no host round-trips — the serving engine's
+    done-mask bookkeeping composes around it on device.
+    """
+    b = token.shape[0]
+    x = _embed_tokens(params, cfg, token[:, None])
+    positions = offsets[:, None]
+    if cfg.pos_embedding == "learned":
+        x = x + jnp.take(params["pos_embed"], offsets, axis=0)[:, None]
+    ctx = context
+
+    def period_body(x, scanned):
+        period_params, period_pages, period_rec = scanned
+        new_pages: Dict[str, Any] = {}
+        new_rec: Dict[str, Any] = {}
+        for i, spec in enumerate(cfg.period):
+            si = str(i)
+            sp = period_params[si]
+            if spec.mixer in ("attn", "attn_local"):
+                x, new_pages[si] = attention_decode_paged(
+                    sp["attn"], cfg, x, pages=period_pages[si],
+                    block_table=block_tables, offsets=offsets,
+                    write_enabled=write_enabled, layer_kind=spec.mixer,
+                    use_flash=use_flash, interpret=interpret)
+            elif spec.mixer == "mamba":
+                x, new_rec[si] = mamba_mod.mamba_decode_step(
+                    sp["mamba"], cfg, x, period_rec[si])
+            elif spec.mixer == "rwkv":
+                x, new_rec[si] = rwkv_mod.rwkv_time_mix_step(
+                    sp["time_mix"], cfg, x, period_rec[si])
+            if spec.cross_attn and ctx is not None:
+                x, _ = attention_apply(sp["cross"], cfg, x,
+                                       positions=positions, kv_source=ctx)
+            if spec.ffn == "mlp":
+                x = mlp_apply(sp["mlp"], cfg, x)
+            elif spec.ffn == "moe":
+                x, _ = moe_mod.moe_apply(sp["moe"], cfg, x)
+            elif spec.ffn == "rwkv_ffn":
+                x, new_rec[si] = rwkv_mod.rwkv_channel_mix_step(
+                    sp["channel_mix"], cfg, x, new_rec[si])
+        return x, (new_pages, new_rec)
+
+    x, (new_pages, new_rec) = _scan_periods(
+        cfg, period_body, x, (params["blocks"], pages, rec))
+    logits = _logits(params, cfg, x)
+    return logits[:, 0, :], new_pages, new_rec

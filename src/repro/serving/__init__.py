@@ -1,3 +1,6 @@
-from repro.serving.engine import ServingEngine, Request
+from repro.serving.engine import (Request, ServeStats, ServingEngine,
+                                  StaticServingEngine)
+from repro.serving.kv_cache import PagedKVCache
 
-__all__ = ["ServingEngine", "Request"]
+__all__ = ["ServingEngine", "StaticServingEngine", "Request", "ServeStats",
+           "PagedKVCache"]
